@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.costs import HostingCosts
+from repro.core.policies import (AlphaRR, RetroRenting, offline_opt,
+                                 offline_opt_no_partial)
+from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import bounds
+
+
+def policy_suite(costs: HostingCosts, x, c, svc=None, include_bounds=True):
+    """Cost-per-slot for the paper's six curves on one instance."""
+    T = len(x)
+    out = {}
+    t0 = time.time()
+    out["alpha-RR"] = run_policy(AlphaRR(costs), costs, x, c, svc).total / T
+    out["_us_per_slot"] = (time.time() - t0) / T * 1e6
+    rr = RetroRenting(costs)
+    svc2 = None if svc is None else np.asarray(svc)[:, [0, costs.K - 1]]
+    out["RR"] = run_policy(rr, rr.costs, x, c, svc2).total / T
+    aopt = offline_opt(costs, x, c, svc)
+    out["alpha-OPT"] = aopt.cost / T
+    opt = offline_opt_no_partial(costs, x, c, svc)
+    out["OPT"] = opt.cost / T
+    if include_bounds:
+        # the figures' LB curves are the Lemma-14 per-slot lower bounds for
+        # any online policy, evaluated at the empirical arrival/rent means
+        p_hat = float(np.mean(np.asarray(x)))
+        c_hat = float(np.mean(np.asarray(c)))
+        out["alpha-LB"] = bounds.lemma14_opt_on_per_slot(costs, p_hat, c_hat)
+        out["LB"] = min(c_hat, p_hat)
+    return out
+
+
+def hosting_histogram(costs: HostingCosts, x, c, svc=None):
+    res = run_policy(AlphaRR(costs), costs, x, c, svc)
+    return res.level_slots
+
+
+def emit(rows, prefix):
+    """rows: list of dicts -> CSV lines 'prefix,key=value,...'."""
+    lines = []
+    for r in rows:
+        kv = ",".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in r.items())
+        lines.append(f"{prefix},{kv}")
+    return lines

@@ -1,0 +1,45 @@
+"""Figs 1-2: total cost per slot and alpha-RR hosting-state histogram as a
+function of alpha + g(alpha).  M=10, c=0.35, p=0.35, alpha=0.4 (paper values),
+Bernoulli arrivals, ARMA(4,2) rent."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import arrivals, rentcosts
+from repro.core.costs import HostingCosts
+from benchmarks.common import policy_suite, hosting_histogram
+
+M, C_MEAN, P, ALPHA = 10.0, 0.35, 0.35, 0.4
+T = 10000
+
+
+def run(T=T, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kc = jax.random.split(key)
+    x = arrivals.bernoulli(kx, P, T)
+    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
+    rows = []
+    for ag in np.linspace(0.5, 1.4, 10):
+        g_alpha = float(np.clip(ag - ALPHA, 0.0, 1.0))
+        costs = HostingCosts.three_level(M, ALPHA, g_alpha,
+                                         c_min=float(np.min(np.asarray(c))),
+                                         c_max=float(np.max(np.asarray(c))))
+        suite = policy_suite(costs, x, c)
+        hist = hosting_histogram(costs, x, c)
+        rows.append({"alpha_plus_g": round(float(ag), 3), **suite,
+                     "slots_r0": int(hist[0]), "slots_alpha": int(hist[1]),
+                     "slots_r1": int(hist[2])})
+    return rows
+
+
+def check(rows):
+    """Paper claims: the partial/no-partial gap is significant iff
+    alpha+g(alpha) < 1, and alpha-RR never hosts alpha when >= 1 (Thm 1)."""
+    for r in rows:
+        if r["alpha_plus_g"] >= 1.0:
+            assert r["slots_alpha"] == 0, r
+            assert r["alpha-RR"] <= r["RR"] * 1.02 + 1e-6, r
+    gaps_low = [r["RR"] - r["alpha-RR"] for r in rows if r["alpha_plus_g"] < 0.95]
+    assert max(gaps_low) > 0.01, "partial hosting should help when a+g<1"
+    return True

@@ -1,0 +1,40 @@
+"""Figs 10-11: trace-driven Model 1 — cluster-trace-like arrivals (stand-in
+for the Google cluster trace; see DESIGN.md) + AWS-spot-like ARMA rents,
+c=0.135, regimes (0.239, 0.38) and (0.5, 0.7), cost vs M."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import arrivals, rentcosts
+from repro.core.costs import HostingCosts
+from benchmarks.common import policy_suite
+
+C_MEAN = 0.135
+REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
+
+
+def run(T=8000, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = arrivals.cluster_trace_like(kx, T, base_rate=0.15, burst_rate=1.2,
+                                    burst_p=0.08)
+    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
+    rows = []
+    for regime, (alpha, g_alpha) in REGIMES.items():
+        for M in [2.0, 5.0, 10.0, 20.0, 40.0]:
+            costs = HostingCosts.three_level(
+                M, alpha, g_alpha, c_min=float(np.min(np.asarray(c))),
+                c_max=float(np.max(np.asarray(c))))
+            rows.append({"regime": regime, "M": M, **policy_suite(costs, x, c)})
+    return rows
+
+
+def check(rows):
+    for r in rows:
+        assert r["alpha-OPT"] <= r["OPT"] + 1e-6
+        if r["regime"] == "ge1":
+            assert abs(r["alpha-OPT"] - r["OPT"]) < 5e-3
+    # in the <1 regime partial hosting should win somewhere on the sweep
+    gaps = [r["RR"] - r["alpha-RR"] for r in rows if r["regime"] == "lt1"]
+    assert max(gaps) > -1e-6
+    return True

@@ -1,0 +1,72 @@
+"""Figs 12-15 (Model 2, Poisson arrivals): hosting-status histograms and
+cost/slot vs fetch cost M for lambda in {2,4,8} (c=4.5, alpha=.3, g=.5), and
+vs rent c for lambda=4, M=40."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import arrivals, rentcosts
+from repro.core.costs import HostingCosts
+from repro.core.policies import AlphaRR, RetroRenting
+from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import bounds
+
+ALPHA, G_ALPHA = 0.30, 0.50
+
+
+def _run_m2(costs, x, c, key):
+    svc = model2_service_matrix(key, costs, x)
+    ar = run_policy(AlphaRR(costs), costs, x, c, svc=svc)
+    rr = RetroRenting(costs)
+    svc2 = np.asarray(svc)[:, [0, costs.K - 1]]
+    rrres = run_policy(rr, rr.costs, x, c, svc=svc2)
+    return ar, rrres
+
+
+def run(T=6000, seed=0):
+    rows = []
+    key = jax.random.PRNGKey(seed)
+    for lam in [2.0, 4.0, 8.0]:
+        kx, kc, ks = jax.random.split(jax.random.fold_in(key, int(lam)), 3)
+        x = arrivals.poisson(kx, lam, T)
+        c = rentcosts.aws_spot_like(kc, 4.5, T)
+        for M in [10.0, 20.0, 40.0, 80.0]:
+            costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
+                                             c_min=float(np.min(np.asarray(c))),
+                                             c_max=float(np.max(np.asarray(c))))
+            ar, rrres = _run_m2(costs, x, c, ks)
+            rows.append({"fig": "12_14", "lam": lam, "M": M, "c": 4.5,
+                         "alpha-RR": ar.total / T, "RR": rrres.total / T,
+                         "alpha-LB": bounds.lemma14_opt_on_per_slot(costs, lam, 4.5),
+                         "LB": min(4.5, lam),
+                         "hist": ar.level_slots.tolist()})
+    # Fig 15: vs rent c at lam=4, M=40
+    kx, ks = jax.random.split(jax.random.fold_in(key, 99))
+    x = arrivals.poisson(kx, 4.0, T)
+    for cc in [1.0, 2.0, 3.0, 4.5, 6.0, 8.0, 10.0]:
+        kc2 = jax.random.fold_in(key, int(cc * 10))
+        c = rentcosts.aws_spot_like(kc2, cc, T)
+        costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
+                                         c_min=float(np.min(np.asarray(c))),
+                                         c_max=float(np.max(np.asarray(c))))
+        ar, rrres = _run_m2(costs, x, c, ks)
+        rows.append({"fig": "15", "lam": 4.0, "M": 40.0, "c": cc,
+                     "alpha-RR": ar.total / T, "RR": rrres.total / T,
+                     "alpha-LB": bounds.lemma14_opt_on_per_slot(costs, 4.0, cc),
+                     "LB": min(cc, 4.0),
+                     "hist": ar.level_slots.tolist()})
+    return rows
+
+
+def check(rows):
+    # Fig 13/15 claims: lam ~ c -> alpha-RR prefers the partial level and
+    # beats RR; extreme c -> both converge.
+    mid = [r for r in rows if r["fig"] == "12_14" and r["lam"] == 4.0]
+    assert any(r["hist"][1] > r["hist"][0] + r["hist"][2] for r in mid), mid
+    assert all(r["alpha-RR"] <= r["RR"] + 0.05 for r in mid)
+    lam2 = [r for r in rows if r["fig"] == "12_14" and r["lam"] == 2.0]
+    # lam << c: predominantly not hosted (paper: "both policies lean towards
+    # not hosting"; ARMA rent dips make occasional hosting rational)
+    assert all(r["hist"][0] >= 0.5 * sum(r["hist"]) for r in lam2), lam2
+    return True

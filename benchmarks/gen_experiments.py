@@ -1,0 +1,173 @@
+"""Render the roofline table + perf log into EXPERIMENTS.md (replaces the
+<!-- ROOFLINE_TABLE --> and <!-- PERF_LOG --> markers)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "benchmarks" / "results" / "dryrun"
+PERF = ROOT / "benchmarks" / "results" / "perf"
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | kind | compute (s) | memory (s) | collective (s) "
+            "| bottleneck | useful ratio | roofline frac | arg+temp GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(DRY.glob("*__pod16x16.json")):
+        c = json.loads(p.read_text())
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — "
+                        f"| skipped (sub-quadratic attention required) |")
+            continue
+        r = c["roofline"]
+        mem = (c["memory_analysis"].get("argument_size_in_bytes", 0)
+               + c["memory_analysis"].get("temp_size_in_bytes", 0)) / 2 ** 30
+        rows.append(
+            "| {a} | {s} | {k} | {c:.3e} | {m:.3e} | {x:.3e} | **{b}** | "
+            "{u:.2f} | {f:.3f} | {g:.1f} |".format(
+                a=c["arch"], s=c["shape"], k=c["kind"], c=r["compute_s"],
+                m=r["memory_s"], x=r["collective_s"], b=r["bottleneck"],
+                u=r["useful_ratio"], f=r["roofline_fraction"], g=mem))
+    return "\n".join(rows)
+
+
+def perf_cell(name: str) -> dict | None:
+    p = PERF / name
+    if not p.exists():
+        return None
+    c = json.loads(p.read_text())
+    return c["roofline"]
+
+
+def fmt_terms(r) -> str:
+    return (f"compute {r['compute_s']:.3e}s, memory {r['memory_s']:.3e}s, "
+            f"collective {r['collective_s']:.3e}s "
+            f"(bound {r['compute_s'] + r['memory_s'] + r['collective_s']:.3e}s)")
+
+
+def perf_log() -> str:
+    out = []
+
+    def block(title, hypothesis, entries, verdict):
+        out.append(f"### {title}\n")
+        out.append(f"**Hypothesis (napkin math).** {hypothesis}\n")
+        for label, fname in entries:
+            r = perf_cell(fname)
+            if r:
+                out.append(f"- **{label}**: {fmt_terms(r)}; bottleneck "
+                           f"{r['bottleneck']}; roofline frac "
+                           f"{r['roofline_fraction']:.4f}")
+        out.append(f"\n**Verdict.** {verdict}\n")
+
+    block(
+        "Cell 1 — qwen2.5-14b x decode_32k (most collective-bound)",
+        "GQA kv=8 cannot head-shard across the 16-wide model axis, so GSPMD "
+        "gathers KV (O(B*S*Hkv*hd) = ~100 GB wire/step -> ~2 s collective). "
+        "Sequence-sharding the cache (flash-decoding) should cut the exchange "
+        "to O(B*Hq*hd) merge statistics ~ MBs: predicted >100x on the "
+        "collective term, and HBM traffic drops the gathered-copy term.",
+        [("baseline (paper-faithful plan, head/replicated KV)",
+          "qwen2.5-14b__decode_32k__pod16x16_baseline.json"),
+         ("optimized (+flash_decode: sequence-sharded KV + LSE-merge psum)",
+          "qwen2.5-14b__decode_32k__pod16x16_flashdecode.json")],
+        "CONFIRMED: collective 1.93 s -> 0.81 ms (~2400x), memory 1.21 s -> "
+        "0.13 s (9.4x), no-overlap step bound 3.14 s -> 0.13 s (24x). The "
+        "cell flips from collective-bound to memory-bound (now dominated by "
+        "the per-step cache read, which is physical). Beyond-paper change; "
+        "enabled per-config via decode_impl='flash_decode'.")
+
+    block(
+        "Cell 2 — zamba2-1.2b x prefill_32k / train_4k (worst useful fraction)",
+        "The baseline ran SSM archs DP-only with replicated params: every "
+        "model-axis rank redundantly computes the same mamba math -> 16x "
+        "wasted compute and memory traffic per chip. Splitting the fused "
+        "in_proj into w_z/w_x/w_B/w_C/w_dt makes per-head tensors column-"
+        "shardable (64 heads / 16 ranks), predicting ~16x lower compute and "
+        "memory terms at the cost of new TP collectives (psum after "
+        "out_proj, ~2*(15/16)*S*d bytes/layer).",
+        [("baseline prefill (replicated / DP-only)",
+          "zamba2-1.2b__prefill_32k__pod16x16_replicated.json"),
+         ("optimized prefill (+split-projection SSM TP)",
+          "zamba2-1.2b__prefill_32k__pod16x16_tp.json"),
+         ("baseline train (replicated)",
+          "zamba2-1.2b__train_4k__pod16x16_replicated.json"),
+         ("optimized train (+SSM TP)",
+          "zamba2-1.2b__train_4k__pod16x16_tp.json")],
+        "CONFIRMED for serve shapes: prefill compute 1.25 s -> 0.078 s and "
+        "memory 21.1 s -> 1.28 s (both ~16x, matching the parallelism math); "
+        "new collective term 0.85 s as predicted -> net prefill bound "
+        "22.4 s -> 2.2 s (10x). PARTIALLY for train_4k: batch=256 already "
+        "saturated (data x model) as pure DP, so per-chip compute barely "
+        "moves (0.201 -> 0.181 s); the win there is the 1.5x memory-term "
+        "drop (3.53 -> 2.32 s) from de-replicated param/optimizer traffic + "
+        "ZeRO-1, net bound 3.82 -> 3.33 s. A refuted sub-hypothesis worth "
+        "recording: TP does NOT help SSM train compute when DP already "
+        "covers the mesh — it helps the shapes whose batch cannot fill it "
+        "(prefill b=32, decode b<=128). mamba2-130m keeps the replicated "
+        "fallback (24 heads do not divide 16) per DESIGN.md.")
+
+    block(
+        "Cell 3 — deepseek-moe-16b x train_4k (paper-representative Model-2 arch)",
+        "Memory-bound baseline. (i) remat_policy=dots saves matmul outputs "
+        "instead of recomputing them in the backward pass: backward re-runs "
+        "drop, predicting ~20-30% lower compute and memory terms at higher "
+        "live-buffer cost (fine: 16 GB budget not binding at 16B scale). "
+        "(ii) MoE capacity factor 1.25 -> 1.0 shrinks the [E, C, D] dispatch "
+        "buffers and their gather/scatter traffic by 20%.",
+        [("baseline (full remat, capacity 1.25)",
+          "deepseek-moe-16b__train_4k__pod16x16_baseline.json"),
+         ("iteration 1: remat_policy=dots",
+          "deepseek-moe-16b__train_4k__pod16x16_rematdots.json"),
+         ("iteration 2: capacity_factor=1.0",
+          "deepseek-moe-16b__train_4k__pod16x16_cap1.json"),
+         ("iteration 3: both",
+          "deepseek-moe-16b__train_4k__pod16x16_rematdots_cap1.json")],
+        "Iteration 1 CONFIRMED: remat=dots cuts compute 0.562 -> 0.459 s "
+        "(-18%) and memory 4.63 -> 3.56 s (-23%): no-overlap bound 6.63 -> "
+        "5.47 s (-17.5%), roofline frac 0.049 -> 0.060. Iteration 2 "
+        "REFUTED-as-major: capacity 1.25 -> 1.0 moves the bound only ~1% "
+        "alone and ~1.3% on top of iteration 1 — the dispatch buffers are "
+        "NOT a dominant memory term (CE chunks + attention + activation "
+        "traffic are). Stopping rule: two consecutive <5% candidates "
+        "(capacity cut, further remat tweaks) end the loop. The dispatch "
+        "path itself already uses the shard_map local-sort + single-psum "
+        "scheme — a beyond-paper optimization over naive GSPMD dispatch, "
+        "whose global token sort is pathological (verified equal to dense "
+        "dispatch on 8 devices).")
+
+    block(
+        "Cell 4 — deepseek-v2-236b x train_4k (HBM capacity, beyond-paper)",
+        "With expert weights sharded only over the 16-wide model axis, every "
+        "data row replicates 472 GB of bf16 expert params: 29.5 GiB/chip of "
+        "weight state > 16 GiB HBM — the biggest assigned config does not "
+        "fit. FSDP-sharding the expert F-dim over the data axis should cut "
+        "weight state 16x for ~0.6 s of per-layer just-in-time weight "
+        "all-gathers (0.5 GiB/layer/chip over 59 layers at 50 GB/s).",
+        [("baseline (1D expert sharding)",
+          "deepseek-v2-236b__train_4k__pod16x16_1dshard.json"),
+         ("optimized (+fsdp_experts: F-dim over data)",
+          "deepseek-v2-236b__train_4k__pod16x16_fsdp.json")],
+        "CONFIRMED: argument (weight-state) bytes 35.9 -> 11.6 GiB/chip — "
+        "params+optimizer now fit the HBM budget; collective term grows "
+        "8.02 -> 9.07 s (+1.05 s, the predicted gathers). Compute/memory "
+        "terms unchanged. This is a capacity fix, not a bandwidth one: the "
+        "roofline terms barely move but the config becomes *runnable*. "
+        "decode_32k additionally drops its memory term 17.1 -> 2.7 s "
+        "(weights dominate decode reads at batch 128). GSPMD synthesises "
+        "the per-layer gather inside the scan from the sharding spec alone "
+        "— no FSDP wrapper code.")
+
+    return "\n".join(out)
+
+
+def main():
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    exp = exp.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    exp = exp.replace("<!-- PERF_LOG -->", perf_log())
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md rendered")
+
+
+if __name__ == "__main__":
+    main()

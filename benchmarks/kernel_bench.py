@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: wall time of the interpret-mode Pallas kernels vs
+their jnp oracles (correctness-weighted; CPU wall times are NOT TPU
+projections — see the roofline table for the perf story)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    rows.append({"name": "flash_attention_pallas_interp_us",
+                 "us": _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)})
+    rows.append({"name": "flash_attention_ref_us",
+                 "us": _time(lambda a, b, c: ref.flash_attention_ref(a, b, c), q, k, v)})
+    x = jax.random.normal(ks[0], (1, 256, 4, 32), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    B = jax.random.normal(ks[1], (1, 256, 1, 32), jnp.float32)
+    C = jax.random.normal(ks[2], (1, 256, 1, 32), jnp.float32)
+    rows.append({"name": "ssd_scan_pallas_interp_us",
+                 "us": _time(lambda *a: ops.ssd_scan(*a, chunk=64), x, dt, A, B, C)})
+    rows.append({"name": "ssd_scan_ref_us",
+                 "us": _time(lambda *a: ref.ssd_scan_ref(*a), x, dt, A, B, C)})
+    return rows
+
+
+def check(rows):
+    return all(r["us"] > 0 for r in rows)

@@ -1,0 +1,58 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16"):
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def fmt_row(c):
+    if "skipped" in c:
+        return (f"| {c['arch']} | {c['shape']} | — | — | — | — | — | skipped: "
+                f"sub-quadratic attention required | — |")
+    r = c["roofline"]
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    dom = r["bottleneck"]
+    return ("| {arch} | {shape} | {c:.3e} | {m:.3e} | {x:.3e} | **{dom}** | "
+            "{useful:.2f} | {frac:.3f} | {mem:.1f} |".format(
+                arch=c["arch"], shape=c["shape"], c=terms["compute"],
+                m=terms["memory"], x=terms["collective"], dom=dom,
+                useful=r["useful_ratio"], frac=r["roofline_fraction"],
+                mem=(c["memory_analysis"].get("argument_size_in_bytes", 0)
+                     + c["memory_analysis"].get("temp_size_in_bytes", 0)) / 2**30))
+
+
+def table(mesh="pod16x16"):
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "bottleneck | useful FLOP ratio | roofline frac | GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    rows += [fmt_row(c) for c in load_cells(mesh)]
+    return "\n".join(rows)
+
+
+def summary_csv(mesh="pod16x16"):
+    print("arch,shape,compute_s,memory_s,collective_s,bottleneck,roofline_frac")
+    for c in load_cells(mesh):
+        if "skipped" in c:
+            print(f"{c['arch']},{c['shape']},,,,skipped,")
+            continue
+        r = c["roofline"]
+        print(f"{c['arch']},{c['shape']},{r['compute_s']:.4e},{r['memory_s']:.4e},"
+              f"{r['collective_s']:.4e},{r['bottleneck']},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--csv" in sys.argv:
+        summary_csv()
+    else:
+        print(table())

@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig01]
+
+Each module exposes run() -> rows and check(rows) -> bool (the figure's
+qualitative claims as assertions).  Output: 'module,status,seconds' summary
+plus per-row CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "fig01_02_alpha_sweep",
+    "fig03_06_m_p_sweeps",
+    "fig07_08_multiple_rr",
+    "fig10_11_trace",
+    "fig12_15_poisson_model2",
+    "fig17_22_markov_mdp",
+    "fig23_25_geolife",
+    "beyond_knapsack_levels",
+    "theorems",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    import importlib
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+    fast = "--fast" in sys.argv
+    failures = []
+    print("module,status,seconds,rows")
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            import inspect
+            kwargs = {}
+            if fast and "T" in inspect.signature(mod.run).parameters:
+                kwargs["T"] = 1500
+            rows = mod.run(**kwargs)
+            ok = mod.check(rows)
+            status = "ok" if ok else "check-failed"
+        except Exception as e:                      # pragma: no cover
+            import traceback; traceback.print_exc()
+            rows, status = [], f"error:{type(e).__name__}"
+            failures.append(name)
+        dt = time.time() - t0
+        print(f"{name},{status},{dt:.1f},{len(rows)}")
+        for r in rows:
+            kv = ",".join(f"{k}={v}" for k, v in r.items())
+            print(f"  {name},{kv}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,62 @@
+"""Theorem-level numerical checks (the paper's analytical 'tables'):
+Thm 2 ratio bound on adversarial instances, Thm 4 lower bounds > 1,
+Thm 5 sigma bounds decaying to 1 with M, Corollary 3's universal 6."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costs import HostingCosts
+from repro.core.policies import AlphaRR, offline_opt
+from repro.core.simulator import run_policy
+from repro.core import bounds
+
+
+def run(seed=0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    worst = 0.0
+    for i in range(120):
+        alpha = rng.choice([0.25, 0.375, 0.5, 0.75])
+        g = rng.choice([0.125, 0.25, 0.5])
+        M = rng.choice([2.0, 4.0, 8.0])
+        T = int(rng.choice([24, 40, 64]))   # few distinct T: bounded recompiles
+        x = rng.integers(0, 2, T)
+        c = rng.integers(1, 17, T) / 8.0
+        costs = HostingCosts.three_level(M, alpha, g, c_min=float(c.min()),
+                                         c_max=float(c.max()))
+        rr = run_policy(AlphaRR(costs), costs, x, c, include_final_fetch=False)
+        opt = offline_opt(costs, x, c)
+        if opt.cost > 1e-9:
+            worst = max(worst, rr.total / opt.cost)
+    bound_max = 0.0
+    for alpha in [0.25, 0.5, 0.75]:
+        for g in [0.1, 0.3, 0.5]:
+            costs = HostingCosts.three_level(
+                max(1.01, (1 - g) / alpha) * 1.1, alpha, g, 0.1, 2.0)
+            bound_max = max(bound_max, bounds.corollary3_six(costs))
+    rows.append({"check": "thm2_empirical_worst_ratio", "value": worst,
+                 "bound": 6.0})
+    rows.append({"check": "corollary3_max_bound", "value": bound_max,
+                 "bound": 6.0})
+    # Thm 4: lower bounds exceed 1 in the non-trivial regime
+    lb = bounds.thm4_lower(HostingCosts.three_level(10, 0.4, 0.3, 0.2, 2.0))
+    rows.append({"check": "thm4_lower", "value": lb, "bound": 1.0})
+    # Thm 5: sigma upper bound decreases toward 1 as M grows (Remark 5)
+    sig = []
+    for M in [20.0, 50.0, 100.0, 200.0]:
+        costs = HostingCosts.three_level(M, 0.3, 0.5, c_min=0.8, c_max=1.2)
+        sig.append(bounds.thm5_sigma_upper(costs, p=0.9, c=1.0))  # interior of case 1
+    rows.append({"check": "thm5_sigma_M20_200", "value": sig[-1],
+                 "series": [round(s, 4) for s in sig]})
+    return rows
+
+
+def check(rows):
+    d = {r["check"]: r for r in rows}
+    assert d["thm2_empirical_worst_ratio"]["value"] <= 6.0 + 1e-6
+    assert d["corollary3_max_bound"]["value"] <= 6.0 + 1e-9
+    assert d["thm4_lower"]["value"] > 1.0
+    s = d["thm5_sigma_M20_200"]["series"]
+    assert all(a >= b - 1e-9 for a, b in zip(s, s[1:])), s   # decreasing in M
+    assert s[-1] < 1.05                                       # -> 1
+    return True

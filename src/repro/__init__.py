@@ -1,0 +1,16 @@
+"""repro: Online Partial Service Hosting at the Edge (alpha-RetroRenting)
+as a production-grade multi-pod JAX framework.
+
+Subpackages:
+  core      the paper's algorithms + analysis
+  models    assigned-architecture model zoo (dense/GQA/MLA/MoE/SSM/hybrid)
+  kernels   Pallas TPU kernels (flash attention, SSD scan, MoE gating)
+  sharding  DP/TP/EP/SP partitioning rules
+  train     optimizer, train loop, checkpointing, fault tolerance
+  serve     batched serving engine + alpha-RR hosting controller
+  data      deterministic synthetic pipelines
+  configs   one module per assigned architecture
+  launch    production mesh, multi-pod dry-run, roofline
+"""
+
+__version__ = "1.0.0"

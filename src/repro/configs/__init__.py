@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchSpec, ShapeSpec, SHAPES, get_arch,
+                                all_archs, register)
+
+__all__ = ["ArchSpec", "ShapeSpec", "SHAPES", "get_arch", "all_archs", "register"]

@@ -1,0 +1,84 @@
+"""Architecture registry: each assigned arch contributes an ArchSpec with the
+exact published config, a reduced ``tiny`` variant for CPU smoke tests, its
+partial-hosting plan (the paper's technique), and the input-shape grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int           # train/prefill length, or KV-cache length for decode
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    model: ModelConfig
+    tiny: ModelConfig
+    partial_plan: str                 # "layer_prefix" (Model 1) | "expert_subset" (Model 2)
+    alpha_default: float              # default partial hosting level
+    g_alpha_default: float            # measured/assumed g(alpha) for the plan
+    long_context_ok: bool             # run long_500k? (sub-quadratic families only)
+    source: str
+    notes: str = ""
+
+    def shapes(self):
+        for s in SHAPES.values():
+            if s.name == "long_500k" and not self.long_context_ok:
+                continue
+            yield s
+
+    def param_count(self) -> int:
+        """Analytic param count (no allocation)."""
+        import jax
+        from repro.models.transformer import init_params
+        tree = jax.eval_shape(lambda k: init_params(self.model, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(tree))
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    if spec.arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch {spec.arch_id}")
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (zamba2_1p2b, deepseek_moe_16b, deepseek_v2_236b,  # noqa
+                               musicgen_medium, llama32_vision_11b, llama32_3b,  # noqa
+                               qwen25_14b, granite_20b, stablelm_1p6b, mamba2_130m)  # noqa

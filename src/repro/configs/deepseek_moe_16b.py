@@ -1,0 +1,39 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (kv=16) fine-grained MoE —
+2 shared + 64 routed top-6 experts of d_expert=1408; first layer dense;
+vocab=102400.  [arXiv:2401.06066; hf]
+
+This is the canonical arch for the paper's Model-2 partial hosting: host the
+alpha most popular routed experts; a request is edge-servable iff its top-6
+experts are all resident (g(alpha) from router statistics)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="deepseek-moe-16b",
+    d_model=2048, n_heads=16, n_kv_heads=16, d_ff=10944, vocab_size=102400,
+    segments=(("dense", 1), ("moe", 27)),
+    rope_theta=10000.0,
+    n_routed_experts=64, n_shared_experts=2, moe_top_k=6, d_expert=1408,
+)
+
+TINY = ModelConfig(
+    name="deepseek-moe-tiny",
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=160, vocab_size=256,
+    segments=(("dense", 1), ("moe", 2)),
+    n_routed_experts=8, n_shared_experts=2, moe_top_k=2, d_expert=32,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+    moe_capacity_factor=8.0,   # dropless at tiny scale: decode == full forward
+)
+
+ARCH = register(ArchSpec(
+    arch_id="deepseek-moe-16b", family="moe", model=MODEL, tiny=TINY,
+    partial_plan="expert_subset", alpha_default=0.5, g_alpha_default=0.25,
+    long_context_ok=False,
+    source="arXiv:2401.06066; hf",
+    notes="Model-2 expert-subset hosting; g(alpha) derived from expert "
+          "popularity (core/gcurve.py:moe_expert_gcurve). long_500k skipped "
+          "(full attention).",
+))

@@ -1,0 +1,40 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H MLA (kv_lora=512), MoE with
+2 shared + 160 routed top-6 experts (d_expert=1536); vocab=102400; first
+layer dense.  [arXiv:2405.04434; hf]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="deepseek-v2-236b",
+    d_model=5120, n_heads=128, n_kv_heads=128, d_ff=12288, vocab_size=102400,
+    segments=(("mla_dense", 1), ("mla_moe", 59)),
+    rope_theta=10000.0,
+    kv_lora_rank=512, q_lora_rank=1536,
+    mla_nope_dim=128, mla_rope_dim=64, mla_v_dim=128,
+    n_routed_experts=160, n_shared_experts=2, moe_top_k=6, d_expert=1536,
+    fsdp_experts=True,   # 472 GB of bf16 expert params: must shard over data too
+)
+
+TINY = ModelConfig(
+    name="deepseek-v2-tiny",
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=160, vocab_size=256,
+    segments=(("mla_dense", 1), ("mla_moe", 2)),
+    kv_lora_rank=32, q_lora_rank=48,
+    mla_nope_dim=16, mla_rope_dim=8, mla_v_dim=16,
+    n_routed_experts=8, n_shared_experts=2, moe_top_k=2, d_expert=32,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+    moe_capacity_factor=8.0,   # dropless at tiny scale: decode == full forward
+)
+
+ARCH = register(ArchSpec(
+    arch_id="deepseek-v2-236b", family="moe", model=MODEL, tiny=TINY,
+    partial_plan="expert_subset", alpha_default=0.4, g_alpha_default=0.35,
+    long_context_ok=False,
+    source="arXiv:2405.04434; hf",
+    notes="MLA compressed KV (kv_lora 512 + rope 64) makes edge decode cheap; "
+          "Model-2 expert-subset hosting over 160 routed experts. long_500k "
+          "skipped (full attention).",
+))

@@ -1,0 +1,30 @@
+"""granite-20b [dense]: 52L d_model=6144 48H MQA (kv=1) d_ff=24576
+vocab=49152, code model.  [arXiv:2405.04324; hf]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="granite-20b",
+    d_model=6144, n_heads=48, n_kv_heads=1, d_ff=24576, vocab_size=49152,
+    segments=(("dense", 52),),
+    rope_theta=10000.0,
+)
+
+TINY = ModelConfig(
+    name="granite-tiny",
+    d_model=64, n_heads=4, n_kv_heads=1, d_ff=128, vocab_size=256,
+    segments=(("dense", 2),),
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+)
+
+ARCH = register(ArchSpec(
+    arch_id="granite-20b", family="dense", model=MODEL, tiny=TINY,
+    partial_plan="layer_prefix", alpha_default=0.5, g_alpha_default=0.55,
+    long_context_ok=False,
+    source="arXiv:2405.04324; hf",
+    notes="MQA kv=1: KV replicated across TP ranks; decode KV cache is tiny. "
+          "long_500k skipped (full attention).",
+))

@@ -1,0 +1,38 @@
+"""llama-3.2-vision-11b [vlm]: 40L d_model=4096 32H (kv=8) d_ff=14336
+vocab=128256 with gated cross-attention image layers every 5th layer.
+Vision frontend is a STUB: input_specs provides precomputed patch
+embeddings [B, 1601, 1280]; the in-model projection maps them to d_model.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+_SEGMENTS = tuple([("dense", 4), ("cross", 1)] * 8)   # 40 layers, cross at every 5th
+
+MODEL = ModelConfig(
+    name="llama-3.2-vision-11b",
+    d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=128256,
+    segments=_SEGMENTS,
+    rope_theta=500000.0,
+    frontend="vision", frontend_dim=1280, frontend_tokens=1601,
+)
+
+TINY = ModelConfig(
+    name="llama-vision-tiny",
+    d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    segments=tuple([("dense", 2), ("cross", 1)] * 2),
+    frontend="vision", frontend_dim=32, frontend_tokens=17,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+)
+
+ARCH = register(ArchSpec(
+    arch_id="llama-3.2-vision-11b", family="vlm", model=MODEL, tiny=TINY,
+    partial_plan="layer_prefix", alpha_default=0.6, g_alpha_default=0.45,
+    long_context_ok=False,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+    notes="Partial plan hosts the text-only prefix (cross-attn dropped): "
+          "text answer at the edge now, image grounding from the cloud. "
+          "long_500k skipped (full attention).",
+))

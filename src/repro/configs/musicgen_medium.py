@@ -1,0 +1,34 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048,
+decoder-only over EnCodec tokens.  Modality frontend is a STUB: input_specs
+provides precomputed frame embeddings added to the code embeddings.
+[arXiv:2306.05284; hf]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="musicgen-medium",
+    d_model=1536, n_heads=24, n_kv_heads=24, d_ff=6144, vocab_size=2048,
+    segments=(("dense", 48),),
+    rope_theta=10000.0,
+    frontend="audio", frontend_dim=128, frontend_tokens=0,  # frames == seq
+)
+
+TINY = ModelConfig(
+    name="musicgen-tiny",
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=128,
+    segments=(("dense", 2),),
+    frontend="audio", frontend_dim=16, frontend_tokens=0,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+)
+
+ARCH = register(ArchSpec(
+    arch_id="musicgen-medium", family="audio", model=MODEL, tiny=TINY,
+    partial_plan="layer_prefix", alpha_default=0.5, g_alpha_default=0.5,
+    long_context_ok=False,
+    source="arXiv:2306.05284; hf",
+    notes="Layer-prefix partial hosting = coarse-codebook draft at the edge "
+          "(partial response of independent value). long_500k skipped.",
+))

@@ -1,0 +1,29 @@
+"""qwen2.5-14b [dense]: 48L d_model=5120 40H (kv=8) d_ff=13824 vocab=152064,
+QKV bias, rope theta 1e6.  [hf:Qwen/Qwen2.5-14B; hf]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="qwen2.5-14b",
+    d_model=5120, n_heads=40, n_kv_heads=8, d_ff=13824, vocab_size=152064,
+    segments=(("dense", 48),),
+    rope_theta=1000000.0, qkv_bias=True,
+)
+
+TINY = ModelConfig(
+    name="qwen2.5-tiny",
+    d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    segments=(("dense", 2),), qkv_bias=True,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+)
+
+ARCH = register(ArchSpec(
+    arch_id="qwen2.5-14b", family="dense", model=MODEL, tiny=TINY,
+    partial_plan="layer_prefix", alpha_default=0.5, g_alpha_default=0.55,
+    long_context_ok=False,
+    source="hf:Qwen/Qwen2.5-14B; hf",
+    notes="long_500k skipped (full attention).",
+))

@@ -1,0 +1,30 @@
+"""stablelm-1.6b [dense]: 24L d_model=2048 32H MHA (kv=32) d_ff=5632
+vocab=100352, partial rotary (25%).  [hf:stabilityai/stablelm-2-1_6b;
+unverified]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer import ModelConfig
+
+MODEL = ModelConfig(
+    name="stablelm-1.6b",
+    d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632, vocab_size=100352,
+    segments=(("dense", 24),),
+    rope_theta=10000.0, rotary_dim=16,        # 25% of head_dim 64
+)
+
+TINY = ModelConfig(
+    name="stablelm-tiny",
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+    segments=(("dense", 2),), rotary_dim=8,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    attn_impl="naive", remat=False, loss_chunk=16,
+)
+
+ARCH = register(ArchSpec(
+    arch_id="stablelm-1.6b", family="dense", model=MODEL, tiny=TINY,
+    partial_plan="layer_prefix", alpha_default=0.5, g_alpha_default=0.55,
+    long_context_ok=False,
+    source="hf:stabilityai/stablelm-2-1_6b; unverified",
+    notes="long_500k skipped (full attention).",
+))

@@ -1,0 +1,11 @@
+"""Core library: the paper's contribution (partial service hosting at the
+edge, alpha-RetroRenting and its analysis) as composable JAX modules."""
+from repro.core.costs import HostingCosts
+from repro.core.simulator import (run_policy, evaluate_schedule, SimResult,
+                                  model2_service_matrix)
+from repro.core import arrivals, rentcosts, bounds, gcurve
+
+__all__ = [
+    "HostingCosts", "run_policy", "evaluate_schedule", "SimResult",
+    "model2_service_matrix", "arrivals", "rentcosts", "bounds", "gcurve",
+]

@@ -1,0 +1,119 @@
+"""Request-arrival processes used in the paper's analysis and simulations.
+
+ - Bernoulli(p)                    (Assumptions 1/2, Figs 1-6)
+ - Poisson(lam)                    (Model 2 synthetic, Figs 12-15)
+ - Gilbert-Elliot 2-state Markov   (Figs 7/8 and 17-22) with Bernoulli or
+   Poisson emissions per state
+ - adversarial worst-case sequences (Theorem 4's constructions)
+ - bursty "cluster-trace-like" generator standing in for the Google cluster
+   trace [14] (offline container: see DESIGN.md §2)
+
+Everything returns int32 arrays of shape [T] and is deterministic given a
+``jax.random`` key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bernoulli(key, p: float, T: int) -> jnp.ndarray:
+    return jax.random.bernoulli(key, p, (T,)).astype(jnp.int32)
+
+
+def poisson(key, lam: float, T: int) -> jnp.ndarray:
+    return jax.random.poisson(key, lam, (T,)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliot:
+    """Two-state Markov-modulated arrivals (Fig. 9 / 16 of the paper).
+
+    State H emits ``rate_h`` arrivals in expectation, state L ``rate_l``.
+    ``p_hl`` = P(H->L), ``p_lh`` = P(L->H).  ``emission`` is "bernoulli"
+    (rates are probabilities) or "poisson" (rates are intensities).
+    """
+
+    p_hl: float
+    p_lh: float
+    rate_h: float
+    rate_l: float
+    emission: str = "poisson"
+
+    @property
+    def stationary_h(self) -> float:
+        return self.p_lh / (self.p_lh + self.p_hl)
+
+    @property
+    def mean_rate(self) -> float:
+        ph = self.stationary_h
+        return ph * self.rate_h + (1.0 - ph) * self.rate_l
+
+    def sample(self, key, T: int, return_states: bool = False):
+        kc, ke = jax.random.split(key)
+        flips = jax.random.uniform(kc, (T,))
+
+        def step(state, u):
+            # state: 1 = H, 0 = L
+            stay_h = u >= self.p_hl
+            go_h = u < self.p_lh
+            nxt = jnp.where(state == 1, jnp.where(stay_h, 1, 0), jnp.where(go_h, 1, 0))
+            return nxt, nxt
+
+        # start from the stationary distribution to avoid burn-in artifacts
+        s0 = (jax.random.uniform(jax.random.fold_in(kc, 1)) < self.stationary_h).astype(jnp.int32)
+        _, states = jax.lax.scan(step, s0, flips)
+        rates = jnp.where(states == 1, self.rate_h, self.rate_l)
+        if self.emission == "poisson":
+            x = jax.random.poisson(ke, rates, (T,)).astype(jnp.int32)
+        elif self.emission == "bernoulli":
+            x = (jax.random.uniform(ke, (T,)) < rates).astype(jnp.int32)
+        else:
+            raise ValueError(self.emission)
+        if return_states:
+            return x, states
+        return x
+
+
+def cluster_trace_like(key, T: int, base_rate: float = 2.0,
+                       burst_rate: float = 20.0, burst_p: float = 0.05,
+                       diurnal_period: int = 0) -> jnp.ndarray:
+    """Synthetic stand-in for the Google cluster-usage trace [14]: a
+    low-intensity Poisson background with geometric-length bursts, optionally
+    modulated by a diurnal sinusoid. Statistically bursty + autocorrelated,
+    which is what matters to RetroRenting-style policies."""
+    kb, kp, kd = jax.random.split(key, 3)
+    ge = GilbertElliot(p_hl=0.2, p_lh=burst_p, rate_h=burst_rate, rate_l=base_rate,
+                       emission="poisson")
+    x = ge.sample(kb, T).astype(jnp.float32)
+    if diurnal_period:
+        t = jnp.arange(T, dtype=jnp.float32)
+        mod = 1.0 + 0.5 * jnp.sin(2 * jnp.pi * t / diurnal_period)
+        lam = x * mod
+        x = jax.random.poisson(kd, jnp.maximum(lam, 0.0), (T,)).astype(jnp.float32)
+    return x.astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# Adversarial constructions (proof of Theorem 4)
+# ----------------------------------------------------------------------
+
+def adversarial_fetch_bait(tau: int, T: int) -> np.ndarray:
+    """Arrivals every slot until slot ``tau`` (when the online policy is
+    goaded into fetching), then silence — the Theorem-4 lower-bound
+    construction for a policy starting at r=0."""
+    x = np.zeros(T, dtype=np.int32)
+    x[:tau] = 1
+    return x
+
+
+def adversarial_evict_bait(tau_bar: int, tau: int, T: int) -> np.ndarray:
+    """No arrivals until the policy evicts (slot ``tau_bar``), then arrivals
+    every slot until ``tau_bar + tau``, then silence (second construction in
+    the proof of Theorem 4)."""
+    x = np.zeros(T, dtype=np.int32)
+    x[tau_bar:tau_bar + tau] = 1
+    return x

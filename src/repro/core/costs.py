@@ -1,0 +1,195 @@
+"""Cost model for partial service hosting (Section 2.6 of the paper).
+
+Levels are a strictly increasing tuple ``levels = (0, a_1, ..., 1)`` with a
+matching non-increasing service-cost tuple ``g = (1, g(a_1), ..., 0)``.  The
+paper's setting is the 3-level case ``(0, alpha, 1)``; ``multiple-RR``
+(Figs 7/8) uses more levels, and RR/OPT (no partial hosting) is the 2-level
+case ``(0, 1)``.
+
+Per-slot cost of holding level ``r`` in slot ``t`` and switching to ``r'``
+for slot ``t+1``:
+
+    C_t = M * (r' - r)^+        fetch cost      (eviction is free)
+        + c_t * r               rent cost       (linear in hosted fraction)
+        + svc_t(r)              service cost    (Model 1: g(r) * x_t;
+                                                 Model 2: realized Binomial)
+
+All functions are pure and JAX-compatible; the simulator composes them under
+``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HostingCosts:
+    """Static cost parameters of one hosting problem instance.
+
+    Attributes:
+      M: fetch cost for the full service (Assumption 5: ``M > 1``).
+      levels: hosting levels, ascending, ``levels[0] == 0``, ``levels[-1] == 1``.
+      g: service cost per request at each level, ``g[0] == 1``, ``g[-1] == 0``.
+      c_min / c_max: rent-cost bounds (Assumption 3).
+    """
+
+    M: float
+    levels: Tuple[float, ...]
+    g: Tuple[float, ...]
+    c_min: float = 0.0
+    c_max: float = float("inf")
+
+    def __post_init__(self):
+        if len(self.levels) != len(self.g):
+            raise ValueError("levels and g must have equal length")
+        if len(self.levels) < 2:
+            raise ValueError("need at least levels (0, 1)")
+        lv = np.asarray(self.levels, dtype=np.float64)
+        gv = np.asarray(self.g, dtype=np.float64)
+        if not (lv[0] == 0.0 and abs(lv[-1] - 1.0) < 1e-12):
+            raise ValueError(f"levels must span [0, 1], got {self.levels}")
+        if np.any(np.diff(lv) <= 0):
+            raise ValueError("levels must be strictly increasing")
+        if not (abs(gv[0] - 1.0) < 1e-12 and abs(gv[-1]) < 1e-12):
+            raise ValueError("g must have g(0)=1 and g(1)=0")
+        if np.any(np.diff(gv) > 1e-12):
+            raise ValueError("g must be non-increasing in the hosted fraction")
+
+    # ---- constructors -------------------------------------------------
+    @staticmethod
+    def three_level(M: float, alpha: float, g_alpha: float,
+                    c_min: float = 0.0, c_max: float = float("inf")) -> "HostingCosts":
+        """The paper's Assumption-4 setting: r in {0, alpha, 1}."""
+        return HostingCosts(M=M, levels=(0.0, float(alpha), 1.0),
+                            g=(1.0, float(g_alpha), 0.0), c_min=c_min, c_max=c_max)
+
+    @staticmethod
+    def two_level(M: float, c_min: float = 0.0, c_max: float = float("inf")) -> "HostingCosts":
+        """No partial hosting (the RR / OPT setting of [22])."""
+        return HostingCosts(M=M, levels=(0.0, 1.0), g=(1.0, 0.0), c_min=c_min, c_max=c_max)
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def K(self) -> int:
+        return len(self.levels)
+
+    @property
+    def alpha(self) -> float:
+        """The (single) intermediate level; only defined for the 3-level case."""
+        if self.K != 3:
+            raise ValueError("alpha only defined for 3-level instances")
+        return self.levels[1]
+
+    @property
+    def g_alpha(self) -> float:
+        if self.K != 3:
+            raise ValueError("g_alpha only defined for 3-level instances")
+        return self.g[1]
+
+    def levels_arr(self) -> jnp.ndarray:
+        return jnp.asarray(self.levels, dtype=jnp.float64 if jnp.array(0.).dtype == jnp.float64 else jnp.float32)
+
+    def g_arr(self) -> jnp.ndarray:
+        return jnp.asarray(self.g, dtype=jnp.float64 if jnp.array(0.).dtype == jnp.float64 else jnp.float32)
+
+    # ---- predicates from the paper ------------------------------------
+    def partial_is_useful(self) -> bool:
+        """Theorem 1 contrapositive: partial hosting can only help if
+        ``alpha + g(alpha) < 1``."""
+        if self.K != 3:
+            return self.K > 2
+        return self.alpha + self.g_alpha < 1.0
+
+    def rr_is_optimal(self) -> bool:
+        """Theorem 2(a): alpha-RR matches alpha-OPT when
+        ``alpha*c_min + g(alpha) >= 1`` and ``c_min >= 1``."""
+        if self.K != 3:
+            return self.c_min >= 1.0
+        return (self.alpha * self.c_min + self.g_alpha >= 1.0) and self.c_min >= 1.0
+
+    def assumption6_holds(self) -> bool:
+        """M > max{1, (1 - g(alpha)) / alpha} (Assumption 6)."""
+        if self.K != 3:
+            return self.M > 1.0
+        return self.M > max(1.0, (1.0 - self.g_alpha) / self.alpha)
+
+
+# ----------------------------------------------------------------------
+# Per-slot cost pieces (vectorised over the level axis K).
+# ----------------------------------------------------------------------
+
+def fetch_cost(levels: jnp.ndarray, r_from: jnp.ndarray, r_to: jnp.ndarray, M) -> jnp.ndarray:
+    """Actual fetch cost M * (levels[r_to] - levels[r_from])^+ (indices)."""
+    delta = levels[r_to] - levels[r_from]
+    return M * jnp.maximum(delta, 0.0)
+
+
+def retro_fetch_cost(levels: jnp.ndarray, r_from: jnp.ndarray, M) -> jnp.ndarray:
+    """Retrospective fetch charge used inside Algorithm 1's totalCost:
+    M * |levels[j] - levels[r]| for every candidate level j (vector [K]).
+
+    Note the *absolute value* (line 22 of Algorithm 1): the retrospection
+    charges hypothetical evictions too, which is the hysteresis that gives
+    RetroRenting its competitive ratio. The *actual* system only pays on
+    fetches (``fetch_cost`` above)."""
+    return M * jnp.abs(levels - levels[r_from])
+
+
+def rent_cost(levels: jnp.ndarray, c_t) -> jnp.ndarray:
+    """Rent cost at every level for one slot: c_t * levels  (vector [K])."""
+    return c_t * levels
+
+
+def service_cost_model1(g: jnp.ndarray, x_t) -> jnp.ndarray:
+    """Model 1 service cost at every level: g[k] * x_t (vector [K])."""
+    return g * x_t
+
+
+def service_cost_model2_coupled(g: jnp.ndarray, uniforms: jnp.ndarray, x_t) -> jnp.ndarray:
+    """Model 2 realized service cost at every level, with *coupled* randomness.
+
+    Each arriving request i draws one uniform u_i; at hosting level k it is
+    forwarded to the cloud (cost 1) iff ``u_i < g[k]``.  Because g is
+    non-increasing in the level, the coupling is monotone: a request served
+    at the edge under level k is also served under any higher level.  This
+    matches the proof of Theorem 5, whose events use the realized S_l
+    irrespective of the actual hosting state.
+
+    Args:
+      g: [K] service-cost probabilities.
+      uniforms: [R] uniforms for the (up to) R requests of this slot.
+      x_t: scalar int, number of requests actually arriving (<= R).
+
+    Returns:
+      [K] realized service cost at each level.
+    """
+    R = uniforms.shape[0]
+    live = (jnp.arange(R) < x_t)[None, :]          # [1, R]
+    fwd = uniforms[None, :] < g[:, None]           # [K, R]
+    return jnp.sum(jnp.where(live & fwd, 1.0, 0.0), axis=1)
+
+
+def per_slot_cost_matrix(costs: HostingCosts, x: jnp.ndarray, c: jnp.ndarray,
+                         svc: jnp.ndarray | None = None) -> jnp.ndarray:
+    """w[t, k] = rent + service cost of *holding* level k during slot t.
+
+    Args:
+      x: [T] request counts.
+      c: [T] rent costs.
+      svc: optional [T, K] realized service costs (Model 2). If None, Model 1
+        deterministic costs g[k] * x_t are used.
+    Returns:
+      [T, K] float array.
+    """
+    lv = jnp.asarray(costs.levels, dtype=jnp.float32)
+    gv = jnp.asarray(costs.g, dtype=jnp.float32)
+    rentm = c[:, None].astype(jnp.float32) * lv[None, :]
+    if svc is None:
+        svcm = x[:, None].astype(jnp.float32) * gv[None, :]
+    else:
+        svcm = svc.astype(jnp.float32)
+    return rentm + svcm

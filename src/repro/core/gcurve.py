@@ -1,0 +1,111 @@
+"""g(.) curves — the edge-serviceability cost as a function of the hosted
+fraction.
+
+Three constructions:
+  * ``interp_gcurve`` — piecewise-linear through measured (alpha, g) pairs
+    (what §7.2 does with the GPS-trajectory curve, Fig. 23).
+  * ``power_gcurve`` — the synthetic family g(a) = (1-a)^gamma (gamma > 1
+    gives the concave "most value in the first bytes" shape seen in Fig 23).
+  * ``moe_expert_gcurve`` — the MoE adaptation (DESIGN.md §4): hosting the
+    top-(alpha*E) most popular routed experts, a top-k-routed request is
+    edge-servable iff all its k experts are resident; 1 - g(alpha) is that
+    probability under a Zipf expert-popularity law, estimated by Monte
+    Carlo sampling without replacement.
+
+All curves are clamped to the paper's contract: g(0)=1, g(1)=0,
+non-increasing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _sanitize(alphas: np.ndarray, gs: np.ndarray):
+    alphas = np.concatenate([[0.0], np.asarray(alphas, np.float64), [1.0]])
+    gs = np.concatenate([[1.0], np.asarray(gs, np.float64), [0.0]])
+    order = np.argsort(alphas)
+    alphas, gs = alphas[order], gs[order]
+    gs = np.minimum.accumulate(gs)          # enforce non-increasing
+    return alphas, np.clip(gs, 0.0, 1.0)
+
+
+def interp_gcurve(alphas, gs):
+    xs, ys = _sanitize(np.asarray(alphas), np.asarray(gs))
+
+    def g(a):
+        return float(np.interp(a, xs, ys))
+
+    return g
+
+
+def power_gcurve(gamma: float = 2.0):
+    def g(a):
+        return float((1.0 - a) ** gamma)
+
+    return g
+
+
+def fig23_like_gcurve():
+    """Anchored to the paper's Fig. 23 calibration points: the knapsack curve
+    saturates below 1 (test-year queries miss paths unseen in training
+    years); g(0.16) = 0.76 (the paper's chosen operating point) and the
+    Fig. 24 optimum near alpha = 0.5."""
+    anchors_a = [0.05, 0.16, 0.30, 0.50, 0.75, 1.00]
+    anchors_served = [0.10, 0.24, 0.38, 0.52, 0.62, 0.68]
+    # g = 1 - served, but force g(1)=0 per the cost-model contract: the
+    # saturating tail is handled by never letting alpha-RR pick alpha=1 in
+    # the geolife benchmarks (full hosting serves everything by definition
+    # in the cost model; the dataset's residual 0.32 is cloud-side novelty).
+    gs = [1.0 - s for s in anchors_served]
+    xs = np.asarray(anchors_a[:-1])
+    ys = np.asarray(gs[:-1])
+    return interp_gcurve(xs, ys)
+
+
+def zipf_popularity(n: int, s: float = 1.0) -> np.ndarray:
+    p = 1.0 / np.arange(1, n + 1) ** s
+    return p / p.sum()
+
+
+def moe_expert_gcurve(popularity: np.ndarray, top_k: int, alphas,
+                      n_samples: int = 20000, seed: int = 0):
+    """Estimate g(alpha) for expert-subset hosting.
+
+    Hosted set = the ceil(alpha * E) most popular experts. A request draws
+    ``top_k`` distinct experts with probability proportional to popularity
+    (a standard surrogate for learned-router skew). The request is fully
+    edge-servable iff all drawn experts are hosted.
+
+    Returns (alphas, g_values, g_callable).
+    """
+    rng = np.random.default_rng(seed)
+    p = np.asarray(popularity, np.float64)
+    E = len(p)
+    order = np.argsort(-p)                      # most popular first
+    rank_of = np.empty(E, np.int64)
+    rank_of[order] = np.arange(E)
+    # sample routed sets once; reuse across alphas (common random numbers)
+    draws = np.empty((n_samples, top_k), np.int64)
+    for i in range(n_samples):
+        draws[i] = rng.choice(E, size=top_k, replace=False, p=p)
+    worst_rank = rank_of[draws].max(axis=1)     # least-popular routed expert
+    alphas = np.asarray(alphas, np.float64)
+    gs = np.empty_like(alphas)
+    for j, a in enumerate(alphas):
+        hosted = int(np.ceil(a * E))
+        gs[j] = 1.0 - float(np.mean(worst_rank < hosted))
+    g = interp_gcurve(alphas, gs)
+    return alphas, gs, g
+
+
+def uniform_moe_gcurve_analytic(E: int, top_k: int):
+    """Uniform-routing closed form: 1 - g(a) = C(hosted, k)/C(E, k)."""
+    from math import comb
+
+    def g(a):
+        hosted = int(np.ceil(a * E))
+        if hosted < top_k:
+            return 1.0
+        return 1.0 - comb(hosted, top_k) / comb(E, top_k)
+
+    return g

@@ -1,0 +1,115 @@
+"""HostingController: the paper's alpha-RR policy driving a real serving
+runtime.
+
+Each scheduler slot, the controller observes (request count, spot rent,
+realized per-level service costs), advances alpha-RetroRenting one step, and
+returns the *hosting plan* the engine must realise for the next slot
+(none / partial / full — see serve/partial.py for what "partial" means per
+architecture).  It accounts fetch/rent/service cost exactly as eq. (1) and
+its state is a tiny pytree, checkpointed with the training/serving step so
+decisions survive restarts (fault tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import HostingCosts
+from repro.core.policies.alpha_rr import AlphaRR
+from repro.core.policies.base import SlotObs
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    slot: int
+    level_idx: int
+    level: float
+    x: int
+    rent: float
+    service: float
+    fetch: float
+
+    @property
+    def total(self) -> float:
+        return self.rent + self.service + self.fetch
+
+
+class HostingController:
+    def __init__(self, costs: HostingCosts, policy_cls=AlphaRR):
+        self.policy = policy_cls(costs)
+        # all accounting uses the POLICY's own level grid: a no-partial
+        # policy (RetroRenting) rebuilds a 2-level instance internally, and
+        # its level indices must not be read against the 3-level grid.
+        self.costs = self.policy.costs
+        self.state = self.policy.init()
+        self.slot = 0
+        self.records: list[SlotRecord] = []
+
+    @property
+    def level_idx(self) -> int:
+        return int(self.state["r"])
+
+    @property
+    def level(self) -> float:
+        return float(self.costs.levels[self.level_idx])
+
+    def step(self, x_t: int, c_t: float, svc_t: Optional[np.ndarray] = None) -> int:
+        """Advance one slot.  ``svc_t`` is the realized per-level service
+        cost vector (Model 2); None uses the deterministic Model-1 costs.
+        Returns the level index to host for the NEXT slot."""
+        lv = np.asarray(self.costs.levels)
+        g = np.asarray(self.costs.g)
+        if svc_t is None:
+            svc_t = g * float(x_t)
+        svc_t = np.asarray(svc_t, np.float32)
+        if svc_t.shape[0] != self.costs.K:
+            raise ValueError(f"svc vector has {svc_t.shape[0]} levels, policy "
+                             f"uses {self.costs.K} (pass costs matching the "
+                             f"policy's grid)")
+        r_prev = self.level_idx
+        obs = SlotObs(jnp.int32(x_t), jnp.float32(c_t),
+                      jnp.asarray(svc_t), jnp.int32(0))
+        self.state = self.policy.step(self.state, obs)
+        r_next = self.level_idx
+        fetch = self.costs.M * max(lv[r_next] - lv[r_prev], 0.0)
+        self.records.append(SlotRecord(
+            slot=self.slot, level_idx=r_prev, level=float(lv[r_prev]),
+            x=int(x_t), rent=float(c_t * lv[r_prev]),
+            service=float(svc_t[r_prev]), fetch=float(fetch)))
+        self.slot += 1
+        return r_next
+
+    # ---- accounting ---------------------------------------------------
+    def total_cost(self) -> float:
+        return float(sum(r.total for r in self.records))
+
+    def cost_breakdown(self) -> Dict[str, float]:
+        return {
+            "fetch": float(sum(r.fetch for r in self.records)),
+            "rent": float(sum(r.rent for r in self.records)),
+            "service": float(sum(r.service for r in self.records)),
+            "total": self.total_cost(),
+        }
+
+    def level_histogram(self) -> np.ndarray:
+        h = np.zeros(self.costs.K, np.int64)
+        for r in self.records:
+            h[r.level_idx] += 1
+        return h
+
+    # ---- checkpointing (fault tolerance) -------------------------------
+    def state_dict(self) -> Dict:
+        return {
+            "slot": self.slot,
+            "policy_state": {k: np.asarray(v) for k, v in self.state.items()},
+            "records": [(r.slot, r.level_idx, r.level, r.x, r.rent, r.service,
+                         r.fetch) for r in self.records],
+        }
+
+    def load_state_dict(self, sd: Dict):
+        self.slot = int(sd["slot"])
+        self.state = {k: jnp.asarray(v) for k, v in sd["policy_state"].items()}
+        self.records = [SlotRecord(*row) for row in sd["records"]]

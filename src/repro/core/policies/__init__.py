@@ -1,0 +1,11 @@
+from repro.core.policies.base import OnlinePolicy, SlotObs
+from repro.core.policies.alpha_rr import AlphaRR, RetroRenting, alpha_rr_literal
+from repro.core.policies.offline_opt import (offline_opt, offline_opt_no_partial,
+                                             brute_force_opt, OfflineResult)
+from repro.core.policies.baselines import StaticPolicy, MDPPolicy, ABCPolicy, solve_mdp
+
+__all__ = [
+    "OnlinePolicy", "SlotObs", "AlphaRR", "RetroRenting", "alpha_rr_literal",
+    "offline_opt", "offline_opt_no_partial", "brute_force_opt", "OfflineResult",
+    "StaticPolicy", "MDPPolicy", "ABCPolicy", "solve_mdp",
+]

@@ -1,0 +1,154 @@
+"""alpha-RetroRenting (Algorithm 1 of the paper), in two implementations.
+
+1. ``AlphaRR`` — the O(1)-per-slot / O(K)-state formulation (Remark 3, via
+   the technique of [19]/[22]).  The key identity: with ``w_t[k]`` the
+   rent+service cost of holding level k during slot t and ``r`` the current
+   level, Algorithm 1's candidate comparison collapses to a *minimum suffix
+   sum*.  For candidate level j and switch slot ``tau`` in the open window
+   ``(t_recent, t)``:
+
+       totalCost(R_j^{(tau)}, I_t) - totalCost(all-r, I_t)
+           = M * |lv[j] - lv[r]|  +  sum_{l=tau+1}^{t} (w_l[j] - w_l[r])
+
+   so  minCost(j) - minCost(r) = M|lv_j - lv_r| + S_j(t)  where
+
+       S_j(t) = min_{s in [t_recent+2, t]} sum_{l=s}^{t} d_l[j],
+       d_l[j] = w_l[j] - w_l[r]
+
+   and S_j obeys the scan recursion ``S_j(t) = d_t[j] + min(0, S_j(t-1))``
+   with ``S_j = +inf`` right after a switch (the window must contain at
+   least one old-level slot and one new-level slot, so the first candidate
+   switch point is t_recent+1, i.e. the first accumulated slot is
+   t_recent+2).  Algorithm 1 switches to ``argmin_j`` when the margin is
+   negative.  Note the retrospective fetch charge uses ``|.|`` (line 22),
+   while the real system pays only on increments — that asymmetry is
+   RetroRenting's hysteresis and we keep it faithfully.
+
+   ``AlphaRR`` works for any number of levels: K=2 gives RetroRenting [22]
+   (policy "RR" in the figures), K=3 the paper's alpha-RR, K>3 multiple-RR
+   (Figs 7/8).
+
+2. ``alpha_rr_literal`` — a plain-numpy transliteration of Algorithm 1
+   (recomputing totalCost over the whole window each slot, O(t) work).  It
+   exists to *prove the O(1) version equivalent* (property test
+   ``tests/test_policies.py::test_alpha_rr_scan_matches_literal``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.costs import HostingCosts
+from repro.core.policies.base import OnlinePolicy, SlotObs, State
+
+_BIG = jnp.float32(3.4e38)  # acts as +inf for min(0, .) gating
+_TIE_EPS = 1e-6             # ties break toward staying (no spurious fetch)
+
+
+class AlphaRR(OnlinePolicy):
+    """O(1)-per-slot alpha-RetroRenting over an arbitrary level grid."""
+
+    def init(self) -> State:
+        K = self.costs.K
+        return {
+            "r": jnp.asarray(0, jnp.int32),            # level index held next slot
+            "S": jnp.full((K,), _BIG, jnp.float32),    # suffix minima vs current level
+            "age": jnp.asarray(0, jnp.int32),          # slots since last switch
+        }
+
+    def step(self, state: State, obs: SlotObs) -> State:
+        costs = self.costs
+        lv = jnp.asarray(costs.levels, jnp.float32)
+        r = state["r"]
+        age = state["age"] + 1                          # this slot's index - t_recent
+
+        # per-level cost of this slot; d relative to the held level
+        w = obs.c * lv + obs.svc                        # [K]
+        d = w - w[r]
+
+        # accumulate suffix minima only once the candidate window is non-empty
+        S_prev = state["S"]
+        S_new = d + jnp.minimum(0.0, S_prev)
+        S = jnp.where(age >= 2, S_new, S_prev)
+
+        # margins: retrospective fetch charge uses |.| per Algorithm 1 line 22
+        margins = costs.M * jnp.abs(lv - lv[r]) + jnp.where(age >= 2, S, _BIG)
+        margins = margins.at[r].set(0.0)
+        j_star = jnp.argmin(margins + _TIE_EPS * (jnp.arange(costs.K) != r))
+        switch = margins[j_star] < -0.0
+        r_next = jnp.where(switch, j_star, r).astype(jnp.int32)
+
+        K = costs.K
+        return {
+            "r": r_next,
+            "S": jnp.where(switch, jnp.full((K,), _BIG, jnp.float32), S),
+            "age": jnp.where(switch, jnp.asarray(0, jnp.int32), age),
+        }
+
+
+class RetroRenting(AlphaRR):
+    """RR of [22]: AlphaRR restricted to levels (0, 1).  Provided as a named
+    class so benchmark legends match the paper."""
+
+    def __init__(self, costs: HostingCosts):
+        super().__init__(HostingCosts.two_level(costs.M, costs.c_min, costs.c_max))
+
+
+# ----------------------------------------------------------------------
+# Literal Algorithm 1 (numpy, O(t) per slot) — test oracle.
+# ----------------------------------------------------------------------
+
+def alpha_rr_literal(costs: HostingCosts, x: np.ndarray, c: np.ndarray,
+                     svc: np.ndarray | None = None) -> np.ndarray:
+    """Run Algorithm 1 exactly as printed; returns r_hist (level index held
+    during each slot, length T).
+
+    ``svc`` is the [T, K] realized service-cost matrix; None means Model 1
+    (g[k] * x_t), matching the printed totalCost which uses x_j * g(R(j)).
+    """
+    lv = np.asarray(costs.levels, np.float64)
+    g = np.asarray(costs.g, np.float64)
+    T = len(x)
+    K = costs.K
+    if svc is None:
+        svc = np.asarray(x, np.float64)[:, None] * g[None, :]
+    svc = np.asarray(svc, np.float64)
+    c = np.asarray(c, np.float64)
+
+    def total_cost(seq_levels: np.ndarray, lo: int, hi: int) -> float:
+        """Cost of holding seq_levels[t] during slots lo..hi (inclusive,
+        0-based), with Algorithm-1's |delta| fetch charges inside the window."""
+        idx = np.arange(lo, hi + 1)
+        ks = seq_levels
+        cost = float(np.sum(c[idx] * lv[ks]) + np.sum(svc[idx, ks]))
+        cost += costs.M * float(np.sum(np.abs(lv[ks[1:]] - lv[ks[:-1]])))
+        return cost
+
+    r_hist = np.zeros(T, np.int64)
+    r = 0          # r_1 = 0
+    t_recent = 0   # 1-based slot of last change; 0 = before the horizon
+    for t in range(1, T + 1):     # 1-based slots
+        r_hist[t - 1] = r
+        lo, hi = t_recent, t - 1  # 0-based window [t_recent+1 .. t] -> [lo..hi]
+        n = hi - lo + 1           # t - t_recent
+        best = np.full(K, np.inf)
+        for j in range(K):
+            # candidates: tau - t_recent slots at r then the rest at j,
+            # tau in (t_recent, t) open, i.e. 1 <= stay < n
+            for stay in range(1, n):
+                seq = np.concatenate([np.full(stay, r), np.full(n - stay, j)])
+                v = total_cost(seq, lo, hi)
+                if v < best[j]:
+                    best[j] = v
+        best[r] = min(best[r], total_cost(np.full(n, r), lo, hi))
+        j_star = int(np.argmin(best + _TIE_EPS * (np.arange(K) != r)))
+        if j_star != r and best[j_star] < best[r]:
+            r = j_star
+            t_recent = t
+    return r_hist
+
+
+def alpha_rr_hosting(costs: HostingCosts, x, c, svc=None) -> jnp.ndarray:
+    """Convenience: run the scan policy over full arrays; returns r_hist [T]."""
+    from repro.core.simulator import run_policy
+    return run_policy(AlphaRR(costs), costs, x, c, svc).r_hist

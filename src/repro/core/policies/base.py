@@ -1,0 +1,52 @@
+"""Policy interface for the slotted hosting simulator.
+
+An *online* policy is a pair of pure functions:
+
+    state0 = policy.init()
+    state' = policy.step(state, obs)     # jax-traceable
+
+where ``obs = SlotObs(x, c, svc)`` carries this slot's arrivals, rent cost
+and the per-level service-cost vector (deterministic ``g*x`` for Model 1,
+realized for Model 2), plus an optional side-channel (e.g. Markov state for
+MDP/ABC baselines).  ``state["r"]`` is the index (into ``costs.levels``) of
+the level the policy will hold during the *next* slot.  The simulator runs
+policies under ``jax.lax.scan``.
+
+Sequence of events in a slot (paper §2.5): arrivals happen and are served at
+the current level; the provider announces the next rent; the policy picks
+``r_{t+1}``; any fetch for the increment is paid now.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.costs import HostingCosts
+
+
+class SlotObs(NamedTuple):
+    x: jnp.ndarray        # scalar int32: arrivals this slot
+    c: jnp.ndarray        # scalar float: rent this slot
+    svc: jnp.ndarray      # [K]: realized service cost at every level this slot
+    side: jnp.ndarray     # scalar int32: optional side info (e.g. Markov state)
+
+
+State = Dict[str, Any]
+
+
+class OnlinePolicy:
+    """Base class; subclasses must be immutable (used inside jit)."""
+
+    def __init__(self, costs: HostingCosts):
+        self.costs = costs
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+    def init(self) -> State:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def step(self, state: State, obs: SlotObs) -> State:  # pragma: no cover
+        raise NotImplementedError

@@ -1,0 +1,133 @@
+"""Baseline policies from the paper's simulation sections.
+
+* ``StaticPolicy`` — hold one level forever (never/always-partial/always-full).
+* ``MDPPolicy`` — §7.1.2's "MDP policy": knows the arrival statistics (the
+  Gilbert-Elliot chain and per-state rates) and the mean rent cost; solves
+  the average-cost MDP over (chain state, hosting level) by relative value
+  iteration and plays the resulting stationary policy, observing the current
+  chain state.
+* ``ABCPolicy`` — "Arrival Based Caching" [26]: decides from the *current
+  slot's arrival rate* and the arrival statistics only.  Our operational
+  reading (the reference is summarised in one sentence in the paper): infer
+  the chain state from x_t, then pick the level minimising the expected
+  per-slot cost with the fetch price amortised over the expected sojourn of
+  the inferred state:
+
+      r' = argmin_k  lv_k * c_mean + g_k * rate(s_hat)
+                     + M * (lv_k - lv_r)^+ / sojourn(s_hat).
+
+Both baselines get statistics that alpha-RR never sees — the paper's point
+(Figs 17-22) is that alpha-RR is competitive with them anyway.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arrivals import GilbertElliot
+from repro.core.costs import HostingCosts
+from repro.core.policies.base import OnlinePolicy, SlotObs, State
+
+
+class StaticPolicy(OnlinePolicy):
+    def __init__(self, costs: HostingCosts, level_idx: int):
+        super().__init__(costs)
+        self.level_idx = int(level_idx)
+
+    @property
+    def name(self):
+        return f"static[{self.costs.levels[self.level_idx]}]"
+
+    def init(self) -> State:
+        # slot 1 must start at 0 (service initially not hosted); we upgrade
+        # to the target level at the first decision point.
+        return {"r": jnp.asarray(0, jnp.int32)}
+
+    def step(self, state: State, obs: SlotObs) -> State:
+        return {"r": jnp.asarray(self.level_idx, jnp.int32)}
+
+
+def _expected_svc_rates(costs: HostingCosts, rates: np.ndarray) -> np.ndarray:
+    """E[service cost | chain state s, level k] = g_k * rate_s  (Model 1 and
+    Model 2 agree in expectation)."""
+    g = np.asarray(costs.g, np.float64)
+    return rates[:, None] * g[None, :]          # [S, K]
+
+
+def solve_mdp(costs: HostingCosts, ge: GilbertElliot, c_mean: float,
+              iters: int = 2000, tol: float = 1e-10) -> np.ndarray:
+    """Relative value iteration for the average-cost MDP.
+
+    States: (chain s in {0=L, 1=H}, level k).  Action: next level k'.
+    Timing: choose k' at the end of a slot knowing s_t; pay fetch now; next
+    slot's service cost is drawn at s_{t+1} ~ P(.|s_t).
+
+    Returns pi [S, K] -> next-level index.
+    """
+    lv = np.asarray(costs.levels, np.float64)
+    K = costs.K
+    P = np.array([[1 - ge.p_lh, ge.p_lh], [ge.p_hl, 1 - ge.p_hl]])  # [s, s']
+    rates = np.array([ge.rate_l, ge.rate_h])
+    svc = _expected_svc_rates(costs, rates)     # [S, K]
+    hold = c_mean * lv[None, :] + svc           # E[cost | s', k'] for holding
+    fetch = costs.M * np.maximum(lv[None, :] - lv[:, None], 0.0)  # [k, k']
+
+    V = np.zeros((2, K))
+    for _ in range(iters):
+        # Q[s, k, k'] = fetch[k,k'] + sum_s' P[s,s'] (hold[s',k'] + V[s',k'])
+        cont = np.einsum("st,tk->sk", P, hold + V)   # [s, k']
+        Q = fetch[None, :, :] + cont[:, None, :]
+        V_new = Q.min(axis=2)
+        V_new = V_new - V_new[0, 0]                  # relative VI normalisation
+        if np.max(np.abs(V_new - V)) < tol:
+            V = V_new
+            break
+        V = V_new
+    cont = np.einsum("st,tk->sk", P, hold + V)
+    Q = fetch[None, :, :] + cont[:, None, :]
+    return np.argmin(Q, axis=2)                      # [S, K]
+
+
+class MDPPolicy(OnlinePolicy):
+    """Plays the precomputed average-cost-optimal stationary policy; observes
+    the chain state via ``obs.side`` (0=L, 1=H)."""
+
+    def __init__(self, costs: HostingCosts, ge: GilbertElliot, c_mean: float):
+        super().__init__(costs)
+        self.pi = jnp.asarray(solve_mdp(costs, ge, c_mean), jnp.int32)  # [S, K]
+
+    def init(self) -> State:
+        return {"r": jnp.asarray(0, jnp.int32)}
+
+    def step(self, state: State, obs: SlotObs) -> State:
+        s = jnp.clip(obs.side, 0, self.pi.shape[0] - 1)
+        return {"r": self.pi[s, state["r"]]}
+
+
+class ABCPolicy(OnlinePolicy):
+    """Arrival Based Caching [26] (see module docstring for the reading)."""
+
+    def __init__(self, costs: HostingCosts, ge: GilbertElliot, c_mean: float):
+        super().__init__(costs)
+        self.ge = ge
+        self.c_mean = float(c_mean)
+        # threshold to classify the state from x_t
+        self.x_threshold = 0.5 * (ge.rate_h + ge.rate_l)
+        rates = np.array([ge.rate_l, ge.rate_h])
+        sojourn = np.array([1.0 / max(ge.p_lh, 1e-9), 1.0 / max(ge.p_hl, 1e-9)])
+        lv = np.asarray(costs.levels, np.float64)
+        g = np.asarray(costs.g, np.float64)
+        # score[s, k, k'] of choosing k' at current level k in inferred state s
+        hold = self.c_mean * lv[None, :] + rates[:, None] * g[None, :]
+        fetch = costs.M * np.maximum(lv[None, :] - lv[:, None], 0.0)
+        score = hold[:, None, :] + fetch[None, :, :] / sojourn[:, None, None]
+        self.pi = jnp.asarray(np.argmin(score, axis=2), jnp.int32)   # [S, K]
+
+    def init(self) -> State:
+        return {"r": jnp.asarray(0, jnp.int32)}
+
+    def step(self, state: State, obs: SlotObs) -> State:
+        s_hat = (obs.x.astype(jnp.float32) >= self.x_threshold).astype(jnp.int32)
+        return {"r": self.pi[s_hat, state["r"]]}

@@ -1,0 +1,92 @@
+"""Offline optimal hosting (alpha-OPT / OPT) by exact dynamic programming.
+
+State = level index, K states; transition cost = fetch on increments only
+(eviction free).  ``J_t(k) = min_k' [J_{t-1}(k') + M (lv_k - lv_k')^+] + w_t[k]``
+with ``J_0 = [0, inf, ...]`` (service starts off-edge, like all policies).
+Runs as one lax.scan over the horizon; argmins are emitted so the optimal
+schedule can be backtracked for the hosting-status histograms (Figs 2, 8,
+12-22).
+
+``OPT`` (no partial hosting, the benchmark of [22]) is the same DP on the
+2-level instance. Exhaustive-search cross-checks live in the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import HostingCosts, per_slot_cost_matrix
+
+
+def _eval(costs, r_hist, x, c, svc=None):
+    # local import: simulator imports policies.base, whose package __init__
+    # imports this module — keep the edge lazy to break the cycle.
+    from repro.core.simulator import evaluate_schedule
+    return evaluate_schedule(costs, r_hist, x, c, svc)
+
+
+@dataclasses.dataclass
+class OfflineResult:
+    cost: float
+    r_hist: np.ndarray
+    sim: object  # repro.core.simulator.SimResult
+
+
+def offline_opt(costs: HostingCosts, x, c, svc=None) -> OfflineResult:
+    """Exact alpha-OPT over the instance; also returns the argmin schedule."""
+    x = jnp.asarray(x, jnp.int32)
+    c = jnp.asarray(c, jnp.float32)
+    w = per_slot_cost_matrix(costs, x, c, None if svc is None else jnp.asarray(svc))
+    lv = jnp.asarray(costs.levels, jnp.float32)
+    K = costs.K
+    # fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+
+    fetch_mat = costs.M * jnp.maximum(lv[None, :] - lv[:, None], 0.0)
+
+    def step(J_prev, w_t):
+        # trans[k_prev, k_next] = J_prev[k_prev] + fetch
+        trans = J_prev[:, None] + fetch_mat
+        arg = jnp.argmin(trans, axis=0)          # [K] best predecessor per level
+        J = jnp.min(trans, axis=0) + w_t
+        return J, arg
+
+    J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
+    J_T, args = jax.lax.scan(step, J0, w)
+    args = np.asarray(args)                       # [T, K]
+    # backtrack
+    T = args.shape[0]
+    r_hist = np.zeros(T, np.int64)
+    k = int(np.argmin(np.asarray(J_T)))
+    for t in range(T - 1, -1, -1):
+        r_hist[t] = k
+        k = int(args[t, k])
+    sim = _eval(costs, r_hist, x, c, svc)
+    return OfflineResult(cost=float(jnp.min(J_T)), r_hist=r_hist, sim=sim)
+
+
+def offline_opt_no_partial(costs: HostingCosts, x, c, svc=None) -> OfflineResult:
+    """OPT of [22]: offline optimum restricted to levels {0, 1}."""
+    c2 = HostingCosts.two_level(costs.M, costs.c_min, costs.c_max)
+    svc2 = None
+    if svc is not None:
+        svc = np.asarray(svc)
+        svc2 = svc[:, [0, costs.K - 1]]
+    return offline_opt(c2, x, c, svc2)
+
+
+def brute_force_opt(costs: HostingCosts, x, c, svc=None) -> OfflineResult:
+    """Exhaustive search over all K^T schedules (tests only; tiny T)."""
+    x = np.asarray(x)
+    T = len(x)
+    K = costs.K
+    best, best_seq = np.inf, None
+    for code in range(K ** T):
+        seq = np.base_repr(code, K).zfill(T)
+        r = np.array([int(ch) for ch in seq], np.int64)
+        res = _eval(costs, r, x, c, svc)
+        if res.total < best - 1e-9:
+            best, best_seq = res.total, r
+    sim = _eval(costs, best_seq, x, c, svc)
+    return OfflineResult(cost=best, r_hist=best_seq, sim=sim)

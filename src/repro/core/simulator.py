@@ -1,0 +1,121 @@
+"""Slotted hosting simulator (jax.lax.scan) + schedule evaluator.
+
+Conventions (paper §2.5/§2.6):
+  * slots are 1..T; ``r_hist[t]`` is the level *held during* slot t
+    (r_1 = 0 for all online policies);
+  * per-slot cost = rent + service while holding, plus fetch
+    ``M * (lv[r_{t+1}] - lv[r_t])^+`` paid when the policy upgrades for the
+    next slot.  Online policies also pay for a final upgrade decided at slot
+    T (they cannot know the horizon ended); offline policies never upgrade
+    at T.  ``evaluate_schedule`` charges fetches on entry so both styles are
+    scored identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import HostingCosts, per_slot_cost_matrix
+from repro.core.policies.base import OnlinePolicy, SlotObs
+
+
+@dataclasses.dataclass
+class SimResult:
+    total: float
+    fetch: float
+    rent: float
+    service: float
+    r_hist: np.ndarray        # [T] int level indices
+    level_slots: np.ndarray   # [K] #slots spent at each level (the histograms)
+
+    @property
+    def per_slot(self) -> float:
+        return self.total / len(self.r_hist)
+
+
+def _obs_arrays(costs: HostingCosts, x, c, svc, side):
+    x = jnp.asarray(x, jnp.int32)
+    c = jnp.asarray(c, jnp.float32)
+    T = x.shape[0]
+    if svc is None:
+        gv = jnp.asarray(costs.g, jnp.float32)
+        svc = x[:, None].astype(jnp.float32) * gv[None, :]
+    else:
+        svc = jnp.asarray(svc, jnp.float32)
+    if side is None:
+        side = jnp.zeros((T,), jnp.int32)
+    return x, c, svc, side
+
+
+def run_policy(policy: OnlinePolicy, costs: HostingCosts, x, c,
+               svc=None, side=None, include_final_fetch: bool = True) -> SimResult:
+    """Simulate an online policy over the whole horizon."""
+    x, c, svc, side = _obs_arrays(costs, x, c, svc, side)
+    lv = jnp.asarray(costs.levels, jnp.float32)
+    T = x.shape[0]
+
+    def step(carry, inp):
+        state = carry
+        x_t, c_t, svc_t, side_t = inp
+        r_t = state["r"]
+        rent_t = c_t * lv[r_t]
+        svc_cost_t = svc_t[r_t]
+        new_state = policy.step(state, SlotObs(x_t, c_t, svc_t, side_t))
+        r_next = new_state["r"]
+        fetch_t = costs.M * jnp.maximum(lv[r_next] - lv[r_t], 0.0)
+        return new_state, (r_t, rent_t, svc_cost_t, fetch_t)
+
+    state0 = policy.init()
+    _, (r_hist, rent, svc_cost, fetch) = jax.lax.scan(
+        step, state0, (x, c, svc, side))
+    if not include_final_fetch:
+        fetch = fetch.at[-1].set(0.0)
+    r_np = np.asarray(r_hist)
+    counts = np.bincount(r_np, minlength=costs.K).astype(np.int64)
+    return SimResult(
+        total=float(jnp.sum(rent) + jnp.sum(svc_cost) + jnp.sum(fetch)),
+        fetch=float(jnp.sum(fetch)),
+        rent=float(jnp.sum(rent)),
+        service=float(jnp.sum(svc_cost)),
+        r_hist=r_np,
+        level_slots=counts,
+    )
+
+
+def evaluate_schedule(costs: HostingCosts, r_hist, x, c, svc=None) -> SimResult:
+    """Cost of an arbitrary hosting schedule ``r_hist`` ([T] level indices,
+    entered from r=0 before slot 1; fetches charged on entry to each slot)."""
+    x, c, svc, _ = _obs_arrays(costs, x, c, svc, None)
+    lv = jnp.asarray(costs.levels, jnp.float32)
+    r = jnp.asarray(r_hist, jnp.int32)
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), r[:-1]])
+    fetch = costs.M * jnp.maximum(lv[r] - lv[prev], 0.0)
+    rent = c * lv[r]
+    svc_cost = jnp.take_along_axis(svc, r[:, None], axis=1)[:, 0]
+    r_np = np.asarray(r)
+    counts = np.bincount(r_np, minlength=costs.K).astype(np.int64)
+    return SimResult(
+        total=float(jnp.sum(fetch) + jnp.sum(rent) + jnp.sum(svc_cost)),
+        fetch=float(jnp.sum(fetch)),
+        rent=float(jnp.sum(rent)),
+        service=float(jnp.sum(svc_cost)),
+        r_hist=r_np,
+        level_slots=counts,
+    )
+
+
+def model2_service_matrix(key, costs: HostingCosts, x, max_per_slot: int | None = None):
+    """Realized Model-2 service costs, coupled across levels (one uniform per
+    request; forwarded at level k iff u < g[k]).  Returns [T, K]."""
+    x = jnp.asarray(x, jnp.int32)
+    T = int(x.shape[0])
+    R = int(max_per_slot if max_per_slot is not None else max(int(jnp.max(x)), 1))
+    u = jax.random.uniform(key, (T, R))
+    gv = jnp.asarray(costs.g, jnp.float32)
+    live = jnp.arange(R)[None, :] < x[:, None]              # [T, R]
+    fwd = u[:, :, None] < gv[None, None, :]                 # [T, R, K]
+    return jnp.sum(jnp.where(live[:, :, None] & fwd, 1.0, 0.0), axis=1)  # [T, K]

@@ -1,0 +1,106 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU adaptation notes (DESIGN.md §6): the GPU flash algorithm maps onto the
+TPU by (a) tiling Q/K/V into MXU-aligned [128, head_dim] VMEM blocks via
+BlockSpec, (b) carrying the online-softmax statistics (m, l, acc) in VMEM
+scratch across the innermost (KV) grid dimension — TPU grids iterate
+sequentially minor-to-major, so the scratch plays the role of the GPU's
+per-CTA registers, and (c) letting the pallas pipeline double-buffer the
+HBM->VMEM block streams (no manual cp.async equivalent needed).
+
+Grid: (B, Hq, num_q_blocks, num_kv_blocks), KV innermost.
+Block shapes: q/o [1, 1, bq, hd]; k/v [1, 1, bk, hd] (GQA maps q-head h to
+kv-head h // group inside the index map).  VMEM footprint per step:
+(2*bq + 2*bk) * hd * bytes + scratch — ~132 KiB at bq=bk=128, hd=128, bf16,
+comfortably inside the ~16 MiB v5e VMEM budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, q_offset: int,
+                  bq: int, bk: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = q @ k.T                                          # [bq, bk] on the MXU
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < seq_kv
+    if causal:
+        valid = valid & (kpos <= qpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = True):
+    """q [B,Hq,Sq,hd]; k/v [B,Hkv,Skv,hd] -> [B,Hq,Sq,hd].
+
+    Sq/Skv are padded to block multiples by the caller (ops.py)."""
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    assert sq % bq_ == 0 and skv % bk_ == 0
+    grid = (b, hq, sq // bq_, skv // bk_)
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_offset=q_offset,
+        bq=bq_, bk=bk_, seq_kv=skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, hd), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, hd), lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk_, hd), lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, hd), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),    # m: running row max
+            pltpu.VMEM((bq_, 1), jnp.float32),    # l: running row sum
+            pltpu.VMEM((bq_, hd), jnp.float32),   # acc: unnormalised output
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,67 @@
+"""Jitted public wrappers around the Pallas kernels: layout handling,
+padding to block multiples, and dtype plumbing.  ``interpret`` defaults to
+True (CPU validation); on real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_bhcqd
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q [B,S,Hq,hd]; k/v [B,Skv,Hkv,hd] -> [B,S,Hq,hd]."""
+    b, sq, hq, hd = q.shape
+    qb = jnp.moveaxis(q, 2, 1)                    # [B,H,S,hd]
+    kb = jnp.moveaxis(k, 2, 1)
+    vb = jnp.moveaxis(v, 2, 1)
+    bq = min(bq, max(16, 1 << (sq - 1).bit_length()))
+    bk = min(bk, max(16, 1 << (k.shape[1] - 1).bit_length()))
+    qb, pq = _pad_to(qb, 2, bq)
+    kb, pk = _pad_to(kb, 2, bk)
+    vb, _ = _pad_to(vb, 2, bk)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, q_offset=q_offset,
+                               bq=bq, bk=bk, interpret=interpret)
+    out = out[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, h0=None, chunk: int = 128, interpret: bool = True):
+    """Mamba2 SSD. x [b,s,nh,dh]; dt [b,s,nh]; A [nh]; B/C [b,s,ng,ds];
+    h0 [b,nh,dh,ds] or None.  Returns (y [b,s,nh,dh], hT)."""
+    b, s, nh, dh = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    q = min(chunk, max(16, 1 << (s - 1).bit_length()))
+    xp, pad = _pad_to(x, 1, q)
+    dtp, _ = _pad_to(dt, 1, q)         # padded dt=0 -> decay 1, input 0: no-op
+    Bp, _ = _pad_to(B, 1, q)
+    Cp, _ = _pad_to(C, 1, q)
+    nc = xp.shape[1] // q
+    xr = jnp.moveaxis(xp.reshape(b, nc, q, nh, dh), 3, 1)     # [b,nh,nc,q,dh]
+    dtr = jnp.moveaxis(dtp.reshape(b, nc, q, nh), 3, 1)       # [b,nh,nc,q]
+    Br = jnp.moveaxis(Bp.reshape(b, nc, q, ng, ds), 3, 1)     # [b,ng,nc,q,ds]
+    Cr = jnp.moveaxis(Cp.reshape(b, nc, q, ng, ds), 3, 1)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, dh, ds), jnp.float32)
+    y, hT = ssd_scan_bhcqd(xr, dtr, A.astype(jnp.float32), Br, Cr,
+                           h0.astype(jnp.float32), interpret=interpret)
+    y = jnp.moveaxis(y, 1, 3).reshape(b, nc * q, nh, dh)[:, :s]
+    return y, hT

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the tests
+sweep against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    """q [B,S,Hq,hd]; k/v [B,Skv,Hkv,hd] -> [B,S,Hq,hd]; fp32 softmax."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) / np.sqrt(hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool) if not causal else (
+        kpos[None, :] <= qpos[:, None])
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, h0=None):
+    """Token-level recurrence. x [b,s,nh,dh]; dt [b,s,nh]; A [nh];
+    B/C [b,s,ng,ds]. Returns (y [b,s,nh,dh] fp32-accurate, hT)."""
+    b, s, nh, dh = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    rep = nh // ng
+    h = jnp.zeros((b, nh, dh, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        la = dtt * A[None, :]
+        bth = jnp.repeat(bt, rep, axis=1)
+        cth = jnp.repeat(ct, rep, axis=1)
+        u = (xt * dtt[..., None]).astype(jnp.float32)
+        h = jnp.exp(la)[:, :, None, None] * h + u[..., None] * bth[:, :, None, :]
+        y = jnp.einsum("bhdn,bhn->bhd", h, cth.astype(jnp.float32))
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h, (jnp.moveaxis(x, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(B, 1, 0),
+                                    jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def topk_gate_ref(logits, k: int):
+    """Softmax -> top-k -> renormalise. logits [N, E] fp32."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, ids

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation: the SSD "state-space dual" form exposes the intra-chunk term
+as a [Q, Q] masked matmul — MXU food — while the inter-chunk recurrence is a
+tiny [dh, ds] state update.  We put the chunk loop on the innermost grid
+dimension (TPU grids are sequential minor-to-major) and carry the state in
+VMEM scratch, which is exactly the role thread-block-resident shared memory
+plays in the CUDA implementation; BlockSpec streams x/dt/B/C chunk blocks
+HBM->VMEM with automatic double buffering.
+
+Grid: (batch, heads, num_chunks).  Per-step VMEM: x [Q, dh], B/C [Q, ds],
+dt [Q], state [dh, ds] — at Q=128, dh=64, ds=128, fp32: ~0.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref,
+                h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # [Q, dh]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # [Q]
+    A = a_ref[0].astype(jnp.float32)             # scalar (per head)
+    B = b_ref[0, 0, 0].astype(jnp.float32)       # [Q, ds]
+    C = c_ref[0, 0, 0].astype(jnp.float32)       # [Q, ds]
+
+    la = dt * A                                  # [Q], negative
+    L = jnp.cumsum(la)                           # inclusive
+    u = x * dt[:, None]                          # [Q, dh]
+
+    # intra-chunk: y_i += sum_{j<=i} exp(L_i - L_j) (C_i . B_j) u_j
+    g = C @ B.T                                  # [Q, Q] MXU
+    dec = L[:, None] - L[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = iq >= jq
+    m = jnp.where(causal, g, 0.0) * jnp.exp(jnp.where(causal, dec, -jnp.inf))
+    y = m @ u                                    # [Q, dh]
+
+    # inter-chunk: y_i += exp(L_i) C_i h_in
+    h = h_scr[...]                               # [dh, ds]
+    y = y + (jnp.exp(L)[:, None] * C) @ h.T      # [Q, ds] @ [ds, dh]
+
+    # state update: h_out = exp(L_Q) h_in + sum_j exp(L_Q - L_j) u_j B_j^T
+    w = jnp.exp(L[-1] - L)                       # [Q]
+    h_scr[...] = jnp.exp(L[-1]) * h + (u * w[:, None]).T @ B
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hT_ref[0, 0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def ssd_scan_bhcqd(x, dt, A, B, C, h0, *, interpret: bool = True):
+    """x [b, nh, nc, Q, dh]; dt [b, nh, nc, Q]; A [nh];
+    B/C [b, ng, nc, Q, ds] (ng groups, heads map h -> h * ng // nh);
+    h0 [b, nh, dh, ds].  Returns (y like x, hT [b, nh, dh, ds])."""
+    b, nh, nc, q, dh = x.shape
+    ng, ds = B.shape[1], B.shape[4]
+    rep = nh // ng
+    grid = (b, nh, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, dh), lambda bi, h, c: (bi, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bi, h, c: (bi, h, c, 0)),
+            pl.BlockSpec((1,), lambda bi, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, q, ds), lambda bi, h, c: (bi, h // rep, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, ds), lambda bi, h, c: (bi, h // rep, c, 0, 0)),
+            pl.BlockSpec((1, 1, dh, ds), lambda bi, h, c: (bi, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, dh), lambda bi, h, c: (bi, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, dh, ds), lambda bi, h, c: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, nc, q, dh), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, dh, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, h0)
+    return y, hT

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape train_4k [--multi-pod]
+
+Outputs one JSON per cell under benchmarks/results/dryrun/ containing
+memory_analysis, cost_analysis, parsed collective stats and the three
+roofline terms.  Skipped cells (long_500k on full-attention archs) emit a
+JSON with {"skipped": reason} so the table stays complete.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, all_archs, get_arch          # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.launch import roofline as rf                        # noqa: E402
+from repro.train.steps import (build_train, build_serve,       # noqa: E402
+                               abstract_params)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def active_params(spec) -> tuple[int, int]:
+    """(total, active) param counts; active discounts un-routed experts."""
+    cfg = spec.model
+    p = abstract_params(cfg)
+    total = count_params(p)
+    embed = int(np.prod(p["embed"].shape)) if "embed" in p else 0
+    routed_total = 0
+    for kind, n in cfg.segments:
+        if kind in ("moe", "mla_moe"):
+            routed_total += n * cfg.n_routed_experts * 3 * cfg.d_model * cfg.d_expert
+    active = total - embed - routed_total * (1.0 - cfg.moe_top_k / max(cfg.n_routed_experts, 1))
+    return total, int(active)
+
+
+def model_flops(spec, shape) -> float:
+    _, n_active = active_params(spec)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.batch * shape.seq
+    return 2.0 * n_active * shape.batch          # decode: one token per seq
+
+
+def input_specs(arch_id: str, shape_name: str, mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = mesh or make_production_mesh()
+    if shape.kind == "train":
+        built = build_train(spec, mesh, shape)
+    else:
+        built = build_serve(spec, mesh, shape)
+    return built["abstract_inputs"], built
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS_DIR, verbose: bool = True,
+             analysis: str = "extrapolate", suffix: str = "",
+             arch_override=None) -> dict:
+    """analysis='extrapolate': exact roofline terms via incremental-layer
+    extrapolation (see launch/analysis.py) on top of the full scanned
+    compile; 'scanned': raw cost_analysis of the scanned program (undercounts
+    loop bodies — kept for comparison)."""
+    spec = arch_override if arch_override is not None else get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json"
+
+    if shape.name == "long_500k" and not spec.long_context_ok:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "skipped": "full-attention arch: 500k dense prefill/decode is "
+                          "quadratic; see DESIGN.md §Arch-applicability"}
+        out_path.write_text(json.dumps(rec, indent=2))
+        if verbose:
+            print(f"[dryrun] SKIP {arch_id} x {shape_name} ({mesh_name})")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    if shape.kind == "train":
+        built = build_train(spec, mesh, shape)
+    else:
+        built = build_serve(spec, mesh, shape)
+
+    with mesh:
+        lowered = built["fn"].lower(*built["abstract_inputs"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                   if hasattr(mem, k)}
+    except Exception as e:                                    # pragma: no cover
+        mem_rec = {"error": repr(e)}
+    try:
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "bytes accessed output", "optimal_seconds")}
+    except Exception as e:                                    # pragma: no cover
+        cost = {"error": repr(e)}
+
+    hlo = compiled.as_text()
+    mf = model_flops(spec, shape)
+    if analysis == "extrapolate":
+        from repro.launch.analysis import extrapolated_terms, roofline_from_terms
+        terms = extrapolated_terms(spec, shape, mesh)
+        roof = roofline_from_terms(terms, n_chips, mf)
+    else:
+        roof = rf.analyze(cost, hlo, n_chips, mf)
+    total, n_active = active_params(spec)
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "n_chips": n_chips,
+        "params_total": total, "params_active": n_active,
+        "model_flops_global": mf,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "cost_analysis": cost,
+        "sharding_fallbacks": built["fallbacks"],
+        "roofline": {
+            "flops_per_chip": roof.flops,
+            "hbm_bytes_per_chip": roof.hbm_bytes,
+            "ici_wire_bytes": roof.ici_bytes,
+            "dcn_wire_bytes": roof.dcn_bytes,
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "bottleneck": roof.bottleneck,
+            "useful_ratio": roof.useful_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+            "collective_op_counts": roof.op_counts,
+            "collective_op_bytes": roof.op_bytes,
+        },
+    }
+    out_path.write_text(json.dumps(rec, indent=2))
+    if verbose:
+        r = rec["roofline"]
+        print(f"[dryrun] OK {arch_id} x {shape_name} ({mesh_name}) "
+              f"compile={t_compile:.1f}s bottleneck={r['bottleneck']} "
+              f"terms=({r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e})s frac={r['roofline_fraction']:.3f}",
+              flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every arch x shape; single-pod for all + multi-pod pass")
+    ap.add_argument("--multi-pod-all", action="store_true",
+                    help="with --all: also run every cell on the 2-pod mesh")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch_id in sorted(all_archs()):
+            for shape_name in SHAPES:
+                cells.append((arch_id, shape_name, False))
+                if args.multi_pod_all:
+                    cells.append((arch_id, shape_name, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = []
+    for arch_id, shape_name, mp in cells:
+        try:
+            run_cell(arch_id, shape_name, mp, out_dir)
+        except Exception:
+            failures.append((arch_id, shape_name, mp))
+            print(f"[dryrun] FAIL {arch_id} x {shape_name} multi_pod={mp}",
+                  flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}")
+        sys.exit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips ("data", "model").  Multi-pod:
+2 pods x 16 x 16 = 512 chips ("pod", "data", "model") — the pod axis is the
+DCN dimension; gradient all-reduce crosses it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)} — "
+            "run under dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_local_mesh(axes=("data", "model")):
+    """Whatever devices exist, as a 1 x N or N x 1 mesh (tests/examples)."""
+    n = len(jax.devices())
+    shape = (1, n) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,217 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh):
+
+    compute    = HLO_FLOPs_per_chip / 197e12            (v5e bf16 peak)
+    memory     = HLO_bytes_per_chip / 819e9             (HBM bandwidth)
+    collective = wire_bytes_per_chip / 50e9             (ICI per link)
+                 + dcn_wire_bytes_per_chip / 25e9       (pod axis, DCN)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition program
+under SPMD).  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO and sum per-op wire traffic with ring-algorithm factors:
+
+    all-reduce      2 (g-1)/g * bytes
+    all-gather        (g-1)/g * bytes(out)
+    reduce-scatter    (g-1)/g * bytes(in)
+    all-to-all        (g-1)/g * bytes
+    collective-permute          bytes
+
+A group is DCN-crossing when its replica ids span pods (id // 256 differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+DCN_BW = 25e9                # bytes / s / chip (cross-pod)
+CHIPS_PER_POD = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^=]*\)\s*)?[a-z0-9\[\],{}\s]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,{}\s]*\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                             r"(?:T\(([0-9,]+)\))?")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of one HLO type string (may be a tuple)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> List[List[int]]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = list(range(int(math.prod(dims))))
+        perm = m.group(4)
+        if perm:
+            import numpy as np
+            arr = np.arange(int(math.prod(dims))).reshape(dims)
+            arr = np.transpose(arr, [int(x) for x in perm.split(",")])
+            ids = list(arr.reshape(-1))
+        return [ids[i * gsize:(i + 1) * gsize] for i in range(ngroups)]
+    return []
+
+
+# Ops that stay HBM-resident after TPU-style fusion: matrix units, data
+# movement/layout, RNG-free gathers/scatters, fusion boundaries.  Elementwise
+# chains fuse into them on TPU, so counting every op (what XLA-CPU
+# cost_analysis does) overstates HBM traffic by 1-2 orders of magnitude.
+_HBM_OPS = {
+    "dot", "convolution", "fusion", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "transpose",
+    "copy", "pad", "concatenate", "slice", "iota-free-select"
+}
+_OPCODE_RE = re.compile(r"^\s*(?:ROOT\s+)?%\S+\s*=\s*[^=]*?\s([a-z][a-z0-9-]*)\(")
+
+
+def hbm_bytes_fused(hlo_text: str) -> float:
+    """Fusion-aware HBM-traffic estimate: sum operand+result bytes of the
+    _HBM_OPS above plus entry parameters/root (weights read, outputs
+    written); collectives are excluded here (they live in the collective
+    term)."""
+    total = 0.0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if ls == "}":
+            in_entry = False
+            continue
+        m = _OPCODE_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if in_entry and op == "parameter":
+            total += _shape_bytes(line.split("=", 1)[0] + line.split("=", 1)[1].split("parameter")[0])
+            continue
+        if op in _HBM_OPS:
+            total += _shape_bytes(line)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ici_bytes: float = 0.0       # wire bytes per chip over ICI
+    dcn_bytes: float = 0.0       # wire bytes per chip over DCN
+    op_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result type = lhs of '='; operand bytes ~ result bytes for these ops
+        lhs = line.split("=", 1)[0] if "=" in line else line
+        rhs_head = line.split("=", 1)[1] if "=" in line else line
+        bytes_total = _shape_bytes(rhs_head.split("(", 1)[0]) or _shape_bytes(lhs)
+        groups = _parse_groups(line)
+        gsize = max((len(g) for g in groups), default=2)
+        if op == "all-reduce":
+            wire = 2.0 * (gsize - 1) / gsize * bytes_total
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = (gsize - 1) / gsize * bytes_total
+        else:  # collective-permute
+            wire = float(bytes_total)
+            pairs = _SRC_TGT_RE.search(line)
+            groups = []
+            if pairs:
+                groups = [[int(a), int(b)] for a, b in
+                          re.findall(r"\{(\d+),(\d+)\}", pairs.group(1))]
+        crosses = any(len({i // CHIPS_PER_POD for i in g}) > 1 for g in groups)
+        st.op_counts[op] = st.op_counts.get(op, 0) + 1
+        st.op_bytes[op] = st.op_bytes.get(op, 0.0) + wire
+        if crosses:
+            st.dcn_bytes += wire
+        else:
+            st.ici_bytes += wire
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    ici_bytes: float
+    dcn_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6*N_active*D (train) or 2*N_active*tokens
+    useful_ratio: float          # model_flops / hlo_flops_total
+    op_counts: Dict[str, int]
+    op_bytes: Dict[str, float]
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound on step latency."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilisation at the bound: how close the step is to
+        pure-compute at peak on its useful work (the score we hillclimb)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.step_time_s
+
+
+def analyze(cost: dict, hlo_text: str, n_chips: int, model_flops: float,
+            flops_are_global: bool = False, fused_bytes: bool = True) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = hbm_bytes_fused(hlo_text) if fused_bytes else float(cost.get("bytes accessed", 0.0))
+    if flops_are_global:
+        flops /= n_chips
+        hbm /= n_chips
+    st = collective_stats(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = st.ici_bytes / ICI_BW + st.dcn_bytes / DCN_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_per_chip = model_flops / n_chips
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, ici_bytes=st.ici_bytes, dcn_bytes=st.dcn_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf_per_chip,
+        useful_ratio=(mf_per_chip / flops if flops else 0.0),
+        op_counts=st.op_counts, op_bytes=st.op_bytes,
+    )

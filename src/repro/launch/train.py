@@ -1,0 +1,87 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --tiny \
+        --steps 50 --ckpt-dir /tmp/ck
+
+On this CPU container use --tiny (reduced config, local mesh).  On a real
+pod, omit --tiny: the production mesh, shardings and the full config are
+used (the same build the dry-run compiles).  Checkpoint/restart is always
+on; the data pipeline is step-addressed so resume is exact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeSpec, SHAPES
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_production_mesh, make_local_mesh
+from repro.models.transformer import init_params
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.steps import build_train
+from repro.train import checkpoint as ckpt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--shape", default=None, help="production ShapeSpec name")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    if args.tiny:
+        spec = dataclasses.replace(spec, model=spec.tiny)
+        mesh = make_local_mesh()
+        shape = ShapeSpec("cli", "train", seq=args.seq, batch=args.batch)
+    else:
+        mesh = make_production_mesh()
+        shape = SHAPES[args.shape or "train_4k"]
+
+    built = build_train(spec, mesh, shape)
+    cfg = spec.model
+    data = SyntheticLM(DataConfig(cfg.vocab_size, shape.batch, shape.seq, seed=0))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        start, state, _ = ckpt.restore(args.ckpt_dir, {"p": params, "o": opt})
+        params, opt = state["p"], state["o"]
+        start += 1
+        print(f"resumed at step {start}")
+
+    with mesh:
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+            if cfg.frontend == "vision":
+                batch["frontend_embeds"] = jnp.zeros(
+                    (shape.batch, cfg.frontend_tokens, cfg.frontend_dim), cfg.param_dtype)
+            elif cfg.frontend == "audio":
+                batch["frontend_embeds"] = jnp.zeros(
+                    (shape.batch, shape.seq, cfg.frontend_dim), cfg.param_dtype)
+            t0 = time.time()
+            params, opt, metrics = built["fn"](params, opt, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step}: loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"({time.time() - t0:.2f}s)")
+            if args.ckpt_dir and ((step + 1) % args.save_every == 0
+                                  or step == args.steps - 1):
+                ckpt.save(args.ckpt_dir, step, {"p": params, "o": opt})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

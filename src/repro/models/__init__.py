@@ -1,0 +1,5 @@
+from repro.models.transformer import (ModelConfig, init_params, forward,
+                                      logits_fn, lm_loss, make_caches, cache_spec)
+
+__all__ = ["ModelConfig", "init_params", "forward", "logits_fn", "lm_loss",
+           "make_caches", "cache_spec"]

@@ -1,0 +1,282 @@
+"""Attention variants: GQA/MHA/MQA self-attention, MLA (DeepSeek-V2
+multi-head latent attention), and cross-attention (VLM).
+
+Three interchangeable inner implementations, selected by ``impl``:
+
+  * ``naive``     — materialises the [S, S] score matrix (tiny tests only).
+  * ``xla_flash`` — KV-chunked online-softmax scan: O(S*chunk) live memory,
+                    the XLA-compiled stand-in for the Pallas kernel; this is
+                    what the dry-run lowers so prefill_32k fits.
+  * ``pallas``    — the TPU kernel in repro/kernels/flash_attention.py
+                    (interpret=True on CPU).
+
+All paths accept GQA (n_kv <= n_q, n_q % n_kv == 0) and a causal flag, and
+return [B, S, Hq, hd].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention_naive(q, k, v, causal: bool, q_offset=0):
+    """q [B,Sq,Hq,hd], k/v [B,Skv,Hkv,hd]."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    q = q.reshape(b, sq, hkv, hq // hkv, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def attention_xla_flash(q, k, v, causal: bool, q_offset=0, chunk: int = 1024,
+                        unroll: bool = False):
+    """Online-softmax attention, scanning over KV chunks. Numerically matches
+    naive to ~1e-3 in bf16 / 1e-5 in fp32."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = (q.reshape(b, sq, hkv, g, hd) / np.sqrt(hd)).astype(jnp.float32)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb.astype(jnp.float32))
+        valid = kpos[None, :] < skv
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def attend(q, k, v, causal: bool, impl: str = "naive", q_offset=0, chunk: int = 1024,
+           unroll: bool = False):
+    if impl == "naive":
+        return attention_naive(q, k, v, causal, q_offset)
+    if impl == "xla_flash":
+        return attention_xla_flash(q, k, v, causal, q_offset, chunk, unroll)
+    if impl == "pallas":
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    raise ValueError(f"unknown attention impl {impl}")
+
+
+# ----------------------------------------------------------------------
+# Standard (GQA) attention layer
+# ----------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype, scale=1.0 / np.sqrt(hq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def gqa_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    rd = cfg.rotary_dim or hd
+    q = apply_rope(q, positions, cfg.rope_theta, rd)
+    k = apply_rope(k, positions, cfg.rope_theta, rd)
+    return q, k, v
+
+
+def gqa_apply(p, cfg, x, positions, impl, kv_cache=None, cache_pos=None):
+    """Self-attention. If kv_cache=(k,v) [B,Smax,Hkv,hd] is given, new k/v are
+    written at ``cache_pos`` and attention runs over the cache (decode).
+
+    decode_impl == 'flash_decode' + an active mesh context routes the
+    single-token decode through the sequence-sharded KV path
+    (serve/flash_decode.py): O(B*H*hd) wire bytes instead of gathering the
+    cache (the GQA-few-KV-heads collective pathology)."""
+    from repro.sharding.context import current_ctx
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ctx = current_ctx()
+        if (cfg.decode_impl == "flash_decode" and x.shape[1] == 1
+                and ctx is not None and ctx.tp > 1
+                and ck.shape[1] % ctx.tp == 0):
+            from repro.serve.flash_decode import flash_decode_update
+            bs = (ctx.batch_axes if len(ctx.batch_axes) > 1
+                  else (ctx.batch_axes[0] if ctx.batch_axes else None))
+            out, ck, cv = flash_decode_update(
+                q, k, v, ck, cv, cache_pos, mesh=ctx.mesh,
+                axis=ctx.model_axis, batch_spec=bs)
+            new_cache = (ck, cv)
+            b, sflat = x.shape[:2]
+            y = out.reshape(b, sflat, cfg.n_heads * cfg.head_dim) @ p["wo"]
+            return y, new_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        # mask beyond current position handled by causal mask via q_offset
+        out = attend(q, ck, cv, causal=True, impl=impl, q_offset=cache_pos,
+                     chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+        new_cache = (ck, cv)
+    else:
+        out = attend(q, k, v, causal=True, impl=impl,
+                     chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+        new_cache = None
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2).  The KV cache stores only
+# the compressed latent c_kv [kv_lora] + the shared rope key [rope_dim].
+# ----------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dq": dense_init(ks[0], d, ql, dtype),
+        "q_norm": jnp.zeros((ql,), dtype),
+        "w_uq": dense_init(ks[1], ql, h * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[2], d, kl + dr, dtype),
+        "kv_norm": jnp.zeros((kl,), dtype),
+        "w_uk": dense_init(ks[3], kl, h * dn, dtype),
+        "w_uv": dense_init(ks[4], kl, h * dv, dtype),
+        "wo": dense_init(ks[5], h * dv, d, dtype, scale=1.0 / np.sqrt(h * dv)),
+    }
+    return p
+
+
+def mla_apply(p, cfg, x, positions, impl, kv_cache=None, cache_pos=None):
+    """kv_cache = (c_kv [B,Smax,kv_lora], k_rope [B,Smax,rope_dim])."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kl = cfg.kv_lora_rank
+
+    q = rms_norm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]
+    c_kv = rms_norm(dkv[..., :kl], p["kv_norm"])
+    k_rope = apply_rope(dkv[..., None, kl:], positions, cfg.rope_theta)[:, :, 0]
+
+    if kv_cache is not None:
+        cc, cr = kv_cache
+        cc = jax.lax.dynamic_update_slice_in_dim(cc, c_kv.astype(cc.dtype), cache_pos, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cr, k_rope.astype(cr.dtype), cache_pos, 1)
+        c_kv, k_rope = cc, cr
+        new_cache = (cc, cr)
+        q_offset = cache_pos
+    else:
+        new_cache = None
+        q_offset = 0
+
+    skv = c_kv.shape[1]
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, skv, h, dn)
+    vv = (c_kv @ p["w_uv"]).reshape(b, skv, h, dv)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, skv, h, dr))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    # pad v to match head dim for the shared attend() kernels, then slice
+    pad = (dn + dr) - dv
+    v_pad = jnp.pad(vv, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else vv
+    out = attend(q_full, k_full, v_pad, causal=True, impl=impl, q_offset=q_offset,
+                 chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+    out = out[..., :dv]
+    y = out.reshape(b, s, h * dv) @ p["wo"]
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------
+# Cross-attention (VLM layers: queries from text, keys/values from the
+# projected vision embeddings; gated residual as in llama-3.2-vision).
+# ----------------------------------------------------------------------
+
+def cross_init(key, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype, scale=1.0 / np.sqrt(hq * hd)),
+        "q_norm": jnp.zeros((hd,), dtype),
+        "k_norm": jnp.zeros((hd,), dtype),
+        "gate_attn": jnp.zeros((), dtype),
+    }
+
+
+def cross_apply(p, cfg, x, vis, impl):
+    """x [B,S,D] text stream; vis [B,Simg,D] projected patch embeddings."""
+    b, s, _ = x.shape
+    simg = vis.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (vis @ p["wk"]).reshape(b, simg, hkv, hd)
+    v = (vis @ p["wv"]).reshape(b, simg, hkv, hd)
+    q = rms_norm(q, p["q_norm"])
+    k = rms_norm(k, p["k_norm"])
+    out = attend(q, k, v, causal=False, impl=impl, unroll=cfg.scan_unroll)
+    y = out.reshape(b, s, hq * hd) @ p["wo"]
+    return jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(y.dtype) * y

@@ -1,0 +1,99 @@
+"""Primitive layers (pure functions over explicit param dicts).
+
+Parameters are plain pytrees of jnp arrays; every init function takes a PRNG
+key and returns the dict for one layer.  Compute dtype is bf16 by default
+with fp32 accumulation where it matters (norms, softmax, CE); param dtype is
+configurable (fp32 for tiny CPU tests, bf16 for the dry-run memory story).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    std = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return truncated_normal(key, (d_in, d_out), std, dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings (full or partial, NEOX interleaving not used —
+# llama-style half-rotation).
+# ----------------------------------------------------------------------
+
+def rope_freqs(rotary_dim: int, theta: float) -> jnp.ndarray:
+    inv = 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim))
+    return inv  # [rotary_dim // 2]
+
+
+def apply_rope(x, positions, theta: float, rotary_dim: int | None = None):
+    """x: [..., S, H, hd]; positions: [..., S] int32. Rotates the first
+    ``rotary_dim`` features (partial RoPE for stablelm-style configs)."""
+    hd = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else hd
+    inv = rope_freqs(rd, theta)                          # [rd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, rd/2]
+    cos = jnp.cos(ang)[..., None, :]                     # [..., S, 1, rd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), x_pass], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# Gated MLP (SwiGLU) — the dense FFN used by every assigned LM arch.
+# ----------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_in": dense_init(k2, d_model, d_ff, dtype),
+        "w_out": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype):
+    return truncated_normal(key, (vocab, d_model), 1.0 / np.sqrt(d_model), dtype)
+
+
+def embed_apply(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(w, x):
+    """x [.., D] @ w [D, V] -> fp32 logits."""
+    return (x @ w).astype(jnp.float32)

@@ -1,0 +1,192 @@
+"""Mamba2 (state-space duality) block: chunked SSD for train/prefill and the
+O(1) recurrent step for decode.
+
+Math per head (state size ds, head dim dh), discretised:
+    la_t   = dt_t * A                    (A < 0, per head; la = log decay)
+    h_t    = exp(la_t) h_{t-1} + dt_t * x_t B_t^T          [dh, ds]
+    y_t    = h_t C_t + D * x_t
+
+Chunked form over chunks of Q tokens with L = inclusive cumsum(la):
+    y_t = sum_{j<=t} exp(L_t - L_j) (C_t . B_j) dt_j x_j  +  exp(L_t) C_t h_in
+    h_out = sum_j exp(L_Q - L_j) dt_j x_j B_j^T + exp(L_Q) h_in
+
+The intra-chunk term is the "attention-like" matmul the SSD paper exposes;
+it maps onto the MXU and is also implemented as a Pallas kernel
+(repro/kernels/ssd_scan.py) — this jnp version is its oracle and the
+dry-run lowering path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def mamba2_init(key, cfg, dtype):
+    """Projections are kept SEPARATE (w_z/w_x/w_B/w_C/w_dt) rather than one
+    fused in_proj: the per-head tensors (x, z, dt, and the SSD state) then
+    column/row-shard cleanly over the ``model`` axis (tensor parallelism for
+    SSM blocks), while the small group-shared B/C stay replicated.  See
+    sharding/specs.py and EXPERIMENTS.md §Perf (zamba2 hillclimb)."""
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    ng, ds, nh = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    gdim = ng * ds
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[1], d, di, dtype),
+        "w_B": dense_init(ks[2], d, gdim, dtype),
+        "w_C": dense_init(ks[3], d, gdim, dtype),
+        "w_dt": dense_init(ks[4], d, nh, dtype),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_d_conv, di), dtype)
+                   / np.sqrt(cfg.ssm_d_conv)),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B": (jax.random.normal(ks[6], (cfg.ssm_d_conv, gdim), dtype)
+                   / np.sqrt(cfg.ssm_d_conv)),
+        "conv_B_b": jnp.zeros((gdim,), dtype),
+        "conv_C": (jax.random.normal(ks[7], (cfg.ssm_d_conv, gdim), dtype)
+                   / np.sqrt(cfg.ssm_d_conv)),
+        "conv_C_b": jnp.zeros((gdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv over the sequence axis. xbc [B,S,C]; w [K,C].
+    If conv_state [B,K-1,C] is given (decode), returns updated state."""
+    kw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_state = pad[:, -(kw - 1):, :] if kw > 1 else None
+    else:
+        pad = jnp.concatenate([conv_state, xbc], axis=1)
+        new_state = pad[:, -(kw - 1):, :]
+    out = sum(pad[:, i:pad.shape[1] - (kw - 1 - i), :] * w[i] for i in range(kw))
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128, h0=None, unroll: bool = False):
+    """x [b,s,nh,dh]; dt [b,s,nh]; A [nh]; B,C [b,s,ng,ds].
+    Returns (y [b,s,nh,dh], h_final [b,nh,dh,ds])."""
+    b, s, nh, dh = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    rep = nh // ng
+    nch = -(-s // chunk)
+    pad = nch * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xs = x.reshape(b, nch, chunk, nh, dh)
+    dts = dt.reshape(b, nch, chunk, nh)
+    Bs = B.reshape(b, nch, chunk, ng, ds)
+    Cs = C.reshape(b, nch, chunk, ng, ds)
+
+    la = dts * A[None, None, None, :]                    # [b,nc,Q,nh], negative
+    L = jnp.cumsum(la, axis=2)                           # inclusive
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq, lq = inp                        # [b,Q,...]
+        # expand groups to heads
+        bqh = jnp.repeat(bq, rep, axis=2)                # [b,Q,nh,ds]
+        cqh = jnp.repeat(cq, rep, axis=2)
+        u = xq * dtq[..., None]                          # [b,Q,nh,dh]
+        # intra-chunk: scores[i,j] = (C_i . B_j) exp(L_i - L_j), i >= j
+        g = jnp.einsum("bihn,bjhn->bhij", cqh.astype(jnp.float32),
+                       bqh.astype(jnp.float32))
+        dec = lq[:, :, None, :] - lq[:, None, :, :]      # [b,i,j,nh]
+        dec = jnp.transpose(dec, (0, 3, 1, 2))
+        iq = jnp.arange(xq.shape[1])
+        causal = (iq[:, None] >= iq[None, :])[None, None]
+        # mask in log space BEFORE exp: masked entries have dec > 0 and would
+        # overflow, poisoning gradients through the where (0 * inf = nan).
+        dec = jnp.where(causal, dec, -jnp.inf)
+        m = jnp.where(causal, g, 0.0) * jnp.exp(dec)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", m, u.astype(jnp.float32))
+        # inter-chunk: y += exp(L_i) C_i h_in
+        y_inter = jnp.einsum("bihn,bhdn->bihd", cqh.astype(jnp.float32)
+                             * jnp.exp(lq)[..., None].transpose(0, 1, 2, 3),
+                             h)
+        # state update: h_out = exp(L_Q) h_in + sum_j exp(L_Q - L_j) u_j B_j
+        lQ = lq[:, -1, :]                                # [b,nh]
+        w = jnp.exp(lQ[:, None, :] - lq)                 # [b,Q,nh]
+        h_new = (jnp.exp(lQ)[:, :, None, None] * h
+                 + jnp.einsum("bjhd,bjhn->bhdn", (u * w[..., None]).astype(jnp.float32),
+                              bqh.astype(jnp.float32)))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, dh, ds), jnp.float32)
+    hT, ys = jax.lax.scan(chunk_step, h0,
+                          (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dts, 1, 0),
+                           jnp.moveaxis(Bs, 1, 0), jnp.moveaxis(Cs, 1, 0),
+                           jnp.moveaxis(L, 1, 0)), unroll=True if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nch * chunk, nh, dh)[:, :s]
+    return y, hT
+
+
+def ssd_reference(x, dt, A, B, C, h0=None):
+    """Token-by-token recurrence — the semantic ground truth (tests)."""
+    b, s, nh, dh = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    rep = nh // ng
+    h = jnp.zeros((b, nh, dh, ds), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(s):
+        la = dt[:, t] * A[None, :]                       # [b,nh]
+        bt = jnp.repeat(B[:, t], rep, axis=1)            # [b,nh,ds]
+        ct = jnp.repeat(C[:, t], rep, axis=1)
+        u = (x[:, t] * dt[:, t][..., None]).astype(jnp.float32)
+        h = jnp.exp(la)[:, :, None, None] * h + u[..., None] * bt[:, :, None, :]
+        ys.append(jnp.einsum("bhdn,bhn->bhd", h, ct.astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+def mamba2_apply(p, cfg, x, ssm_state=None, conv_state=None, impl: str = "chunked"):
+    """Full block. x [B,S,D].  For decode pass states (S=1).  The conv cache
+    keeps the legacy concat layout [B, K-1, di + 2*ng*ds]."""
+    b, s, d = x.shape
+    di, ng, ds, nh = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    gdim = ng * ds
+    dh = di // nh
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt_raw = x @ p["w_dt"]
+    cs = (None, None, None)
+    if conv_state is not None:
+        cs = (conv_state[..., :di], conv_state[..., di:di + gdim],
+              conv_state[..., di + gdim:])
+    xi, ncx = _causal_conv(xr, p["conv_x"], p["conv_x_b"], cs[0])
+    B, ncb = _causal_conv(Br, p["conv_B"], p["conv_B_b"], cs[1])
+    C, ncc = _causal_conv(Cr, p["conv_C"], p["conv_C_b"], cs[2])
+    new_conv = (None if ncx is None
+                else jnp.concatenate([ncx, ncb, ncc], axis=-1))
+    xi = xi.reshape(b, s, nh, dh)
+    B = B.reshape(b, s, ng, ds)
+    C = C.reshape(b, s, ng, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if impl == "pallas":
+        from repro.kernels.ops import ssd_scan
+        y, hT = ssd_scan(xi, dt, A, B, C, h0=ssm_state)
+    elif s == 1 and ssm_state is not None:
+        y, hT = ssd_reference(xi, dt, A, B, C, h0=ssm_state)
+    else:
+        y, hT = ssd_chunked(xi, dt, A, B, C, chunk=cfg.ssm_chunk, h0=ssm_state,
+                            unroll=cfg.scan_unroll)
+    y = y + p["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = y @ p["out_proj"]
+    return out, hT, new_conv

@@ -1,0 +1,142 @@
+"""Fine-grained mixture-of-experts (DeepSeekMoE-style): ``n_shared`` always-on
+experts + ``n_routed`` routed experts with top-k softmax gating.
+
+Dispatch is the sort-based capacity-bounded grouped-GEMM formulation:
+token replicas are sorted by expert id, packed into an [E, C, D] buffer
+(drop-on-overflow with router-weight priority implicitly by arrival order),
+pushed through batched expert GEMMs, and combined back with gate weights.
+The [E, ...] tensors shard over the ``model`` mesh axis (expert parallelism);
+GSPMD materialises the token exchange as collectives.  An explicit shard_map
+all-to-all variant lives in ``repro/sharding/moe_shardmap.py`` and is used by
+the perf work.
+
+This layer is also where the paper's Model-2 partial hosting plugs in: an
+``expert_mask`` [E] of resident experts (see serve/partial.py) zeroes
+non-resident experts' contributions, exactly "requests routed to missing
+experts go to the cloud".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg, dtype):
+    d, e, fe = cfg.d_model, cfg.n_routed_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        # expert weights stacked on a leading E axis (shards over `model`)
+        "w_gate": (jax.random.normal(ks[1], (e, d, fe), dtype) / np.sqrt(d)).astype(dtype),
+        "w_in": (jax.random.normal(ks[2], (e, d, fe), dtype) / np.sqrt(d)).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (e, fe, d), dtype) / np.sqrt(fe)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * fe, dtype)
+    return p
+
+
+def route(router_w, x_flat, top_k: int):
+    """Returns (weights [N,k], ids [N,k], aux_loss scalar)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    e = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return w, ids, aux
+
+
+def dispatch_compute_combine(p, x_flat, w, ids, capacity: int,
+                             expert_mask=None):
+    """Sort-based grouped expert compute.
+
+    x_flat [N, D]; w/ids [N, k]; returns [N, D].
+    """
+    n, d = x_flat.shape
+    k = ids.shape[1]
+    e = p["w_in"].shape[0]
+    nk = n * k
+
+    e_flat = ids.reshape(nk)
+    tok_flat = jnp.repeat(jnp.arange(n), k)
+    w_flat = w.reshape(nk)
+
+    order = jnp.argsort(e_flat)            # stable
+    se = e_flat[order]
+    st = tok_flat[order]
+    sw = w_flat[order]
+
+    # position of each replica within its expert's group
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(nk) - starts[se]
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity - 1)
+
+    buf = jnp.zeros((e, capacity, d), x_flat.dtype)
+    src = jnp.where(keep[:, None], x_flat[st], 0.0)
+    buf = buf.at[se, pos_c].add(src)       # scatter-add; dropped -> slot C-1 adds 0
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    hi = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    h = jax.nn.silu(h) * hi
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    if expert_mask is not None:
+        out = out * expert_mask[:, None, None].astype(out.dtype)
+
+    gathered = out[se, pos_c]              # [nk, D]
+    contrib = jnp.where(keep[:, None], gathered * sw[:, None].astype(out.dtype), 0.0)
+    y = jnp.zeros((n, d), out.dtype).at[st].add(contrib)
+    return y
+
+
+def moe_apply(p, cfg, x, expert_mask=None, capacity_factor=None):
+    """x [B, S, D] -> [B, S, D] (+ aux loss, edge-serviceable flag per token
+    when an expert_mask is active).
+
+    When a mesh context is active (distributed step builders install one) and
+    the expert count divides the model axis, dispatch runs under shard_map
+    with per-data-shard local sorting and a single psum combine — see
+    repro/sharding/moe_shardmap.py.  Otherwise the single-device sort-based
+    path below is used (tests, small runs)."""
+    from repro.sharding.context import current_ctx
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    w, ids, aux = route(p["router"], x_flat, cfg.moe_top_k)
+    n = b * s
+    ctx = current_ctx()
+    k = cfg.moe_top_k
+    if (ctx is not None and ctx.tp > 1
+            and cfg.n_routed_experts % ctx.tp == 0 and b % ctx.dp == 0):
+        from repro.sharding.moe_shardmap import moe_shardmap_apply
+        y = moe_shardmap_apply(ctx, x, w.reshape(b, s, k), ids.reshape(b, s, k),
+                               p["w_gate"], p["w_in"], p["w_out"],
+                               expert_mask, capacity_factor)
+        y = y.reshape(n, d)
+    else:
+        capacity = int(np.ceil(n * k * capacity_factor / cfg.n_routed_experts))
+        capacity = max(capacity, k)
+        y = dispatch_compute_combine(p, x_flat, w, ids, capacity, expert_mask)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x_flat)
+    served_fully = None
+    if expert_mask is not None:
+        served_fully = jnp.all(expert_mask[ids] > 0, axis=-1).reshape(b, s)
+    return y.reshape(b, s, d), aux, served_fully
+
+
+def expert_popularity(p, x_flat, top_k: int):
+    """Router statistics used to build the Model-2 g(alpha) curve: empirical
+    routing frequency per expert (see core/gcurve.py:moe_expert_gcurve)."""
+    _, ids, _ = route(p["router"], x_flat, top_k)
+    e = p["w_in"].shape[0]
+    return jnp.bincount(ids.reshape(-1), length=e) / ids.size

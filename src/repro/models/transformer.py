@@ -1,0 +1,387 @@
+"""Composable decoder stack.
+
+A model is a sequence of *segments*; each segment is ``(kind, n)`` — n
+structurally-identical layers whose params are stacked on a leading axis and
+executed under ``lax.scan`` (+ optional remat).  Heterogeneous architectures
+(DeepSeek's dense-first-layer, zamba2's shared attention block, the VLM's
+interleaved cross-attention) are just segment lists.
+
+Kinds:
+  dense        pre-norm GQA/MHA/MQA self-attn + pre-norm SwiGLU MLP
+  moe          self-attn + fine-grained MoE (shared + routed top-k)
+  mla_dense    MLA self-attn + MLP
+  mla_moe      MLA self-attn + MoE
+  ssm          Mamba2 block
+  cross        gated cross-attn (to vision/audio stream) + MLP
+  shared_ref   one application of the model-level weight-tied attn+MLP block
+               (zamba2); params live at params["shared_block"], but each
+               occurrence keeps its own KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (embed_init, embed_apply, mlp_init, mlp_apply,
+                                 rms_norm, dense_init, unembed_apply)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    segments: Tuple[Tuple[str, int], ...]
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rotary_dim: int = 0                  # 0 -> full head dim
+    # MLA
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    mla_nope_dim: int = 128
+    mla_rope_dim: int = 64
+    mla_v_dim: int = 128
+    # MoE
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 128
+    # frontends (stubs; see DESIGN.md)
+    frontend: Optional[str] = None       # None | "vision" | "audio"
+    frontend_dim: int = 0                # raw embedding dim from the stub
+    frontend_tokens: int = 0             # img patches / audio frames
+    # numerics / lowering
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_impl: str = "xla_flash"
+    attn_chunk: int = 1024
+    moe_capacity_factor: float = 1.25
+    loss_chunk: int = 512
+    tie_embeddings: bool = False
+    # analysis mode: lower loop-free so compiled.cost_analysis() counts every
+    # iteration (XLA prices a while body once) — see launch/dryrun.py
+    scan_unroll: bool = False
+    remat_policy: str = "full"           # full | dots (save dot outputs)
+    decode_impl: str = "auto"            # auto | flash_decode (seq-sharded KV)
+    fsdp_experts: bool = False           # shard expert F-dim over data (FSDP)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def n_layers(self) -> int:
+        return sum(n for _, n in self.segments)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Param init
+# ----------------------------------------------------------------------
+
+def _layer_init(kind: str, key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "moe"):
+        p = {"norm_attn": jnp.zeros((d,), dtype),
+             "attn": attn_mod.gqa_init(ks[0], cfg, dtype),
+             "norm_ffn": jnp.zeros((d,), dtype)}
+        p["ffn"] = (moe_mod.moe_init(ks[1], cfg, dtype) if kind == "moe"
+                    else mlp_init(ks[1], d, cfg.d_ff, dtype))
+        return p
+    if kind in ("mla_dense", "mla_moe"):
+        p = {"norm_attn": jnp.zeros((d,), dtype),
+             "attn": attn_mod.mla_init(ks[0], cfg, dtype),
+             "norm_ffn": jnp.zeros((d,), dtype)}
+        p["ffn"] = (moe_mod.moe_init(ks[1], cfg, dtype) if kind == "mla_moe"
+                    else mlp_init(ks[1], d, cfg.d_ff, dtype))
+        return p
+    if kind == "ssm":
+        return {"norm": jnp.zeros((d,), dtype),
+                "mixer": ssm_mod.mamba2_init(ks[0], cfg, dtype)}
+    if kind == "cross":
+        return {"norm_attn": jnp.zeros((d,), dtype),
+                "attn": attn_mod.cross_init(ks[0], cfg, dtype),
+                "norm_ffn": jnp.zeros((d,), dtype),
+                "ffn": mlp_init(ks[1], d, cfg.d_ff, dtype),
+                "gate_ffn": jnp.zeros((), dtype)}
+    if kind == "shared_ref":
+        return {}                        # tied weights at params["shared_block"]
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, len(cfg.segments) + 4)
+    params = {}
+    if cfg.frontend is None or cfg.frontend == "vision":
+        params["embed"] = embed_init(ks[-1], cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = dense_init(ks[-2], cfg.frontend_dim, cfg.d_model, dtype)
+    if any(kind == "shared_ref" for kind, _ in cfg.segments):
+        params["shared_block"] = _layer_init("dense", ks[-3], cfg, dtype)
+    segs = []
+    for i, (kind, n) in enumerate(cfg.segments):
+        if kind == "shared_ref":
+            segs.append({})
+            continue
+        layer_keys = jax.random.split(ks[i], n)
+        stacked = jax.vmap(lambda k: _layer_init(kind, k, cfg, dtype))(layer_keys)
+        segs.append(stacked)
+    params["segments"] = segs
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[-4], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Layer bodies
+# ----------------------------------------------------------------------
+
+def _apply_attn_layer(kind, p, cfg, x, positions, cache, cache_pos, extras):
+    if kind in ("dense", "moe"):
+        h, new_kv = attn_mod.gqa_apply(p["attn"], cfg,
+                                       rms_norm(x, p["norm_attn"]), positions,
+                                       cfg.attn_impl, cache, cache_pos)
+        x = x + h
+        hin = rms_norm(x, p["norm_ffn"])
+        if kind == "moe":
+            y, aux, _ = moe_mod.moe_apply(p["ffn"], cfg, hin,
+                                          expert_mask=extras.get("expert_mask"),
+                                          capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y, aux = mlp_apply(p["ffn"], hin), 0.0
+        return x + y, new_kv, aux
+    if kind in ("mla_dense", "mla_moe"):
+        h, new_kv = attn_mod.mla_apply(p["attn"], cfg, rms_norm(x, p["norm_attn"]),
+                                       positions, cfg.attn_impl, cache, cache_pos)
+        x = x + h
+        hin = rms_norm(x, p["norm_ffn"])
+        if kind == "mla_moe":
+            y, aux, _ = moe_mod.moe_apply(p["ffn"], cfg, hin,
+                                          expert_mask=extras.get("expert_mask"),
+                                          capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y, aux = mlp_apply(p["ffn"], hin), 0.0
+        return x + y, new_kv, aux
+    if kind == "ssm":
+        sstate = cache[0] if cache is not None else None
+        cstate = cache[1] if cache is not None else None
+        y, hT, new_conv = ssm_mod.mamba2_apply(p["mixer"], cfg, rms_norm(x, p["norm"]),
+                                               ssm_state=sstate, conv_state=cstate)
+        new_cache = (hT, new_conv) if cache is not None else None
+        return x + y, new_cache, 0.0
+    if kind == "cross":
+        vis = extras["frontend_embeds"]
+        h = attn_mod.cross_apply(p["attn"], cfg,
+                                 rms_norm(x, p["norm_attn"]), vis, cfg.attn_impl)
+        x = x + h
+        y = mlp_apply(p["ffn"], rms_norm(x, p["norm_ffn"]))
+        gate = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(y.dtype)
+        return x + gate * y, None, 0.0
+    raise ValueError(kind)
+
+
+def _segment_forward(kind, seg_params, cfg, x, positions, seg_cache, cache_pos, extras):
+    """Scan over one segment's stacked layers."""
+    if kind == "shared_ref":
+        p = extras["shared_block"]
+        x, new_kv, aux = _apply_attn_layer("dense", p, cfg, x, positions,
+                                           seg_cache, cache_pos, extras)
+        return x, new_kv, aux
+
+    def body(carry, inp):
+        xc, aux_acc = carry
+        p, cache_l = inp
+        fn = lambda xx: _apply_attn_layer(kind, p, cfg, xx, positions,
+                                          cache_l, cache_pos, extras)
+        if cfg.remat:
+            pol = (jax.checkpoint_policies.checkpoint_dots
+                   if cfg.remat_policy == "dots" else None)
+            fn = jax.checkpoint(fn, prevent_cse=False, policy=pol)
+        xc, new_cache, aux = fn(xc)
+        return (xc, aux_acc + jnp.float32(aux)), new_cache
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        (seg_params, seg_cache),
+                                        unroll=True if cfg.scan_unroll else 1)
+    return x, new_caches, aux
+
+
+def forward(params, cfg: ModelConfig, batch, caches=None, cache_pos=None,
+            n_segments: int | None = None):
+    """Run the stack.
+
+    batch: dict with "tokens" [B,S] (and for frontends "frontend_embeds"
+    [B, Nf, frontend_dim]); for audio the tokens are EnCodec codes and the
+    frontend embeds are *added* at the input (stub), for vision they feed the
+    cross-attn layers.
+    caches: pytree matching ``make_caches`` (None = training/prefill-nocache).
+    n_segments: truncate the stack (partial-hosting layer-prefix plans).
+
+    Returns (hidden [B,S,D], new_caches, aux_losses).
+    """
+    dtype = cfg.compute_dtype
+    extras = {}
+    if "expert_mask" in batch:
+        extras["expert_mask"] = batch["expert_mask"]
+    if cfg.frontend is not None:
+        fe = batch["frontend_embeds"].astype(dtype) @ params["frontend_proj"]
+        extras["frontend_embeds"] = fe
+    if "tokens" in batch and "embed" in params:
+        x = embed_apply(params["embed"], batch["tokens"]).astype(dtype)
+        if cfg.frontend == "audio":
+            x = x + extras["frontend_embeds"][:, :x.shape[1], :]
+    else:  # pure-embedding input (audio stub without codes)
+        x = extras["frontend_embeds"]
+    if "shared_block" in params:
+        extras["shared_block"] = params["shared_block"]
+
+    b, s = x.shape[:2]
+    if cache_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    else:
+        positions = cache_pos + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    segs = cfg.segments if n_segments is None else cfg.segments[:n_segments]
+    new_caches = []
+    aux_total = 0.0
+    for i, (kind, n) in enumerate(segs):
+        seg_cache = caches[i] if caches is not None else (
+            None if kind == "shared_ref" else _none_cache(kind, n))
+        x, ncache, aux = _segment_forward(kind, params["segments"][i], cfg, x,
+                                          positions, seg_cache,
+                                          cache_pos if cache_pos is not None else 0,
+                                          extras)
+        new_caches.append(ncache)
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"])
+    return x, new_caches, aux_total
+
+
+def _none_cache(kind, n):
+    return None
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return unembed_apply(w, hidden)
+
+
+# ----------------------------------------------------------------------
+# Loss (sequence-chunked vocab CE so [B,S,V] never materialises)
+# ----------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels, mask=None):
+    """hidden [B,S,D], labels [B,S] (next-token ids). fp32 CE, chunked on S."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    hc = hidden.reshape(b, n_chunks, chunk, d)
+    lc = labels.reshape(b, n_chunks, chunk)
+    mc = mask.reshape(b, n_chunks, chunk)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h, l, m = inp                                    # [b,chunk,*]
+        logits = unembed_apply(w, h)                     # fp32 [b,chunk,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0)),
+        unroll=True if cfg.scan_unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ----------------------------------------------------------------------
+# KV / state caches
+# ----------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Shapes/dtypes for every segment's cache (used both to allocate and to
+    build ShapeDtypeStructs for the dry-run)."""
+    dt = cfg.compute_dtype
+    hd = cfg.head_dim
+    specs = []
+    for kind, n in cfg.segments:
+        if kind in ("dense", "moe"):
+            specs.append((
+                (n, batch, max_len, cfg.n_kv_heads, hd, dt),   # K
+                (n, batch, max_len, cfg.n_kv_heads, hd, dt),   # V
+            ))
+        elif kind in ("mla_dense", "mla_moe"):
+            specs.append((
+                (n, batch, max_len, cfg.kv_lora_rank, dt),
+                (n, batch, max_len, cfg.mla_rope_dim, dt),
+            ))
+        elif kind == "ssm":
+            di = cfg.ssm_d_inner
+            conv_dim = di + 2 * cfg.ssm_n_groups * cfg.ssm_state
+            specs.append((
+                (n, batch, cfg.ssm_n_heads, di // cfg.ssm_n_heads, cfg.ssm_state,
+                 jnp.float32),
+                (n, batch, cfg.ssm_d_conv - 1, conv_dim, dt),
+            ))
+        elif kind == "shared_ref":
+            specs.append((
+                (batch, max_len, cfg.n_kv_heads, hd, dt),
+                (batch, max_len, cfg.n_kv_heads, hd, dt),
+            ))
+        elif kind == "cross":
+            specs.append(None)      # vision K/V recomputed from static embeds
+        else:
+            raise ValueError(kind)
+    return specs
+
+
+def make_caches(cfg: ModelConfig, batch: int, max_len: int):
+    out = []
+    for spec in cache_spec(cfg, batch, max_len):
+        if spec is None:
+            out.append(None)
+        else:
+            out.append(tuple(jnp.zeros(s[:-1], s[-1]) for s in spec))
+    return out

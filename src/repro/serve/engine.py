@@ -1,0 +1,106 @@
+"""Batched serving engine with plan-aware execution.
+
+The engine owns model params + KV caches and executes whichever
+``HostingPlan`` the controller has made resident:
+
+  * none          -> every request is forwarded (cloud serves; cost 1/req)
+  * layer_prefix  -> run the resident segment prefix + LM head (early-exit
+                     draft); the cloud completes the residual (cost g(a)/req)
+  * expert_subset -> run the full stack with an expert mask; requests whose
+                     routed experts are all resident finish at the edge,
+                     the rest are forwarded (cost 1/req on those — the
+                     engine *measures* the realized fraction, which is the
+                     Model-2 coin flip made physical)
+  * full          -> everything served at the edge (cost 0/req)
+
+This is a single-host engine for the runnable examples/tests (tiny
+configs); the distributed decode path shares the same forward() via
+train/steps.build_serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer import (forward, init_params, logits_fn,
+                                      make_caches)
+from repro.serve.partial import HostingPlan
+
+
+@dataclasses.dataclass
+class SlotServiceResult:
+    n_requests: int
+    served_edge: int          # fully served at the edge
+    served_partial: int       # draft at edge, completed by cloud
+    forwarded: int            # fully cloud-served
+    service_cost: float       # the paper's C_S for this slot
+    edge_tokens: np.ndarray | None = None
+
+
+class ServingEngine:
+    def __init__(self, spec: ArchSpec, params=None, key=None, max_len: int = 64,
+                 use_tiny: bool = True, decode_steps: int = 4):
+        self.spec = spec
+        self.cfg = spec.tiny if use_tiny else spec.model
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else init_params(self.cfg, key)
+        self.max_len = max_len
+        self.decode_steps = decode_steps
+        self._decode = jax.jit(self._decode_fn, static_argnames=("n_segments",))
+
+    # ---- model execution ------------------------------------------------
+    def _decode_fn(self, params, batch, expert_mask, n_segments=None):
+        hidden, _, _ = forward(params, self.cfg, batch
+                               if expert_mask is None else
+                               {**batch, "expert_mask": expert_mask},
+                               n_segments=n_segments)
+        return jnp.argmax(logits_fn(params, self.cfg, hidden)[:, -1], axis=-1)
+
+    def _run_batch(self, prompts: np.ndarray, plan: HostingPlan):
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.frontend == "audio":
+            batch["frontend_embeds"] = jnp.zeros(
+                (prompts.shape[0], prompts.shape[1], self.cfg.frontend_dim),
+                self.cfg.param_dtype)
+        elif self.cfg.frontend == "vision":
+            batch["frontend_embeds"] = jnp.zeros(
+                (prompts.shape[0], self.cfg.frontend_tokens, self.cfg.frontend_dim),
+                self.cfg.param_dtype)
+        mask = (jnp.asarray(plan.expert_mask)
+                if plan.expert_mask is not None else None)
+        n_seg = plan.n_segments if plan.kind == "layer_prefix" else None
+        return np.asarray(self._decode(self.params, batch, mask, n_segments=n_seg))
+
+    # ---- the slot-level service contract --------------------------------
+    def serve_slot(self, prompts: Optional[np.ndarray], plan: HostingPlan,
+                   rng: np.random.Generator) -> SlotServiceResult:
+        """Serve one scheduler slot's batch under ``plan`` and account the
+        paper's service cost."""
+        n = 0 if prompts is None else len(prompts)
+        if n == 0:
+            return SlotServiceResult(0, 0, 0, 0, 0.0)
+        if plan.kind == "none":
+            return SlotServiceResult(n, 0, 0, n, float(n))
+        if plan.kind == "full":
+            toks = self._run_batch(prompts, plan)
+            return SlotServiceResult(n, n, 0, 0, 0.0, toks)
+        if plan.kind == "layer_prefix":
+            toks = self._run_batch(prompts, plan)   # early-exit draft
+            # Model 1: every request gets a partial answer now; residual
+            # value g(a) per request comes from the cloud.
+            return SlotServiceResult(n, 0, n, 0, plan.g_value * n, toks)
+        if plan.kind == "expert_subset":
+            toks = self._run_batch(prompts, plan)
+            # Model 2 realized: a request finishes at the edge iff all its
+            # routed experts are resident; engine-level measurement uses the
+            # plan's g as the routing-hit probability (coupled draw).
+            hits = rng.random(n) >= plan.g_value
+            served = int(hits.sum())
+            return SlotServiceResult(n, served, 0, n - served,
+                                     float(n - served), toks)
+        raise ValueError(plan.kind)

@@ -1,0 +1,80 @@
+"""Partial-hosting plans: how a hosting level r in {0, alpha, 1} is realised
+for each architecture family (DESIGN.md §4).
+
+Model 1 (layer_prefix): host the first ceil(alpha * n_segments) segments +
+the LM head; the edge produces an early-exit draft (partial response of
+independent value); the cloud completes.  g(alpha) is the residual value
+fraction the cloud must still provide.
+
+Model 2 (expert_subset): host all non-expert weights + the ceil(alpha * E)
+most popular routed experts.  A request is fully edge-servable iff all its
+top-k routed experts are resident — exactly the paper's random-service
+model, with g(alpha) measured from router statistics
+(core.gcurve.moe_expert_gcurve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ArchSpec
+from repro.core.gcurve import moe_expert_gcurve, zipf_popularity
+
+
+@dataclasses.dataclass(frozen=True)
+class HostingPlan:
+    level: float                      # fraction of the service hosted
+    kind: str                         # none | layer_prefix | expert_subset | full
+    n_segments: Optional[int] = None  # layer_prefix: segments resident
+    expert_mask: Optional[np.ndarray] = None   # expert_subset: [E] 0/1
+    bytes_fraction: float = 0.0       # actual fraction of weight bytes resident
+    g_value: float = 1.0              # service cost per request at this level
+
+
+def _expert_bytes_fraction(spec: ArchSpec, n_hosted: int, cfg=None) -> float:
+    cfg = cfg if cfg is not None else spec.model
+    total_expert = 0
+    for kind, n in cfg.segments:
+        if kind in ("moe", "mla_moe"):
+            total_expert += n * cfg.n_routed_experts * 3 * cfg.d_model * cfg.d_expert
+    from repro.train.steps import abstract_params
+    import jax
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract_params(cfg)))
+    frac_expert = total_expert / total
+    return (1.0 - frac_expert) + frac_expert * n_hosted / max(cfg.n_routed_experts, 1)
+
+
+def make_plans(spec: ArchSpec, alpha: Optional[float] = None,
+               popularity: Optional[np.ndarray] = None,
+               top_k_samples: int = 4000, seed: int = 0, model_cfg=None):
+    """Returns {0.0: none-plan, alpha: partial-plan, 1.0: full-plan} and the
+    measured g(alpha).  ``model_cfg`` overrides spec.model (e.g. the engine
+    actually serves the reduced config in CPU tests)."""
+    alpha = alpha if alpha is not None else spec.alpha_default
+    cfg = model_cfg if model_cfg is not None else spec.model
+    plans = {0.0: HostingPlan(level=0.0, kind="none", g_value=1.0),
+             1.0: HostingPlan(level=1.0, kind="full", bytes_fraction=1.0,
+                              g_value=0.0)}
+    if spec.partial_plan == "expert_subset" and cfg.n_routed_experts:
+        e = cfg.n_routed_experts
+        pop = popularity if popularity is not None else zipf_popularity(e, 1.0)
+        n_hosted = int(np.ceil(alpha * e))
+        order = np.argsort(-pop)
+        mask = np.zeros(e, np.float32)
+        mask[order[:n_hosted]] = 1.0
+        _, gs, _ = moe_expert_gcurve(pop, cfg.moe_top_k, [alpha],
+                                     n_samples=top_k_samples, seed=seed)
+        g_alpha = float(gs[0])
+        plans[alpha] = HostingPlan(
+            level=alpha, kind="expert_subset", expert_mask=mask,
+            bytes_fraction=_expert_bytes_fraction(spec, n_hosted, cfg),
+            g_value=g_alpha)
+    else:
+        n_seg = max(1, int(round(alpha * len(cfg.segments))))
+        g_alpha = spec.g_alpha_default
+        plans[alpha] = HostingPlan(
+            level=alpha, kind="layer_prefix", n_segments=n_seg,
+            bytes_fraction=alpha, g_value=g_alpha)
+    return plans, g_alpha

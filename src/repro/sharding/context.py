@@ -1,0 +1,51 @@
+"""Trace-time sharding context.
+
+Model code is mesh-agnostic; distributed paths (shard_map MoE dispatch,
+flash-decode KV sharding) need to know the active mesh + batch axes.  Step
+builders install this context inside the step function body so it is live
+exactly while jit traces the model.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]         # mesh axes the batch dim is sharded over
+    model_axis: Optional[str] = "model"
+
+    @property
+    def tp(self) -> int:
+        if self.model_axis and self.model_axis in self.mesh.shape:
+            return self.mesh.shape[self.model_axis]
+        return 1
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh, batch_axes: Tuple[str, ...], model_axis="model"):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ShardCtx(mesh=mesh, batch_axes=tuple(batch_axes), model_axis=model_axis)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev

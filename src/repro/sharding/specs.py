@@ -1,0 +1,221 @@
+"""Partitioning rules: param tree -> PartitionSpec tree (DP/TP/EP + pod axis).
+
+Strategy (Megatron-style TP + EP over the ``model`` axis, batch over
+``(pod, data)``):
+
+  embed [V, D]           (model, None)   vocab-parallel (falls back to
+                                         (None, model) if V not divisible)
+  lm_head [D, V]         (None, model)
+  attn wq [D, Hq*hd]     (None, model)   column-parallel
+  attn wk/wv [D,Hkv*hd]  (None, model) if divisible else replicated (GQA with
+                                         few KV heads keeps KV per-group)
+  attn wo [Hq*hd, D]     (model, None)   row-parallel (psum after)
+  mlp w_in/w_gate [D,F]  (None, model)
+  mlp w_out [F, D]       (model, None)
+  MoE experts [E, D, F]  (model, None, None)   expert-parallel
+  MoE router [D, E]      replicated
+  MLA down-proj          replicated (small); up-projs column-parallel
+  SSM mixers             replicated (see per-arch notes) — the assigned SSM
+                         archs are small; they run DP-only with the batch
+                         sharded over (data, model) when divisible.
+
+Stacked (scanned) layers get a leading None axis.  Anything not matched is
+replicated.  All rules check divisibility against the actual mesh shape and
+fall back to replication rather than failing — the dry-run prints any
+fallbacks so they are visible in the roofline notes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh, batch: int, allow_model: bool = False) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data[, model]) whose product divides batch —
+    used to shard the batch dim as widely as the shape allows.  ``model``
+    participates only for replicated-param (DP-only) archs."""
+    names = ("pod", "data", "model") if allow_model else ("pod", "data")
+    axes: List[str] = []
+    prod = 1
+    for name in names:
+        if name in mesh.shape and batch % (prod * mesh.shape[name]) == 0:
+            axes.append(name)
+            prod *= mesh.shape[name]
+    return tuple(axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in ("pod", "data") if n in mesh.shape)
+
+
+class ShardingRules:
+    """Resolves a PartitionSpec for every param leaf of a model config."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, replicate_all: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = axis_size(mesh, "model")
+        self.replicate_all = replicate_all
+        self.fallbacks: List[str] = []
+
+    def _div(self, dim: int) -> bool:
+        return self.tp > 1 and dim % self.tp == 0
+
+    def _col(self, shape, stacked, path=""):
+        """Column-parallel: shard last dim over model."""
+        if self.replicate_all or not self._div(shape[-1]):
+            if not self.replicate_all:
+                self.fallbacks.append(f"{path}: out-dim {shape[-1]} !% {self.tp}")
+            return P(*([None] * len(shape)))
+        return P(*([None] * (len(shape) - 1)), "model")
+
+    def _row(self, shape, stacked, path=""):
+        """Row-parallel: shard the first non-stack dim."""
+        i = 1 if stacked else 0
+        if self.replicate_all or not self._div(shape[i]):
+            if not self.replicate_all:
+                self.fallbacks.append(f"{path}: in-dim {shape[i]} !% {self.tp}")
+            return P(*([None] * len(shape)))
+        spec = [None] * len(shape)
+        spec[i] = "model"
+        return P(*spec)
+
+    def spec_for(self, path: str, shape: Tuple[int, ...], stacked: bool) -> P:
+        cfg = self.cfg
+        name = path.split("/")[-1]
+        if self.replicate_all:
+            return P(*([None] * len(shape)))
+        # embeddings
+        if name == "embed":
+            if self._div(shape[0]):
+                return P("model", None)
+            return self._col(shape, False, path)
+        if name == "lm_head":
+            return self._col(shape, False, path)
+        if name == "frontend_proj":
+            return self._col(shape, False, path)
+        # attention
+        if name in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "bq", "bk", "bv"):
+            return self._col(shape, stacked, path)
+        if name == "wo":
+            return self._row(shape, stacked, path)
+        if name in ("w_dq", "w_dkv", "q_norm", "kv_norm", "router"):
+            return P(*([None] * len(shape)))
+        # MoE experts: [.., E, D, F] -> expert-parallel on E; optionally
+        # FSDP-style sharding of the F (w_gate/w_in) or D-in (w_out) dim over
+        # the data axis — GSPMD then all-gathers each layer's expert weights
+        # just-in-time inside the scan (weight-gather FSDP), which is what
+        # lets 236B-scale expert stacks fit 16 GiB chips.
+        if name in ("w_gate", "w_in", "w_out") and len(shape) >= 3 + (1 if stacked else 0):
+            e_dim = 1 if stacked else 0
+            if shape[e_dim] % self.tp == 0 and self.tp > 1:
+                spec = [None] * len(shape)
+                spec[e_dim] = "model"
+                dp = axis_size(self.mesh, "data")
+                if getattr(self.cfg, "fsdp_experts", False) and dp > 1:
+                    f_dim = len(shape) - 1 if name in ("w_gate", "w_in") else len(shape) - 2
+                    if shape[f_dim] % dp == 0:
+                        spec[f_dim] = "data"
+                return P(*spec)
+            self.fallbacks.append(f"{path}: experts {shape[e_dim]} !% {self.tp}")
+            return P(*([None] * len(shape)))
+        # dense MLP
+        if name in ("w_gate", "w_in"):
+            return self._col(shape, stacked, path)
+        if name == "w_out":
+            return self._row(shape, stacked, path)
+        # SSM (split projections): per-head tensors shard over model
+        if name in ("w_z", "w_x", "w_dt", "conv_x", "conv_x_b",
+                    "A_log", "D", "dt_bias", "ssm_norm"):
+            return self._col(shape, stacked, path)
+        if name == "out_proj":
+            return self._row(shape, stacked, path)
+        if name in ("w_B", "w_C", "conv_B", "conv_B_b", "conv_C", "conv_C_b"):
+            return P(*([None] * len(shape)))   # group-shared, small
+        # norms + everything else: replicated
+        return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape, replicate_all=False):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    rules = ShardingRules(cfg, mesh, replicate_all=replicate_all)
+
+    def walk(tree, prefix, stacked):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}", stacked or k == "segments")
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, f"{prefix}/{i}", stacked) for i, v in enumerate(tree)]
+            return type(tree)(out) if isinstance(tree, tuple) else out
+        return rules.spec_for(prefix, tree.shape, stacked)
+
+    # "segments" subtrees are stacked on a leading layer axis; the shared
+    # block and top-level params are not.
+    def walk_top(tree):
+        out = {}
+        for k, v in tree.items():
+            if k == "segments":
+                out[k] = [walk(seg, f"segments/{i}", True) for i, seg in enumerate(v)]
+            elif k == "shared_block":
+                out[k] = walk(v, "shared_block", False)
+            else:
+                out[k] = walk(v, k, False)
+        return out
+
+    specs = walk_top(params_shape)
+    return specs, rules.fallbacks
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, replicate_all=False):
+    """PartitionSpecs for the decode caches (layout from models.cache_spec):
+    batch over (pod, data); heads / latent dim over model when divisible;
+    sequence dim left unsharded here (the flash-decode shard_map path in
+    serve/ owns sequence sharding explicitly)."""
+    tp = 1 if replicate_all else axis_size(mesh, "model")
+    baxes = batch_axes(mesh, batch, allow_model=replicate_all)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def model_if(dim):
+        return "model" if (tp > 1 and dim % tp == 0) else None
+
+    out = []
+    hd = cfg.head_dim
+    seq_shard = getattr(cfg, "decode_impl", "auto") == "flash_decode" and tp > 1
+    for kind, n in cfg.segments:
+        if kind in ("dense", "moe"):
+            if seq_shard:
+                out.append((P(None, b, "model", None, None),
+                            P(None, b, "model", None, None)))
+                continue
+            out.append((P(None, b, None, model_if(cfg.n_kv_heads), None),
+                        P(None, b, None, model_if(cfg.n_kv_heads), None)))
+        elif kind in ("mla_dense", "mla_moe"):
+            out.append((P(None, b, None, model_if(cfg.kv_lora_rank)),
+                        P(None, b, None, None)))
+        elif kind == "ssm":
+            out.append((P(None, b, model_if(cfg.ssm_n_heads), None, None),
+                        P(None, b, None, None)))
+        elif kind == "shared_ref":
+            if seq_shard:
+                out.append((P(b, "model", None, None), P(b, "model", None, None)))
+            else:
+                out.append((P(b, None, model_if(cfg.n_kv_heads), None),
+                            P(b, None, model_if(cfg.n_kv_heads), None)))
+        elif kind == "cross":
+            out.append(None)
+        else:
+            raise ValueError(kind)
+    return out

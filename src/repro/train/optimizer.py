@@ -1,0 +1,105 @@
+"""AdamW with fp32 first/second moments, global-norm clipping, cosine
+schedule, and optional ZeRO-1 (optimizer-state sharding over the data axis).
+
+Pure-function API (no framework dependency):
+
+    state = adamw_init(params)
+    new_params, new_state, metrics = adamw_update(params, grads, state, hp)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def zero1_specs(param_spec_tree, params_shape, mesh: Mesh):
+    """ZeRO-1: shard each fp32 moment over the ``data`` axis along the first
+    dimension that is (a) currently unsharded and (b) divisible — halving+
+    optimizer HBM on every data rank.  Falls back to the param's own spec."""
+    dp = mesh.shape.get("data", 1)
+
+    def one(spec, shp):
+        if dp <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+        flat = [a for s in parts if s is not None
+                for a in (s if isinstance(s, (tuple, list)) else (s,))]
+        if "data" in flat:
+            return spec          # already data-sharded (e.g. FSDP'd experts)
+        for i, (s, dim) in enumerate(zip(parts, shp.shape)):
+            if s is None and dim % dp == 0 and dim >= dp:
+                parts[i] = "data"
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, param_spec_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree, params_shape, mesh, zero1: bool):
+    moment = (zero1_specs(param_spec_tree, params_shape, mesh)
+              if zero1 else param_spec_tree)
+    return {"m": moment, "v": moment, "step": P()}

@@ -1,0 +1,231 @@
+"""train_step / serve-step builders with explicit shardings (pjit).
+
+These are the functions the multi-pod dry-run lowers and the drivers run.
+Everything here is mesh-aware but allocation-free: builders return
+(step_fn, in_shardings, out_shardings, abstract_inputs) so callers can
+either ``jit(...).lower(...)`` (dry-run) or materialise real arrays
+(examples / integration tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.models.transformer import (ModelConfig, forward, init_params,
+                                      lm_loss, logits_fn, make_caches,
+                                      cache_spec)
+from repro.sharding.specs import (param_specs, cache_specs, batch_axes,
+                                  axis_size)
+from repro.sharding.context import shard_ctx
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   opt_state_specs)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicate_params(spec: ArchSpec, mesh: Mesh = None) -> bool:
+    """SSM archs run DP-only (params replicated) when their head/inner dims
+    cannot divide the model axis (mamba2-130m: 24 heads on a 16-wide axis);
+    zamba2 (64 heads, d_inner 4096) tensor-parallelises fine with the split
+    SSM projections."""
+    if spec.family not in ("ssm", "hybrid"):
+        return False
+    cfg = spec.model
+    tp = mesh.shape.get("model", 1) if mesh is not None else 16
+    return (cfg.ssm_n_heads % tp != 0) or (cfg.ssm_d_inner % tp != 0)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int):
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), cfg.param_dtype)
+    elif cfg.frontend == "audio":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.frontend_dim), cfg.param_dtype)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, allow_model: bool):
+    ba = batch_axes(mesh, batch, allow_model=allow_model)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    out = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.frontend is not None:
+        out["frontend_embeds"] = P(b, None, None)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Training
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    aux_weight: float = 0.01):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            hidden, _, aux = forward(p, cfg, batch)
+            loss = lm_loss(p, cfg, hidden, batch["labels"])
+            return loss + aux_weight * aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "aux": aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_train(spec: ArchSpec, mesh: Mesh, shape: ShapeSpec,
+                opt_cfg: AdamWConfig = AdamWConfig(), zero1: bool = True):
+    cfg = spec.model
+    replicate = _replicate_params(spec, mesh)
+    p_shape = abstract_params(cfg)
+    p_spec, fallbacks = param_specs(cfg, mesh, p_shape, replicate_all=replicate)
+    o_shape = jax.eval_shape(adamw_init, p_shape)
+    o_spec = opt_state_specs(p_spec, p_shape, mesh, zero1=zero1)
+    b_struct = batch_struct(cfg, shape.batch, shape.seq)
+    b_spec = batch_specs(cfg, mesh, shape.batch, allow_model=replicate)
+
+    raw_step = make_train_step(cfg, opt_cfg)
+    baxes = batch_axes(mesh, shape.batch, allow_model=replicate)
+    model_axis = None if replicate else "model"
+
+    def step(params, opt_state, batch):
+        with shard_ctx(mesh, baxes, model_axis=model_axis):
+            return raw_step(params, opt_state, batch)
+
+    in_shardings = (_ns(mesh, p_spec), _ns(mesh, o_spec), _ns(mesh, b_spec))
+    out_shardings = (_ns(mesh, p_spec), _ns(mesh, o_spec), None)
+    jitted = jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings,
+                     donate_argnums=(0, 1))
+    return {
+        "fn": jitted,
+        "abstract_inputs": (p_shape, o_shape, b_struct),
+        "param_spec": p_spec, "opt_spec": o_spec, "batch_spec": b_spec,
+        "fallbacks": fallbacks,
+    }
+
+
+# ----------------------------------------------------------------------
+# Serving: prefill (long input, builds caches) and decode (1 token)
+# ----------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, caches):
+        hidden, new_caches, _ = forward(params, cfg, batch, caches=caches,
+                                        cache_pos=jnp.int32(0))
+        logits = logits_fn(params, cfg, hidden[:, -1:, :])
+        return logits[:, 0], new_caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, caches, cache_pos):
+        hidden, new_caches, _ = forward(params, cfg, batch, caches=caches,
+                                        cache_pos=cache_pos)
+        logits = logits_fn(params, cfg, hidden[:, -1:, :])
+        return logits[:, 0], new_caches
+
+    return decode_step
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    out = []
+    for entry in cache_spec(cfg, batch, max_len):
+        if entry is None:
+            out.append(None)
+        else:
+            out.append(tuple(jax.ShapeDtypeStruct(s[:-1], s[-1]) for s in entry))
+    return out
+
+
+def decode_batch_struct(cfg: ModelConfig, batch: int):
+    out = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), cfg.param_dtype)
+    elif cfg.frontend == "audio":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, 1, cfg.frontend_dim), cfg.param_dtype)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, allow_model: bool):
+    ba = batch_axes(mesh, batch, allow_model=allow_model)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    out = {"tokens": P(b, None)}
+    if cfg.frontend is not None:
+        out["frontend_embeds"] = P(b, None, None)
+    return out
+
+
+def build_serve(spec: ArchSpec, mesh: Mesh, shape: ShapeSpec):
+    """shape.kind == "prefill": lower the prefill over shape.seq tokens.
+    shape.kind == "decode": lower one decode step against a shape.seq cache."""
+    cfg = spec.model
+    replicate = _replicate_params(spec, mesh)
+    p_shape = abstract_params(cfg)
+    p_spec, fallbacks = param_specs(cfg, mesh, p_shape, replicate_all=replicate)
+    c_struct = cache_struct(cfg, shape.batch, shape.seq)
+    c_spec = cache_specs(cfg, mesh, shape.batch, replicate_all=replicate)
+
+    def cspec_tree():
+        return [None if s is None else s for s in c_spec]
+
+    if shape.kind == "prefill":
+        b_struct = batch_struct(cfg, shape.batch, shape.seq)
+        del b_struct["labels"]
+        b_spec = batch_specs(cfg, mesh, shape.batch, allow_model=replicate)
+        del b_spec["labels"]
+        raw = make_prefill_step(cfg)
+        baxes = batch_axes(mesh, shape.batch, allow_model=replicate)
+
+        def step(params, batch, caches):
+            with shard_ctx(mesh, baxes, model_axis=None if replicate else "model"):
+                return raw(params, batch, caches)
+
+        in_shardings = (_ns(mesh, p_spec), _ns(mesh, b_spec), _ns(mesh, cspec_tree()))
+        out_shardings = (None, _ns(mesh, cspec_tree()))
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings, donate_argnums=(2,))
+        abstract = (p_shape, b_struct, c_struct)
+    elif shape.kind == "decode":
+        b_struct = decode_batch_struct(cfg, shape.batch)
+        b_spec = decode_batch_specs(cfg, mesh, shape.batch, allow_model=replicate)
+        raw = make_decode_step(cfg)
+        baxes = batch_axes(mesh, shape.batch, allow_model=replicate)
+
+        def step(params, batch, caches, cache_pos):
+            with shard_ctx(mesh, baxes, model_axis=None if replicate else "model"):
+                return raw(params, batch, caches, cache_pos)
+
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        in_shardings = (_ns(mesh, p_spec), _ns(mesh, b_spec),
+                        _ns(mesh, cspec_tree()), None)
+        out_shardings = (None, _ns(mesh, cspec_tree()))
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings, donate_argnums=(2,))
+        abstract = (p_shape, b_struct, c_struct, pos)
+    else:
+        raise ValueError(shape.kind)
+    return {
+        "fn": jitted, "abstract_inputs": abstract,
+        "param_spec": p_spec, "cache_spec": c_spec, "batch_spec": b_spec,
+        "fallbacks": fallbacks,
+    }

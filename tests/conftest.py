@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in a
+# subprocess); make sure nothing leaked into the environment.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

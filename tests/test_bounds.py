@@ -1,0 +1,71 @@
+"""Bound formulas (Theorems 2/4/5) — unit tests."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.costs import HostingCosts
+from repro.core import bounds
+
+
+def test_thm2_optimal_regime():
+    c = HostingCosts.three_level(M=5, alpha=0.5, g_alpha=0.6, c_min=1.0, c_max=2.0)
+    # alpha*c_min + g = 1.1 >= 1 and c_min >= 1 -> optimal
+    assert bounds.thm2_ratio_upper(c) == 1.0
+
+
+def test_thm2_bound_formula():
+    c = HostingCosts.three_level(M=10, alpha=0.4, g_alpha=0.3, c_min=0.2, c_max=1.0)
+    want = 4 + 1 / 10 + max(1 / 10, (1 - 0.3) / (10 * 0.4))
+    assert bounds.thm2_ratio_upper(c) == pytest.approx(want)
+
+
+def test_corollary3_under_assumption6():
+    for alpha in (0.25, 0.5, 0.75):
+        for g in (0.1, 0.4, 0.7):
+            M = max(1.0, (1 - g) / alpha) * 1.01
+            c = HostingCosts.three_level(M, alpha, g, 0.1, 1.0)
+            assert c.assumption6_holds()
+            assert bounds.corollary3_six(c) <= 6.0
+
+
+def test_thm4_cases():
+    # (a) c_min < 1, alpha c_min + g < 1
+    a = HostingCosts.three_level(10, 0.4, 0.3, c_min=0.5, c_max=1.0)
+    assert bounds.thm4_lower(a) > 1.0
+    # (b) c_min < 1, alpha c_min + g >= 1
+    b = HostingCosts.three_level(10, 0.5, 0.9, c_min=0.5, c_max=1.0)
+    assert bounds.thm4_lower(b) > 1.0
+    # (c) c_min >= 1, alpha c_min + g < 1
+    c = HostingCosts.three_level(10, 0.3, 0.2, c_min=1.2, c_max=2.0)
+    assert bounds.thm4_lower(c) > 1.0
+    # trivial regime: both conditions fail -> bound 1 (alpha-RR optimal)
+    d = HostingCosts.three_level(10, 0.5, 0.9, c_min=1.5, c_max=2.0)
+    assert bounds.thm4_lower(d) == 1.0
+    # no-partial bound <= ... also > 1 when c_min < 1
+    assert bounds.thm4_lower_no_partial(a) > 1.0
+
+
+def test_thm5_fqh_positive_and_decay():
+    c = lambda M: HostingCosts.three_level(M, 0.3, 0.5, c_min=0.8, c_max=1.2)
+    # case regions
+    f1 = bounds.f_fn(2.0, 50, 0.9, 1.0, 0.3, 0.5, 0.8, 1.2)
+    q1 = bounds.q_fn(2.0, 50, 1.5, 1.0, 0.3, 0.5, 0.8, 1.2)
+    h1 = bounds.h_fn(2.0, 50, 0.1, 1.0, 0.3, 0.5, 0.8, 1.2)
+    assert f1 > 0 and q1 > 0 and h1 > 0
+    for fn, p in [(bounds.f_fn, 0.9), (bounds.q_fn, 1.5), (bounds.h_fn, 0.1)]:
+        lo = fn(2.0, 400, p, 1.0, 0.3, 0.5, 0.8, 1.2)
+        hi = fn(2.0, 40, p, 1.0, 0.3, 0.5, 0.8, 1.2)
+        assert lo < hi  # Remark 4: decays with M
+    with pytest.raises(ValueError):
+        bounds.f_fn(2.0, 50, 0.1, 1.0, 0.3, 0.5, 0.8, 1.2)  # outside region
+
+
+def test_thm5_sigma_cases_and_lemma14():
+    costs = HostingCosts.three_level(100.0, 0.3, 0.5, c_min=0.8, c_max=1.2)
+    s1 = bounds.thm5_sigma_upper(costs, p=0.9, c=1.0)
+    s2 = bounds.thm5_sigma_upper(costs, p=1.8, c=1.0)
+    s3 = bounds.thm5_sigma_upper(costs, p=0.1, c=1.0)
+    assert all(s >= 1.0 for s in (s1, s2, s3))
+    assert bounds.lemma14_opt_on_per_slot(costs, 0.5, 1.0) == pytest.approx(
+        min(1.0, 0.3 * 1.0 + 0.5 * 0.5, 0.5))

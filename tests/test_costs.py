@@ -1,0 +1,58 @@
+"""Unit tests for the cost model (paper §2.6)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.costs import (HostingCosts, fetch_cost, retro_fetch_cost,
+                              per_slot_cost_matrix, service_cost_model2_coupled)
+
+
+def test_three_level_contract():
+    c = HostingCosts.three_level(M=10, alpha=0.4, g_alpha=0.5)
+    assert c.K == 3 and c.alpha == 0.4 and c.g_alpha == 0.5
+    assert c.partial_is_useful()  # 0.4 + 0.5 < 1
+
+
+def test_invalid_instances_rejected():
+    with pytest.raises(ValueError):
+        HostingCosts(M=10, levels=(0.0, 0.5), g=(1.0, 0.5))  # last level != 1
+    with pytest.raises(ValueError):
+        HostingCosts(M=10, levels=(0.0, 0.6, 0.5, 1.0), g=(1.0, 0.5, 0.4, 0.0))
+    with pytest.raises(ValueError):
+        HostingCosts(M=10, levels=(0.0, 0.5, 1.0), g=(1.0, 1.1, 0.0))  # g increases
+
+
+def test_fetch_cost_only_on_increment():
+    lv = jnp.asarray([0.0, 0.4, 1.0])
+    assert float(fetch_cost(lv, jnp.int32(0), jnp.int32(2), 10.0)) == 10.0
+    assert float(fetch_cost(lv, jnp.int32(0), jnp.int32(1), 10.0)) == pytest.approx(4.0)
+    assert float(fetch_cost(lv, jnp.int32(1), jnp.int32(2), 10.0)) == pytest.approx(6.0)
+    assert float(fetch_cost(lv, jnp.int32(2), jnp.int32(0), 10.0)) == 0.0  # eviction free
+
+
+def test_retro_fetch_uses_absolute_value():
+    lv = jnp.asarray([0.0, 0.4, 1.0])
+    v = retro_fetch_cost(lv, jnp.int32(2), 10.0)
+    assert np.allclose(np.asarray(v), [10.0, 6.0, 0.0])
+
+
+def test_per_slot_cost_matrix_model1():
+    costs = HostingCosts.three_level(M=10, alpha=0.4, g_alpha=0.5)
+    x = jnp.asarray([0, 1, 2])
+    c = jnp.asarray([0.5, 0.5, 1.0])
+    w = np.asarray(per_slot_cost_matrix(costs, x, c))
+    # slot 2 (x=1, c=0.5): levels (0, .4, 1) -> rent (0,.2,.5) + svc (1,.5,0)
+    assert np.allclose(w[1], [1.0, 0.7, 0.5])
+    # slot 3 (x=2, c=1): rent (0,.4,1) + svc (2,1,0)
+    assert np.allclose(w[2], [2.0, 1.4, 1.0])
+
+
+def test_model2_coupling_monotone():
+    g = jnp.asarray([1.0, 0.5, 0.0])
+    u = jnp.asarray([0.1, 0.6, 0.9, 0.4])
+    svc = np.asarray(service_cost_model2_coupled(g, u, jnp.int32(3)))
+    # only first 3 requests live; at level0 all forwarded; higher levels serve more
+    assert svc[0] == 3.0 and svc[2] == 0.0
+    assert svc[0] >= svc[1] >= svc[2]
+    # u=0.1 < 0.5 forwarded at level alpha; u=0.6,0.9 not (0.9 is not live)
+    assert svc[1] == 1.0

@@ -1,0 +1,36 @@
+"""CLI drivers (launch/train.py, launch/serve.py) smoke tests (subprocess,
+tiny configs)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    return out.stdout
+
+
+def test_train_driver_tiny_with_resume(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "llama3.2-3b", "--tiny",
+                "--steps", "6", "--batch", "4", "--seq", "16",
+                "--ckpt-dir", str(tmp_path), "--save-every", "3"])
+    assert "done" in out and "loss=" in out
+    out2 = _run(["repro.launch.train", "--arch", "llama3.2-3b", "--tiny",
+                 "--steps", "8", "--batch", "4", "--seq", "16",
+                 "--ckpt-dir", str(tmp_path), "--save-every", "3"])
+    assert "resumed at step 6" in out2
+
+
+def test_serve_driver_tiny():
+    out = _run(["repro.launch.serve", "--arch", "stablelm-1.6b",
+                "--slots", "40", "--M", "10"])
+    assert "plan=layer_prefix" in out and "cost=" in out

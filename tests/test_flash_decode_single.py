@@ -1,0 +1,42 @@
+"""flash_decode property tests on a single-device mesh (the 8-device variant
+lives in test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.flash_decode import flash_decode, flash_decode_ref
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([8, 32, 64]),
+       st.sampled_from([(4, 4), (4, 2), (8, 1)]), st.integers(0, 2 ** 31 - 1))
+def test_flash_decode_matches_ref(b, s, heads, seed):
+    hq, hkv = heads
+    hd = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    pos = int(jax.random.randint(ks[3], (), 0, s))
+    out = flash_decode(q, k, v, jnp.int32(pos), mesh=_mesh(), axis="model")
+    ref = flash_decode_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_pos_zero_and_last():
+    """Boundary positions: only slot 0 visible; all slots visible."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 32, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 32, 2, 16), jnp.float32)
+    for pos in (0, 31):
+        out = flash_decode(q, k, v, jnp.int32(pos), mesh=_mesh(), axis="model")
+        ref = flash_decode_ref(q, k, v, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)

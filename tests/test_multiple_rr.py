@@ -1,0 +1,54 @@
+"""multiple-RR (K > 3 hosting levels): scan policy == literal Algorithm 1
+generalisation, plus level-grid sanity properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import HostingCosts
+from repro.core.policies import AlphaRR, alpha_rr_literal
+from repro.core.simulator import run_policy
+
+GRID = 1.0 / 8.0
+
+
+@st.composite
+def multi_instances(draw, max_T=30):
+    k_mid = draw(st.integers(2, 3))
+    # strictly increasing dyadic levels in (0,1), non-increasing dyadic g
+    lv_all = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875]
+    mids = sorted(draw(st.permutations(lv_all)).copy()[:k_mid])
+    g_all = sorted([draw(st.sampled_from([0.125, 0.25, 0.375, 0.5, 0.625, 0.75]))
+                    for _ in range(k_mid)], reverse=True)
+    M = draw(st.sampled_from([2.0, 4.0, 8.0]))
+    T = draw(st.integers(4, max_T))
+    x = draw(st.lists(st.integers(0, 1), min_size=T, max_size=T))
+    c = draw(st.lists(st.integers(1, 16).map(lambda k: k * GRID),
+                      min_size=T, max_size=T))
+    costs = HostingCosts(M=M, levels=tuple([0.0] + mids + [1.0]),
+                         g=tuple([1.0] + g_all + [0.0]),
+                         c_min=min(c), c_max=max(c))
+    return costs, np.asarray(x, np.int64), np.asarray(c, np.float64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(multi_instances())
+def test_multiple_rr_scan_matches_literal(inst):
+    costs, x, c = inst
+    r_scan = run_policy(AlphaRR(costs), costs, x, c).r_hist
+    r_lit = alpha_rr_literal(costs, x, c)
+    assert np.array_equal(r_scan, r_lit), (costs.levels, r_scan.tolist(),
+                                           r_lit.tolist())
+
+
+@settings(max_examples=30, deadline=None)
+@given(multi_instances())
+def test_more_levels_never_hurt_much(inst):
+    """Fig 7's qualitative claim at property level: the K-level policy is not
+    dramatically worse than its own 3-level restriction (same alpha grid
+    point), since it could always emulate it modulo hysteresis noise."""
+    costs, x, c = inst
+    multi = run_policy(AlphaRR(costs), costs, x, c).total
+    mid = len(costs.levels) // 2
+    three = HostingCosts.three_level(costs.M, costs.levels[mid], costs.g[mid],
+                                     costs.c_min, costs.c_max)
+    tr = run_policy(AlphaRR(three), three, x, c).total
+    assert multi <= tr * 1.5 + 3 * costs.M, (multi, tr)

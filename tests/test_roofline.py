@@ -1,0 +1,79 @@
+"""Roofline machinery: HLO collective parsing and the incremental-layer
+extrapolation (validated against a true full unroll on a small config)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+import os
+
+import pytest
+
+from repro.launch.roofline import collective_stats, _shape_bytes, _parse_groups
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 32 + 8
+    assert _shape_bytes("s8[1024]") == 1024
+
+
+def test_parse_iota_groups():
+    gs = _parse_groups("replica_groups=[2,4]<=[8], dims")
+    assert len(gs) == 2 and gs[0] == [0, 1, 2, 3]
+
+
+def test_collective_stats_ring_factors():
+    hlo = """
+  %all-reduce.1 = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = bf16[64,64]{1,0} all-gather(bf16[16,64]{1,0} %y), replica_groups=[2,4]<=[8], dimensions={0}
+  %collective-permute.3 = f32[256]{0} collective-permute(f32[256]{0} %z), source_target_pairs={{0,256},{256,0}}
+"""
+    st = collective_stats(hlo)
+    assert st.op_counts == {"all-reduce": 1, "all-gather": 1,
+                            "collective-permute": 1}
+    # all-reduce: 2*(4-1)/4*4096 bytes
+    assert st.op_bytes["all-reduce"] == pytest.approx(2 * 0.75 * 4096)
+    # all-gather: (4-1)/4 * out bytes (64*64*2)
+    assert st.op_bytes["all-gather"] == pytest.approx(0.75 * 64 * 64 * 2)
+    # permute crossing id 256 boundary counts as DCN
+    assert st.dcn_bytes == pytest.approx(1024.0)
+
+
+def test_extrapolation_matches_full_unroll_subprocess():
+    """cost(A) + (L-1)*(cost(B)-cost(A)) == cost(full unroll) for a
+    homogeneous 4-layer model (exactness of the linear model)."""
+    code = textwrap.dedent("""
+    import dataclasses, jax
+    from repro.configs import get_arch
+    from repro.configs.base import ShapeSpec
+    from repro.launch.analysis import extrapolated_terms, _terms_of
+    spec = get_arch('stablelm-1.6b')
+    tiny = spec.tiny.with_(segments=(('dense', 4),), attn_impl='xla_flash',
+                           attn_chunk=8, loss_chunk=8)
+    spec = dataclasses.replace(spec, model=tiny)
+    shape = ShapeSpec('t', 'train', seq=16, batch=8)
+    mesh = jax.make_mesh((2, 4), ('data', 'model'), devices=jax.devices())
+    terms = extrapolated_terms(spec, shape, mesh)
+    full = dataclasses.replace(
+        spec, model=tiny.with_(scan_unroll=True))
+    truth = _terms_of(full, shape, mesh)
+    assert abs(terms['flops'] - truth['flops']) <= 0.02 * max(truth['flops'], 1.0)
+    for key in ('ici', 'dcn'):
+        # XLA merges/dedupes collectives slightly differently at different
+        # layer counts; ~5% slack on wire bytes
+        a, b = terms[key], truth[key]
+        assert abs(a - b) <= 0.07 * max(abs(b), 1.0) + 1e-6, (key, a, b)
+    # bytes: buffer-level accounting differs slightly between programs
+    assert abs(terms['bytes'] - truth['bytes']) <= 0.10 * truth['bytes']
+    print('extrapolation ok', terms['flops'], truth['flops'])
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
