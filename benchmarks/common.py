@@ -1,45 +1,135 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Sweep-style figures now run on the batched engine: every (parameter-grid
+point x Monte-Carlo seed) pair becomes one instance of a stacked
+``HostingGrid`` and the whole sweep is a handful of ``jit(vmap(scan))``
+calls (``batch_policy_suite``), instead of a Python loop of per-instance
+simulations.  ``mc_aggregate`` then collapses the seed axis into
+mean / 95%-CI columns.
+"""
 from __future__ import annotations
 
+import math
 import time
+from collections import OrderedDict
+from typing import Optional, Sequence
 
-import jax
 import numpy as np
 
-from repro.core.costs import HostingCosts
-from repro.core.policies import (AlphaRR, RetroRenting, offline_opt,
-                                 offline_opt_no_partial)
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.policies import AlphaRR, RetroRenting, offline_opt_batch
+from repro.core.simulator import run_policy_batch
 from repro.core import bounds
 
 
-def policy_suite(costs: HostingCosts, x, c, svc=None, include_bounds=True):
-    """Cost-per-slot for the paper's six curves on one instance."""
-    T = len(x)
-    out = {}
+def batch_policy_suite(costs_list: Sequence[HostingCosts], x, c, svc=None,
+                       include_bounds: bool = True):
+    """Cost-per-slot of the paper's curves for B stacked instances.
+
+    Args:
+      costs_list: B per-instance costs (mixed K allowed).
+      x, c: [B, T] (or [T], broadcast) arrivals / rents.
+      svc: optional [B, T, K] realized Model-2 service costs.
+
+    Returns a list of B row dicts with the classic suite keys
+    ('alpha-RR', 'RR', 'alpha-OPT', 'OPT', 'alpha-LB', 'LB'), the alpha-RR
+    level histogram under 'hist', and '_us_per_slot' (batched alpha-RR
+    wall time per simulated slot x instance).
+    """
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    x = np.asarray(x)
+    c = np.asarray(c)
+    xb = np.broadcast_to(x, (B, x.shape[-1]))
+    cb = np.broadcast_to(c, (B, c.shape[-1]))
+    T = xb.shape[1]
+
     t0 = time.time()
-    out["alpha-RR"] = run_policy(AlphaRR(costs), costs, x, c, svc).total / T
-    out["_us_per_slot"] = (time.time() - t0) / T * 1e6
-    rr = RetroRenting(costs)
-    svc2 = None if svc is None else np.asarray(svc)[:, [0, costs.K - 1]]
-    out["RR"] = run_policy(rr, rr.costs, x, c, svc2).total / T
-    aopt = offline_opt(costs, x, c, svc)
-    out["alpha-OPT"] = aopt.cost / T
-    opt = offline_opt_no_partial(costs, x, c, svc)
-    out["OPT"] = opt.cost / T
-    if include_bounds:
-        # the figures' LB curves are the Lemma-14 per-slot lower bounds for
-        # any online policy, evaluated at the empirical arrival/rent means
-        p_hat = float(np.mean(np.asarray(x)))
-        c_hat = float(np.mean(np.asarray(c)))
-        out["alpha-LB"] = bounds.lemma14_opt_on_per_slot(costs, p_hat, c_hat)
-        out["LB"] = min(c_hat, p_hat)
+    ar = run_policy_batch(AlphaRR.batch(grid), grid, xb, cb, svc=svc)
+    us_per_slot = (time.time() - t0) / (B * T) * 1e6
+
+    g2 = grid.restrict_to_endpoints()
+    svc2 = None if svc is None else grid.endpoint_service(np.asarray(svc))
+    rr = run_policy_batch(RetroRenting.batch(grid), g2, xb, cb, svc=svc2)
+    aopt = offline_opt_batch(grid, xb, cb, svc=svc)
+    opt = offline_opt_batch(g2, xb, cb, svc=svc2)
+
+    rows = []
+    for i, costs in enumerate(costs_list):
+        row = {
+            "alpha-RR": ar.total[i] / T,
+            "RR": rr.total[i] / T,
+            "alpha-OPT": aopt.cost[i] / T,
+            "OPT": opt.cost[i] / T,
+            "_us_per_slot": us_per_slot,
+            "hist": ar.level_slots[i][:costs.K].tolist(),
+        }
+        if include_bounds:
+            # the figures' LB curves are the Lemma-14 per-slot lower bounds
+            # for any online policy, at the empirical arrival/rent means
+            p_hat = float(np.mean(xb[i]))
+            c_hat = float(np.mean(cb[i]))
+            row["alpha-LB"] = bounds.lemma14_opt_on_per_slot(costs, p_hat, c_hat)
+            row["LB"] = min(c_hat, p_hat)
+        rows.append(row)
+    return rows
+
+
+def policy_suite(costs: HostingCosts, x, c, svc=None, include_bounds=True):
+    """Cost-per-slot for the paper's six curves on ONE instance (the classic
+    API, now a B=1 batch)."""
+    svc_b = None if svc is None else np.asarray(svc)[None]
+    row = batch_policy_suite([costs], np.asarray(x)[None], np.asarray(c)[None],
+                             svc=svc_b, include_bounds=include_bounds)[0]
+    row.pop("hist")
+    return row
+
+
+# ----------------------------------------------------------------------
+# Monte-Carlo aggregation (the n_seeds axis of the sweep benchmarks).
+# ----------------------------------------------------------------------
+
+# two-sided 97.5% Student-t quantiles by degrees of freedom (n_seeds - 1);
+# the normal 1.96 badly undercovers at the small n_seeds these sweeps use
+_T975 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+         7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228}
+
+
+def _t975(df: int) -> float:
+    if df in _T975:
+        return _T975[df]
+    return 2.04 if df <= 30 else 1.96
+
+
+def mc_aggregate(rows, group_keys: Sequence[str], drop=("seed", "hist")):
+    """Collapse the seed axis: group ``rows`` by ``group_keys`` and replace
+    every numeric value column v with its mean plus a ``v_ci95`` column
+    (t_{.975, n-1} * sem).  Non-numeric / dropped columns keep the first
+    row's value.  'hist' columns (lists) are averaged elementwise."""
+    groups: "OrderedDict[tuple, list]" = OrderedDict()
+    for r in rows:
+        groups.setdefault(tuple(r[k] for k in group_keys), []).append(r)
+    out = []
+    for key, grp in groups.items():
+        agg = dict(zip(group_keys, key))
+        agg["n_seeds"] = len(grp)
+        for col, v0 in grp[0].items():
+            if col in group_keys or col == "seed":
+                continue
+            if col == "hist" and isinstance(v0, list):
+                agg["hist"] = np.mean([g["hist"] for g in grp], axis=0).tolist()
+                continue
+            if isinstance(v0, bool) or not isinstance(v0, (int, float, np.floating, np.integer)):
+                agg[col] = v0
+                continue
+            vals = np.asarray([float(g[col]) for g in grp])
+            agg[col] = float(vals.mean())
+            if col not in drop and not col.startswith("_") and len(vals) > 1:
+                agg[f"{col}_ci95"] = float(
+                    _t975(len(vals) - 1) * vals.std(ddof=1)
+                    / math.sqrt(len(vals)))
+        out.append(agg)
     return out
-
-
-def hosting_histogram(costs: HostingCosts, x, c, svc=None):
-    res = run_policy(AlphaRR(costs), costs, x, c, svc)
-    return res.level_slots
 
 
 def emit(rows, prefix):

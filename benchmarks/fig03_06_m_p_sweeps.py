@@ -1,6 +1,10 @@
 """Figs 3-6: cost per slot vs fetch cost M (Figs 3/4) and vs arrival
 probability p (Figs 5/6), in the alpha+g(alpha)<1 and >=1 regimes.
-Paper values: c=0.35; (alpha, g) = (0.239, 0.380) / (0.5, 0.7)."""
+Paper values: c=0.35; (alpha, g) = (0.239, 0.380) / (0.5, 0.7).
+
+Batched: all (regime x M) and (regime x p) grid points x n_seeds sample
+paths are stacked into one batch; rows are seed-means with 95% CIs.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,37 +12,49 @@ import numpy as np
 
 from repro.core import arrivals, rentcosts
 from repro.core.costs import HostingCosts
-from benchmarks.common import policy_suite
+from benchmarks.common import batch_policy_suite, mc_aggregate
 
 C_MEAN = 0.35
 REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
+MS = [2.0, 5.0, 10.0, 20.0, 40.0]
+PS = [0.15, 0.25, 0.35, 0.45, 0.6, 0.8]
 
 
 def _instance(key, p, T):
     kx, kc = jax.random.split(key)
-    x = arrivals.bernoulli(kx, p, T)
-    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
+    x = np.asarray(arrivals.bernoulli(kx, p, T))
+    c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
     return x, c
 
 
-def run(T=8000, seed=0):
-    rows = []
-    for regime, (alpha, g_alpha) in REGIMES.items():
-        x, c = _instance(jax.random.PRNGKey(seed), 0.42, T)
-        for M in [2.0, 5.0, 10.0, 20.0, 40.0]:
-            costs = HostingCosts.three_level(M, alpha, g_alpha,
-                                             c_min=float(np.min(np.asarray(c))),
-                                             c_max=float(np.max(np.asarray(c))))
-            rows.append({"fig": "3_4", "regime": regime, "M": M, "p": 0.42,
-                         **policy_suite(costs, x, c)})
-        for p in [0.15, 0.25, 0.35, 0.45, 0.6, 0.8]:
-            x2, c2 = _instance(jax.random.PRNGKey(seed + 1), p, T)
-            costs = HostingCosts.three_level(10.0, alpha, g_alpha,
-                                             c_min=float(np.min(np.asarray(c2))),
-                                             c_max=float(np.max(np.asarray(c2))))
-            rows.append({"fig": "5_6", "regime": regime, "M": 10.0, "p": p,
-                         **policy_suite(costs, x2, c2)})
-    return rows
+def run(T=8000, seed=0, n_seeds=4):
+    costs_list, xs, cs, meta = [], [], [], []
+    for s in range(n_seeds):
+        x_m, c_m = _instance(jax.random.PRNGKey(seed + 101 * s), 0.42, T)
+        p_paths = {p: _instance(jax.random.PRNGKey(seed + 101 * s + 1 + i), p, T)
+                   for i, p in enumerate(PS)}
+        for regime, (alpha, g_alpha) in REGIMES.items():
+            for M in MS:
+                costs_list.append(HostingCosts.three_level(
+                    M, alpha, g_alpha, c_min=float(c_m.min()),
+                    c_max=float(c_m.max())))
+                xs.append(x_m)
+                cs.append(c_m)
+                meta.append({"fig": "3_4", "regime": regime, "M": M,
+                             "p": 0.42, "seed": s})
+            for p in PS:
+                x2, c2 = p_paths[p]
+                costs_list.append(HostingCosts.three_level(
+                    10.0, alpha, g_alpha, c_min=float(c2.min()),
+                    c_max=float(c2.max())))
+                xs.append(x2)
+                cs.append(c2)
+                meta.append({"fig": "5_6", "regime": regime, "M": 10.0,
+                             "p": p, "seed": s})
+    suite = batch_policy_suite(costs_list, np.stack(xs), np.stack(cs))
+    rows = [{**m, **{k: v for k, v in r.items() if k != "hist"}}
+            for m, r in zip(meta, suite)]
+    return mc_aggregate(rows, ["fig", "regime", "M", "p"])
 
 
 def check(rows):

@@ -1,42 +1,68 @@
 """Figs 7-8: multiple-RR with extra intermediate levels (alpha, a1, a2) vs
 alpha-RR vs RR, Gilbert-Elliot arrivals (Bern(0.9) in H, Bern(0.1) in L).
-Paper values: alpha=.3 g=.4 | a1=.4 g=.3 | a2=.5 g=.15, c=0.5."""
+Paper values: alpha=.3 g=.4 | a1=.4 g=.3 | a2=.5 g=.15, c=0.5.
+
+Batched: the K=5 (multiple-RR) and K=3 (alpha-RR) instances for every
+(M, seed) pair live in ONE mixed-K ``HostingGrid`` (padded + masked), so a
+single vmapped scan serves both level-grid families; RR runs on the
+endpoint restriction of the same grid.
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
 from repro.core import arrivals, rentcosts
-from repro.core.costs import HostingCosts
+from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.simulator import run_policy
+from repro.core.simulator import run_policy_batch
+from benchmarks.common import mc_aggregate
 
 LEVELS = (0.0, 0.3, 0.4, 0.5, 1.0)
 GS = (1.0, 0.4, 0.3, 0.15, 0.0)
 C_MEAN = 0.5
+MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 
 
-def run(T=8000, seed=0):
+def run(T=8000, seed=0, n_seeds=4):
     ge = arrivals.GilbertElliot(p_hl=0.4, p_lh=0.4, rate_h=0.9, rate_l=0.1,
                                 emission="bernoulli")
-    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
-    x = ge.sample(kx, T)
-    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
-    cmin, cmax = float(np.min(np.asarray(c))), float(np.max(np.asarray(c)))
-    rows = []
-    for M in [2.0, 5.0, 10.0, 20.0, 40.0]:
-        multi = HostingCosts(M=M, levels=LEVELS, g=GS, c_min=cmin, c_max=cmax)
-        three = HostingCosts.three_level(M, 0.3, 0.4, c_min=cmin, c_max=cmax)
-        r_multi = run_policy(AlphaRR(multi), multi, x, c)
-        r_three = run_policy(AlphaRR(three), three, x, c)
-        rr = RetroRenting(three)
-        r_rr = run_policy(rr, rr.costs, x, c)
-        rows.append({"M": M,
-                     "multiple-RR": r_multi.total / T,
-                     "alpha-RR": r_three.total / T,
-                     "RR": r_rr.total / T,
-                     "multi_hist": r_multi.level_slots.tolist()})
-    return rows
+    costs_list, xs, cs, meta = [], [], [], []
+    for s in range(n_seeds):
+        kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
+        x = np.asarray(ge.sample(kx, T))
+        c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
+        cmin, cmax = float(c.min()), float(c.max())
+        for M in MS:
+            for fam, costs in (
+                    ("multiple-RR", HostingCosts(M=M, levels=LEVELS, g=GS,
+                                                 c_min=cmin, c_max=cmax)),
+                    ("alpha-RR", HostingCosts.three_level(M, 0.3, 0.4,
+                                                          c_min=cmin,
+                                                          c_max=cmax))):
+                costs_list.append(costs)
+                xs.append(x)
+                cs.append(c)
+                meta.append({"M": M, "family": fam, "seed": s})
+    grid = HostingGrid.from_costs(costs_list)       # mixed K: 5 and 3
+    x_b, c_b = np.stack(xs), np.stack(cs)
+    multi = run_policy_batch(AlphaRR.batch(grid), grid, x_b, c_b)
+    rr = run_policy_batch(RetroRenting.batch(grid),
+                          grid.restrict_to_endpoints(), x_b, c_b)
+
+    per_seed = {}
+    for i, m in enumerate(meta):
+        row = per_seed.setdefault((m["M"], m["seed"]),
+                                  {"M": m["M"], "seed": m["seed"]})
+        row[m["family"]] = multi.total[i] / T
+        if m["family"] == "multiple-RR":
+            row["RR"] = rr.total[i] / T             # RR only depends on M
+            row["multi_hist"] = multi.level_slots[i][:len(LEVELS)].tolist()
+    rows = [dict(r, hist=r.pop("multi_hist")) for r in per_seed.values()]
+    agg = mc_aggregate(rows, ["M"])
+    for r in agg:
+        r["multi_hist"] = r.pop("hist")
+    return agg
 
 
 def check(rows):

@@ -1,62 +1,87 @@
 """Figs 12-15 (Model 2, Poisson arrivals): hosting-status histograms and
 cost/slot vs fetch cost M for lambda in {2,4,8} (c=4.5, alpha=.3, g=.5), and
-vs rent c for lambda=4, M=40."""
+vs rent c for lambda=4, M=40.
+
+Batched: all (lambda, M) and (c,) grid points x n_seeds realized sample
+paths (arrivals AND the coupled Model-2 service uniforms are redrawn per
+seed) are stacked into one batch; rows are seed-means with 95% CIs.
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
 from repro.core import arrivals, rentcosts
-from repro.core.costs import HostingCosts
+from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core.simulator import model2_service_matrix, run_policy_batch
 from repro.core import bounds
+from benchmarks.common import mc_aggregate
 
 ALPHA, G_ALPHA = 0.30, 0.50
+LAMS = [2.0, 4.0, 8.0]
+M_GRID = [10.0, 20.0, 40.0, 80.0]
+C_GRID = [1.0, 2.0, 3.0, 4.5, 6.0, 8.0, 10.0]
 
 
-def _run_m2(costs, x, c, key):
-    svc = model2_service_matrix(key, costs, x)
-    ar = run_policy(AlphaRR(costs), costs, x, c, svc=svc)
-    rr = RetroRenting(costs)
-    svc2 = np.asarray(svc)[:, [0, costs.K - 1]]
-    rrres = run_policy(rr, rr.costs, x, c, svc=svc2)
-    return ar, rrres
-
-
-def run(T=6000, seed=0):
-    rows = []
+def run(T=6000, seed=0, n_seeds=4):
     key = jax.random.PRNGKey(seed)
-    for lam in [2.0, 4.0, 8.0]:
-        kx, kc, ks = jax.random.split(jax.random.fold_in(key, int(lam)), 3)
-        x = arrivals.poisson(kx, lam, T)
-        c = rentcosts.aws_spot_like(kc, 4.5, T)
-        for M in [10.0, 20.0, 40.0, 80.0]:
-            costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
-                                             c_min=float(np.min(np.asarray(c))),
-                                             c_max=float(np.max(np.asarray(c))))
-            ar, rrres = _run_m2(costs, x, c, ks)
-            rows.append({"fig": "12_14", "lam": lam, "M": M, "c": 4.5,
-                         "alpha-RR": ar.total / T, "RR": rrres.total / T,
-                         "alpha-LB": bounds.lemma14_opt_on_per_slot(costs, lam, 4.5),
-                         "LB": min(4.5, lam),
-                         "hist": ar.level_slots.tolist()})
-    # Fig 15: vs rent c at lam=4, M=40
-    kx, ks = jax.random.split(jax.random.fold_in(key, 99))
-    x = arrivals.poisson(kx, 4.0, T)
-    for cc in [1.0, 2.0, 3.0, 4.5, 6.0, 8.0, 10.0]:
-        kc2 = jax.random.fold_in(key, int(cc * 10))
-        c = rentcosts.aws_spot_like(kc2, cc, T)
-        costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
-                                         c_min=float(np.min(np.asarray(c))),
-                                         c_max=float(np.max(np.asarray(c))))
-        ar, rrres = _run_m2(costs, x, c, ks)
-        rows.append({"fig": "15", "lam": 4.0, "M": 40.0, "c": cc,
-                     "alpha-RR": ar.total / T, "RR": rrres.total / T,
-                     "alpha-LB": bounds.lemma14_opt_on_per_slot(costs, 4.0, cc),
-                     "LB": min(cc, 4.0),
-                     "hist": ar.level_slots.tolist()})
-    return rows
+    costs_list, xs, cs, svcs, meta = [], [], [], [], []
+
+    def add(costs, x, c, svc, **m):
+        costs_list.append(costs)
+        xs.append(x)
+        cs.append(c)
+        svcs.append(np.asarray(svc))
+        meta.append(m)
+
+    for s in range(n_seeds):
+        ks = jax.random.fold_in(key, 7919 * s)
+        for lam in LAMS:
+            kx, kc, ksvc = jax.random.split(jax.random.fold_in(ks, int(lam)), 3)
+            x = np.asarray(arrivals.poisson(kx, lam, T))
+            c = np.asarray(rentcosts.aws_spot_like(kc, 4.5, T))
+            # service realization is per (lam, seed): the same coupled
+            # uniforms score every M (the matrix does not depend on M),
+            # like the paper's common sample path
+            svc = model2_service_matrix(
+                ksvc, HostingCosts.three_level(10.0, ALPHA, G_ALPHA), x)
+            for M in M_GRID:
+                costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
+                                                 c_min=float(c.min()),
+                                                 c_max=float(c.max()))
+                add(costs, x, c, svc, fig="12_14", lam=lam, M=M, c_mean=4.5,
+                    seed=s)
+        # Fig 15: vs rent c at lam=4, M=40
+        kx, ksvc = jax.random.split(jax.random.fold_in(ks, 99))
+        x = np.asarray(arrivals.poisson(kx, 4.0, T))
+        svc = model2_service_matrix(
+            ksvc, HostingCosts.three_level(40.0, ALPHA, G_ALPHA), x)
+        for cc in C_GRID:
+            kc2 = jax.random.fold_in(ks, int(cc * 10))
+            c = np.asarray(rentcosts.aws_spot_like(kc2, cc, T))
+            costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
+                                             c_min=float(c.min()),
+                                             c_max=float(c.max()))
+            add(costs, x, c, svc, fig="15", lam=4.0, M=40.0, c_mean=cc, seed=s)
+
+    grid = HostingGrid.from_costs(costs_list)
+    x_b, c_b = np.stack(xs), np.stack(cs)
+    svc_b = np.stack(svcs)
+    ar = run_policy_batch(AlphaRR.batch(grid), grid, x_b, c_b, svc=svc_b)
+    rr = run_policy_batch(RetroRenting.batch(grid),
+                          grid.restrict_to_endpoints(), x_b, c_b,
+                          svc=grid.endpoint_service(svc_b))
+    rows = []
+    for i, m in enumerate(meta):
+        costs = costs_list[i]
+        rows.append({**m,
+                     "alpha-RR": ar.total[i] / T, "RR": rr.total[i] / T,
+                     "alpha-LB": bounds.lemma14_opt_on_per_slot(
+                         costs, m["lam"], m["c_mean"]),
+                     "LB": min(m["c_mean"], m["lam"]),
+                     "hist": ar.level_slots[i][:costs.K].tolist()})
+    return mc_aggregate(rows, ["fig", "lam", "M", "c_mean"])
 
 
 def check(rows):

@@ -1,13 +1,29 @@
 """Benchmark harness: one module per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig01]
+                                            [--json OUT.json]
 
 Each module exposes run() -> rows and check(rows) -> bool (the figure's
 qualitative claims as assertions).  Output: 'module,status,seconds' summary
-plus per-row CSV lines.
+plus per-row CSV lines.  ``--json OUT.json`` additionally writes a stable
+machine-readable report (schema below) used to track the perf trajectory
+across PRs (BENCH_*.json):
+
+    {
+      "schema_version": 1,
+      "fast": bool,
+      "modules": [{"name", "status", "seconds", "n_rows"}, ...],
+      "throughput": {<name>: {"slots_instances_per_sec", "speedup_vs_loop",
+                              "B", "T"}},
+      "totals": {"seconds", "failures"}
+    }
+
+Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point);
+``--fast`` shrinks both the horizon T and n_seeds for smoke runs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -24,14 +40,24 @@ MODULES = [
     "kernel_bench",
 ]
 
+FAST_T = 1500
+FAST_SEEDS = 2
+
 
 def main() -> None:
     import importlib
+    import inspect
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
+    json_out = None
+    if "--json" in sys.argv:
+        json_out = sys.argv[sys.argv.index("--json") + 1]
     fast = "--fast" in sys.argv
     failures = []
+    report = {"schema_version": 1, "fast": fast, "modules": [],
+              "throughput": {}}
+    t_all = time.time()
     print("module,status,seconds,rows")
     for name in MODULES:
         if only and only not in name:
@@ -39,22 +65,41 @@ def main() -> None:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         try:
-            import inspect
+            params = inspect.signature(mod.run).parameters
             kwargs = {}
-            if fast and "T" in inspect.signature(mod.run).parameters:
-                kwargs["T"] = 1500
+            if fast and "T" in params:
+                kwargs["T"] = FAST_T
+            if fast and "n_seeds" in params:
+                kwargs["n_seeds"] = FAST_SEEDS
             rows = mod.run(**kwargs)
             ok = mod.check(rows)
             status = "ok" if ok else "check-failed"
         except Exception as e:                      # pragma: no cover
             import traceback; traceback.print_exc()
             rows, status = [], f"error:{type(e).__name__}"
+        if not status == "ok":
             failures.append(name)
         dt = time.time() - t0
         print(f"{name},{status},{dt:.1f},{len(rows)}")
         for r in rows:
             kv = ",".join(f"{k}={v}" for k, v in r.items())
             print(f"  {name},{kv}")
+            if isinstance(r, dict) and "speedup_vs_loop" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("batched_slots_instances_per_sec"),
+                    "speedup_vs_loop": r["speedup_vs_loop"],
+                    "B": r.get("B"), "T": r.get("T"),
+                }
+        report["modules"].append({"name": name, "status": status,
+                                  "seconds": round(dt, 2),
+                                  "n_rows": len(rows)})
+    report["totals"] = {"seconds": round(time.time() - t_all, 2),
+                        "failures": len(failures)}
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
     if failures:
         sys.exit(1)
 

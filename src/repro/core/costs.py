@@ -22,8 +22,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def default_float_dtype() -> jnp.dtype:
+    """The float dtype JAX currently promotes Python floats to: float64 when
+    ``jax_enable_x64`` is on, float32 otherwise.  Computed lazily (the flag
+    can be toggled after import) — use this everywhere instead of probing
+    ``jnp.array(0.).dtype`` inline."""
+    return jnp.result_type(float)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,10 +100,10 @@ class HostingCosts:
         return self.g[1]
 
     def levels_arr(self) -> jnp.ndarray:
-        return jnp.asarray(self.levels, dtype=jnp.float64 if jnp.array(0.).dtype == jnp.float64 else jnp.float32)
+        return jnp.asarray(self.levels, dtype=default_float_dtype())
 
     def g_arr(self) -> jnp.ndarray:
-        return jnp.asarray(self.g, dtype=jnp.float64 if jnp.array(0.).dtype == jnp.float64 else jnp.float32)
+        return jnp.asarray(self.g, dtype=default_float_dtype())
 
     # ---- predicates from the paper ------------------------------------
     def partial_is_useful(self) -> bool:
@@ -171,6 +180,102 @@ def service_cost_model2_coupled(g: jnp.ndarray, uniforms: jnp.ndarray, x_t) -> j
     live = (jnp.arange(R) < x_t)[None, :]          # [1, R]
     fwd = uniforms[None, :] < g[:, None]           # [K, R]
     return jnp.sum(jnp.where(live & fwd, 1.0, 0.0), axis=1)
+
+
+# ----------------------------------------------------------------------
+# Stacked array-form instances (the batched engine's input).
+# ----------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HostingGrid:
+    """B hosting instances stacked into arrays, padded to a common K.
+
+    Padding scheme (mixed-K batches): instance ``i`` with ``K_i`` levels
+    occupies columns ``[0, K_i)``; columns ``[K_i, K)`` repeat the top level
+    (``levels=1.0, g=0.0``) and are marked invalid in ``mask``.  Batched
+    policies and the batched DP add a large penalty to invalid columns so a
+    padded column is never selected — valid level *indices* therefore mean
+    the same thing as in the unpadded per-instance run.
+
+    Attributes:
+      M:      [B]    fetch costs.
+      levels: [B, K] hosting levels (padded).
+      g:      [B, K] service costs per level (padded).
+      mask:   [B, K] True on real levels.
+
+    A ``HostingGrid`` is a pytree, so it can be passed through ``jax.jit`` /
+    ``jax.vmap`` directly (vmap over the leading instance axis).
+    """
+
+    M: jnp.ndarray
+    levels: jnp.ndarray
+    g: jnp.ndarray
+    mask: jnp.ndarray
+
+    # ---- pytree protocol ---------------------------------------------
+    def tree_flatten(self):
+        return (self.M, self.levels, self.g, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---- constructors -------------------------------------------------
+    @staticmethod
+    def from_costs(costs_list: Sequence[HostingCosts]) -> "HostingGrid":
+        """Stack a list of per-instance ``HostingCosts``, padding to max K."""
+        if not costs_list:
+            raise ValueError("need at least one instance")
+        dt = default_float_dtype()
+        K = max(cc.K for cc in costs_list)
+        B = len(costs_list)
+        M = np.zeros((B,), np.float64)
+        lv = np.ones((B, K), np.float64)
+        g = np.zeros((B, K), np.float64)
+        mask = np.zeros((B, K), bool)
+        for i, cc in enumerate(costs_list):
+            M[i] = cc.M
+            lv[i, :cc.K] = cc.levels
+            g[i, :cc.K] = cc.g
+            mask[i, :cc.K] = True
+        return HostingGrid(M=jnp.asarray(M, dt), levels=jnp.asarray(lv, dt),
+                           g=jnp.asarray(g, dt), mask=jnp.asarray(mask))
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def B(self) -> int:
+        return self.levels.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.levels.shape[1]
+
+    def k_eff(self) -> jnp.ndarray:
+        """[B] number of real levels per instance."""
+        return jnp.sum(self.mask.astype(jnp.int32), axis=1)
+
+    def top_index(self) -> jnp.ndarray:
+        """[B] index of each instance's real top level (``levels == 1``)."""
+        return self.k_eff() - 1
+
+    def restrict_to_endpoints(self) -> "HostingGrid":
+        """The no-partial-hosting (RetroRenting / OPT) view: levels (0, 1)
+        for every instance, K == 2, nothing padded."""
+        dt = default_float_dtype()
+        B = self.B
+        lv = jnp.tile(jnp.asarray([0.0, 1.0], dt), (B, 1))
+        g = jnp.tile(jnp.asarray([1.0, 0.0], dt), (B, 1))
+        return HostingGrid(M=self.M, levels=lv, g=g,
+                           mask=jnp.ones((B, 2), bool))
+
+    def endpoint_service(self, svc: jnp.ndarray) -> jnp.ndarray:
+        """Gather a stacked [B, T, K] service matrix down to the endpoint
+        levels: [B, T, 2] columns (level 0, top level) — the realized costs a
+        no-partial policy sees on the same sample path."""
+        top = self.top_index()[:, None, None]                     # [B,1,1]
+        hi = jnp.take_along_axis(svc, jnp.broadcast_to(top, svc.shape[:2] + (1,)), axis=2)
+        return jnp.concatenate([svc[:, :, :1], hi], axis=2)
 
 
 def per_slot_cost_matrix(costs: HostingCosts, x: jnp.ndarray, c: jnp.ndarray,

@@ -44,7 +44,11 @@ class HostingController:
         # policy (RetroRenting) rebuilds a 2-level instance internally, and
         # its level indices must not be read against the 3-level grid.
         self.costs = self.policy.costs
-        self.state = self.policy.init()
+        # bind the pure (init_fn, step_fn, params) once: params are pytrees
+        # of arrays built from costs, and rebuilding them every live slot
+        # (as policy.step() would) costs more than the step itself
+        self._fns = self.policy.fns()
+        self.state = self._fns.init_fn(self._fns.params)
         self.slot = 0
         self.records: list[SlotRecord] = []
 
@@ -72,7 +76,7 @@ class HostingController:
         r_prev = self.level_idx
         obs = SlotObs(jnp.int32(x_t), jnp.float32(c_t),
                       jnp.asarray(svc_t), jnp.int32(0))
-        self.state = self.policy.step(self.state, obs)
+        self.state = self._fns.step_fn(self._fns.params, self.state, obs)
         r_next = self.level_idx
         fetch = self.costs.M * max(lv[r_next] - lv[r_prev], 0.0)
         self.records.append(SlotRecord(

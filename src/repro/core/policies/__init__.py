@@ -1,11 +1,20 @@
-from repro.core.policies.base import OnlinePolicy, SlotObs
-from repro.core.policies.alpha_rr import AlphaRR, RetroRenting, alpha_rr_literal
-from repro.core.policies.offline_opt import (offline_opt, offline_opt_no_partial,
-                                             brute_force_opt, OfflineResult)
-from repro.core.policies.baselines import StaticPolicy, MDPPolicy, ABCPolicy, solve_mdp
+from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs
+from repro.core.policies.alpha_rr import (AlphaRR, RetroRenting,
+                                          alpha_rr_literal, alpha_rr_params,
+                                          alpha_rr_grid_params, alpha_rr_init,
+                                          alpha_rr_step)
+from repro.core.policies.offline_opt import (offline_opt, offline_opt_batch,
+                                             offline_opt_no_partial,
+                                             brute_force_opt, OfflineResult,
+                                             BatchOfflineResult)
+from repro.core.policies.baselines import (StaticPolicy, MDPPolicy, ABCPolicy,
+                                           solve_mdp, solve_abc)
 
 __all__ = [
-    "OnlinePolicy", "SlotObs", "AlphaRR", "RetroRenting", "alpha_rr_literal",
-    "offline_opt", "offline_opt_no_partial", "brute_force_opt", "OfflineResult",
-    "StaticPolicy", "MDPPolicy", "ABCPolicy", "solve_mdp",
+    "OnlinePolicy", "PolicyFns", "SlotObs", "AlphaRR", "RetroRenting",
+    "alpha_rr_literal", "alpha_rr_params", "alpha_rr_grid_params",
+    "alpha_rr_init", "alpha_rr_step",
+    "offline_opt", "offline_opt_batch", "offline_opt_no_partial",
+    "brute_force_opt", "OfflineResult", "BatchOfflineResult",
+    "StaticPolicy", "MDPPolicy", "ABCPolicy", "solve_mdp", "solve_abc",
 ]

@@ -1,16 +1,27 @@
 """Policy interface for the slotted hosting simulator.
 
-An *online* policy is a pair of pure functions:
+An *online* policy is, at bottom, a pair of **pure functions** over a pytree
+of array parameters:
 
-    state0 = policy.init()
-    state' = policy.step(state, obs)     # jax-traceable
+    state0 = init_fn(params)
+    state' = step_fn(params, state, obs)     # jax-traceable, no closure state
 
-where ``obs = SlotObs(x, c, svc)`` carries this slot's arrivals, rent cost
-and the per-level service-cost vector (deterministic ``g*x`` for Model 1,
-realized for Model 2), plus an optional side-channel (e.g. Markov state for
-MDP/ABC baselines).  ``state["r"]`` is the index (into ``costs.levels``) of
-the level the policy will hold during the *next* slot.  The simulator runs
-policies under ``jax.lax.scan``.
+where ``obs = SlotObs(x, c, svc, side)`` carries this slot's arrivals, rent
+cost and the per-level service-cost vector (deterministic ``g*x`` for
+Model 1, realized for Model 2), plus an optional side-channel (e.g. Markov
+state for MDP/ABC baselines).  ``state["r"]`` is the index (into the level
+grid) of the level the policy will hold during the *next* slot.
+
+Because ``params`` is a pytree of arrays and both functions are pure, a
+policy family vmaps over the instance axis: stack B per-instance params
+(leading [B] axis on every leaf) and the whole horizon runs as one
+``jit(vmap(scan))`` — see ``simulator.run_policy_batch``.
+
+``OnlinePolicy`` is the thin class wrapper kept for API compatibility: it
+binds ``params`` built from one ``HostingCosts`` and forwards ``init`` /
+``step`` to the pure pair.  Legacy subclasses that override ``init``/``step``
+directly (without defining ``init_fn``/``step_fn``) keep working — the
+simulator falls back to a closure over the bound methods.
 
 Sequence of events in a slot (paper §2.5): arrivals happen and are served at
 the current level; the provider announces the next rent; the policy picks
@@ -18,7 +29,7 @@ the current level; the provider announces the next rent; the policy picks
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax.numpy as jnp
 
@@ -35,8 +46,32 @@ class SlotObs(NamedTuple):
 State = Dict[str, Any]
 
 
+class PolicyFns(NamedTuple):
+    """A policy in pure-function form, ready for scan/vmap.
+
+    ``params`` is a pytree of arrays.  Per-instance shapes give a single
+    simulation; add a leading [B] axis to every leaf (see the ``.batch``
+    classmethods on the concrete policies) and ``run_policy_batch`` vmaps
+    the same ``init_fn``/``step_fn`` over the instance axis.
+    """
+
+    name: str
+    init_fn: Callable[[Any], State]
+    step_fn: Callable[[Any, State, SlotObs], State]
+    params: Any
+
+
 class OnlinePolicy:
-    """Base class; subclasses must be immutable (used inside jit)."""
+    """Thin class wrapper over a pure ``(init_fn, step_fn)`` pair.
+
+    Subclasses define ``init_fn`` / ``step_fn`` as staticmethods plus a
+    ``params`` property; they must stay immutable (used inside jit).
+    """
+
+    #: pure (params) -> state; None means the subclass overrides init()
+    init_fn: Callable[[Any], State] | None = None
+    #: pure (params, state, obs) -> state; None means the subclass overrides step()
+    step_fn: Callable[[Any, State, SlotObs], State] | None = None
 
     def __init__(self, costs: HostingCosts):
         self.costs = costs
@@ -45,8 +80,28 @@ class OnlinePolicy:
     def name(self) -> str:
         return type(self).__name__
 
-    def init(self) -> State:  # pragma: no cover - interface
+    @property
+    def params(self) -> Any:
+        """Pytree of arrays parameterising the pure pair for ``self.costs``."""
         raise NotImplementedError
 
-    def step(self, state: State, obs: SlotObs) -> State:  # pragma: no cover
-        raise NotImplementedError
+    def fns(self) -> PolicyFns:
+        """This policy as a ``PolicyFns`` (falls back to bound methods for
+        legacy subclasses that never defined the pure pair)."""
+        cls = type(self)
+        if cls.init_fn is not None and cls.step_fn is not None:
+            return PolicyFns(self.name, cls.init_fn, cls.step_fn, self.params)
+        return PolicyFns(self.name,
+                         lambda _params: self.init(),
+                         lambda _params, state, obs: self.step(state, obs),
+                         None)
+
+    def init(self) -> State:
+        if type(self).init_fn is None:  # pragma: no cover - interface
+            raise NotImplementedError
+        return type(self).init_fn(self.params)
+
+    def step(self, state: State, obs: SlotObs) -> State:
+        if type(self).step_fn is None:  # pragma: no cover - interface
+            raise NotImplementedError
+        return type(self).step_fn(self.params, state, obs)

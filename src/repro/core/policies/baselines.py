@@ -18,20 +18,42 @@
 
 Both baselines get statistics that alpha-RR never sees — the paper's point
 (Figs 17-22) is that alpha-RR is competitive with them anyway.
+
+All three are pure ``(init_fn, step_fn)`` pairs over array params (a
+stationary decision table for MDP/ABC), so they vmap over a stacked
+``HostingGrid`` via their ``.batch`` classmethods just like ``AlphaRR``.
 """
 from __future__ import annotations
 
 import itertools
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import GilbertElliot
-from repro.core.costs import HostingCosts
-from repro.core.policies.base import OnlinePolicy, SlotObs, State
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs, State
+
+
+# ----------------------------------------------------------------------
+# StaticPolicy
+# ----------------------------------------------------------------------
+
+def static_init(params) -> State:
+    # slot 1 must start at 0 (service initially not hosted); we upgrade
+    # to the target level at the first decision point.
+    return {"r": jnp.asarray(0, jnp.int32)}
+
+
+def static_step(params, state: State, obs: SlotObs) -> State:
+    return {"r": params["level_idx"]}
 
 
 class StaticPolicy(OnlinePolicy):
+    init_fn = staticmethod(static_init)
+    step_fn = staticmethod(static_step)
+
     def __init__(self, costs: HostingCosts, level_idx: int):
         super().__init__(costs)
         self.level_idx = int(level_idx)
@@ -40,14 +62,22 @@ class StaticPolicy(OnlinePolicy):
     def name(self):
         return f"static[{self.costs.levels[self.level_idx]}]"
 
-    def init(self) -> State:
-        # slot 1 must start at 0 (service initially not hosted); we upgrade
-        # to the target level at the first decision point.
-        return {"r": jnp.asarray(0, jnp.int32)}
+    @property
+    def params(self):
+        return {"level_idx": jnp.asarray(self.level_idx, jnp.int32)}
 
-    def step(self, state: State, obs: SlotObs) -> State:
-        return {"r": jnp.asarray(self.level_idx, jnp.int32)}
+    @classmethod
+    def batch(cls, grid: HostingGrid, level_idx) -> PolicyFns:
+        """``level_idx`` is a scalar or a [B] array of per-instance target
+        levels (e.g. ``grid.top_index()`` for always-full on mixed-K grids)."""
+        idx = jnp.broadcast_to(jnp.asarray(level_idx, jnp.int32), (grid.B,))
+        return PolicyFns("static", static_init, static_step,
+                         {"level_idx": idx})
 
+
+# ----------------------------------------------------------------------
+# MDP / ABC: stationary decision tables pi[s, k] -> k'.
+# ----------------------------------------------------------------------
 
 def _expected_svc_rates(costs: HostingCosts, rates: np.ndarray) -> np.ndarray:
     """E[service cost | chain state s, level k] = g_k * rate_s  (Model 1 and
@@ -90,24 +120,78 @@ def solve_mdp(costs: HostingCosts, ge: GilbertElliot, c_mean: float,
     return np.argmin(Q, axis=2)                      # [S, K]
 
 
+def solve_abc(costs: HostingCosts, ge: GilbertElliot, c_mean: float) -> np.ndarray:
+    """ABC's stationary table (see module docstring); returns pi [S, K]."""
+    rates = np.array([ge.rate_l, ge.rate_h])
+    sojourn = np.array([1.0 / max(ge.p_lh, 1e-9), 1.0 / max(ge.p_hl, 1e-9)])
+    lv = np.asarray(costs.levels, np.float64)
+    g = np.asarray(costs.g, np.float64)
+    # score[s, k, k'] of choosing k' at current level k in inferred state s
+    hold = float(c_mean) * lv[None, :] + rates[:, None] * g[None, :]
+    fetch = costs.M * np.maximum(lv[None, :] - lv[:, None], 0.0)
+    score = hold[:, None, :] + fetch[None, :, :] / sojourn[:, None, None]
+    return np.argmin(score, axis=2)                  # [S, K]
+
+
+def _pad_tables(tables: Sequence[np.ndarray], K: int) -> jnp.ndarray:
+    """Stack per-instance [S, K_i] decision tables, padding the level axis.
+    Padded entries map to themselves so they are inert (never reached anyway:
+    the state starts at 0 and valid tables map valid -> valid)."""
+    out = []
+    for pi in tables:
+        S, Ki = pi.shape
+        pad = np.tile(np.arange(K)[None, :], (S, 1))
+        pad[:, :Ki] = pi
+        out.append(pad)
+    return jnp.asarray(np.stack(out), jnp.int32)     # [B, S, K]
+
+
+def table_init(params) -> State:
+    return {"r": jnp.asarray(0, jnp.int32)}
+
+
+def mdp_step(params, state: State, obs: SlotObs) -> State:
+    pi = params["pi"]
+    s = jnp.clip(obs.side, 0, pi.shape[-2] - 1)
+    return {"r": pi[s, state["r"]]}
+
+
+def abc_step(params, state: State, obs: SlotObs) -> State:
+    pi = params["pi"]
+    s_hat = (obs.x.astype(jnp.float32) >= params["x_threshold"]).astype(jnp.int32)
+    return {"r": pi[s_hat, state["r"]]}
+
+
 class MDPPolicy(OnlinePolicy):
     """Plays the precomputed average-cost-optimal stationary policy; observes
     the chain state via ``obs.side`` (0=L, 1=H)."""
+
+    init_fn = staticmethod(table_init)
+    step_fn = staticmethod(mdp_step)
 
     def __init__(self, costs: HostingCosts, ge: GilbertElliot, c_mean: float):
         super().__init__(costs)
         self.pi = jnp.asarray(solve_mdp(costs, ge, c_mean), jnp.int32)  # [S, K]
 
-    def init(self) -> State:
-        return {"r": jnp.asarray(0, jnp.int32)}
+    @property
+    def params(self):
+        return {"pi": self.pi}
 
-    def step(self, state: State, obs: SlotObs) -> State:
-        s = jnp.clip(obs.side, 0, self.pi.shape[0] - 1)
-        return {"r": self.pi[s, state["r"]]}
+    @classmethod
+    def batch(cls, grid: HostingGrid, costs_list: Sequence[HostingCosts],
+              ges: Sequence[GilbertElliot], c_means: Sequence[float]) -> PolicyFns:
+        """Solve each instance's MDP on the host, stack the tables."""
+        tables = [solve_mdp(cc, ge, cm)
+                  for cc, ge, cm in zip(costs_list, ges, c_means)]
+        return PolicyFns("MDP", table_init, mdp_step,
+                         {"pi": _pad_tables(tables, grid.K)})
 
 
 class ABCPolicy(OnlinePolicy):
     """Arrival Based Caching [26] (see module docstring for the reading)."""
+
+    init_fn = staticmethod(table_init)
+    step_fn = staticmethod(abc_step)
 
     def __init__(self, costs: HostingCosts, ge: GilbertElliot, c_mean: float):
         super().__init__(costs)
@@ -115,19 +199,19 @@ class ABCPolicy(OnlinePolicy):
         self.c_mean = float(c_mean)
         # threshold to classify the state from x_t
         self.x_threshold = 0.5 * (ge.rate_h + ge.rate_l)
-        rates = np.array([ge.rate_l, ge.rate_h])
-        sojourn = np.array([1.0 / max(ge.p_lh, 1e-9), 1.0 / max(ge.p_hl, 1e-9)])
-        lv = np.asarray(costs.levels, np.float64)
-        g = np.asarray(costs.g, np.float64)
-        # score[s, k, k'] of choosing k' at current level k in inferred state s
-        hold = self.c_mean * lv[None, :] + rates[:, None] * g[None, :]
-        fetch = costs.M * np.maximum(lv[None, :] - lv[:, None], 0.0)
-        score = hold[:, None, :] + fetch[None, :, :] / sojourn[:, None, None]
-        self.pi = jnp.asarray(np.argmin(score, axis=2), jnp.int32)   # [S, K]
+        self.pi = jnp.asarray(solve_abc(costs, ge, c_mean), jnp.int32)  # [S, K]
 
-    def init(self) -> State:
-        return {"r": jnp.asarray(0, jnp.int32)}
+    @property
+    def params(self):
+        return {"pi": self.pi,
+                "x_threshold": jnp.asarray(self.x_threshold, jnp.float32)}
 
-    def step(self, state: State, obs: SlotObs) -> State:
-        s_hat = (obs.x.astype(jnp.float32) >= self.x_threshold).astype(jnp.int32)
-        return {"r": self.pi[s_hat, state["r"]]}
+    @classmethod
+    def batch(cls, grid: HostingGrid, costs_list: Sequence[HostingCosts],
+              ges: Sequence[GilbertElliot], c_means: Sequence[float]) -> PolicyFns:
+        tables = [solve_abc(cc, ge, cm)
+                  for cc, ge, cm in zip(costs_list, ges, c_means)]
+        thr = jnp.asarray([0.5 * (ge.rate_h + ge.rate_l) for ge in ges],
+                          jnp.float32)
+        return PolicyFns("ABC", table_init, abc_step,
+                         {"pi": _pad_tables(tables, grid.K), "x_threshold": thr})

@@ -3,9 +3,13 @@
 State = level index, K states; transition cost = fetch on increments only
 (eviction free).  ``J_t(k) = min_k' [J_{t-1}(k') + M (lv_k - lv_k')^+] + w_t[k]``
 with ``J_0 = [0, inf, ...]`` (service starts off-edge, like all policies).
-Runs as one lax.scan over the horizon; argmins are emitted so the optimal
-schedule can be backtracked for the hosting-status histograms (Figs 2, 8,
-12-22).
+
+Both passes are ``lax.scan``s: the forward value recursion emits the argmin
+table, and the backtrack is a *reverse* scan over that table (no Python
+loop), so the whole DP jits — and vmaps over a stacked ``HostingGrid``
+(``offline_opt_batch``), with padded levels priced at +inf so mixed-K
+batches stay exact.  Argmins are kept so the optimal schedule feeds the
+hosting-status histograms (Figs 2, 8, 12-22).
 
 ``OPT`` (no partial hosting, the benchmark of [22]) is the same DP on the
 2-level instance. Exhaustive-search cross-checks live in the tests.
@@ -18,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costs import HostingCosts, per_slot_cost_matrix
+from repro.core.costs import (HostingCosts, HostingGrid, default_float_dtype,
+                              per_slot_cost_matrix)
 
 
 def _eval(costs, r_hist, x, c, svc=None):
@@ -35,35 +40,76 @@ class OfflineResult:
     sim: object  # repro.core.simulator.SimResult
 
 
-def offline_opt(costs: HostingCosts, x, c, svc=None) -> OfflineResult:
-    """Exact alpha-OPT over the instance; also returns the argmin schedule."""
-    x = jnp.asarray(x, jnp.int32)
-    c = jnp.asarray(c, jnp.float32)
-    w = per_slot_cost_matrix(costs, x, c, None if svc is None else jnp.asarray(svc))
-    lv = jnp.asarray(costs.levels, jnp.float32)
-    K = costs.K
-    # fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+
-    fetch_mat = costs.M * jnp.maximum(lv[None, :] - lv[:, None], 0.0)
+@dataclasses.dataclass
+class BatchOfflineResult:
+    cost: np.ndarray          # [B]
+    r_hist: np.ndarray        # [B, T]
+    sim: object               # repro.core.simulator.BatchSimResult
 
-    def step(J_prev, w_t):
+
+def _dp_core(M, lv, w):
+    """Forward DP + reverse-scan backtrack for one instance.
+
+    Args: M scalar, lv [K], w [T, K] per-slot holding costs (+inf on padded
+    levels).  Returns (cost scalar, r_hist [T]).
+    """
+    K = lv.shape[-1]
+    # fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+
+    fetch_mat = M * jnp.maximum(lv[None, :] - lv[:, None], 0.0)
+
+    def fwd(J_prev, w_t):
         # trans[k_prev, k_next] = J_prev[k_prev] + fetch
         trans = J_prev[:, None] + fetch_mat
         arg = jnp.argmin(trans, axis=0)          # [K] best predecessor per level
         J = jnp.min(trans, axis=0) + w_t
         return J, arg
 
-    J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
-    J_T, args = jax.lax.scan(step, J0, w)
-    args = np.asarray(args)                       # [T, K]
-    # backtrack
-    T = args.shape[0]
-    r_hist = np.zeros(T, np.int64)
-    k = int(np.argmin(np.asarray(J_T)))
-    for t in range(T - 1, -1, -1):
-        r_hist[t] = k
-        k = int(args[t, k])
+    J0 = jnp.full((K,), jnp.inf, w.dtype).at[0].set(0.0)
+    J_T, args = jax.lax.scan(fwd, J0, w)
+
+    def back(k, arg_t):
+        return arg_t[k], k
+
+    k_T = jnp.argmin(J_T)
+    _, r_hist = jax.lax.scan(back, k_T, args, reverse=True)
+    return jnp.min(J_T), r_hist.astype(jnp.int32)
+
+
+_dp_one = jax.jit(_dp_core)
+_dp_vmapped = jax.jit(jax.vmap(_dp_core))
+
+
+def offline_opt(costs: HostingCosts, x, c, svc=None) -> OfflineResult:
+    """Exact alpha-OPT over the instance; also returns the argmin schedule."""
+    dt = default_float_dtype()
+    x = jnp.asarray(x, jnp.int32)
+    c = jnp.asarray(c, dt)
+    w = per_slot_cost_matrix(costs, x, c, None if svc is None else jnp.asarray(svc))
+    lv = jnp.asarray(costs.levels, jnp.float32)
+    cost, r_hist = _dp_one(jnp.asarray(costs.M, jnp.float32), lv, w)
+    r_hist = np.asarray(r_hist).astype(np.int64)
     sim = _eval(costs, r_hist, x, c, svc)
-    return OfflineResult(cost=float(jnp.min(J_T)), r_hist=r_hist, sim=sim)
+    return OfflineResult(cost=float(cost), r_hist=r_hist, sim=sim)
+
+
+def offline_opt_batch(grid: HostingGrid, x, c, svc=None) -> BatchOfflineResult:
+    """Batched alpha-OPT: the DP + backtrack vmapped over a stacked grid.
+
+    ``x``/``c`` are [T] or [B, T]; ``svc`` optional [B, T, K].  Padded levels
+    of mixed-K grids are priced at +inf, so each instance's schedule uses
+    only its real levels.
+    """
+    from repro.core.simulator import _batch_obs, evaluate_schedule_batch
+    x, c, svc_full, _ = _batch_obs(grid, x, c, svc, None)
+    lv = grid.levels.astype(jnp.float32)
+    rent = c[:, :, None].astype(jnp.float32) * lv[:, None, :]
+    w = rent + svc_full.astype(jnp.float32)                     # [B, T, K]
+    w = jnp.where(grid.mask[:, None, :], w, jnp.inf)
+    cost, r_hist = _dp_vmapped(grid.M.astype(jnp.float32), lv, w)
+    sim = evaluate_schedule_batch(grid, r_hist, x, c, svc)
+    return BatchOfflineResult(cost=np.asarray(cost).astype(np.float64),
+                              r_hist=np.asarray(r_hist).astype(np.int64),
+                              sim=sim)
 
 
 def offline_opt_no_partial(costs: HostingCosts, x, c, svc=None) -> OfflineResult:

@@ -1,4 +1,5 @@
-"""Slotted hosting simulator (jax.lax.scan) + schedule evaluator.
+"""Slotted hosting simulator: one scan per instance, one jit(vmap(scan)) per
+*fleet*.
 
 Conventions (paper §2.5/§2.6):
   * slots are 1..T; ``r_hist[t]`` is the level *held during* slot t
@@ -9,18 +10,39 @@ Conventions (paper §2.5/§2.6):
     T (they cannot know the horizon ended); offline policies never upgrade
     at T.  ``evaluate_schedule`` charges fetches on entry so both styles are
     scored identically.
+
+Batched engine
+--------------
+Policies are pure ``(init_fn, step_fn)`` pairs over a pytree of array
+params (see ``policies/base.py``).  ``run_policy`` runs ONE instance;
+``run_policy_batch`` takes a ``PolicyFns`` whose params carry a leading
+[B] axis (built by the policies' ``.batch`` classmethods from a stacked
+``costs.HostingGrid``) plus [B, T]-shaped observations, and runs all B
+independent hosting problems as a single compiled ``jit(vmap(scan))``.
+
+Mixed-K batches are padded to a common K with a validity ``mask`` (see
+``HostingGrid``); padded levels cost ``+BIG``/``+inf`` so they are never
+selected, which makes batched level indices mean exactly what they mean in
+the unpadded per-instance run — ``run_policy_batch`` output matches
+``run_policy`` bit-for-bit instance by instance (tests/test_batched_engine).
+
+Both entry points finish with one *fused* device reduction: the [3] totals
+vector (rent/service/fetch), the [K] level-occupancy histogram and the
+trace leave the device in a single transfer instead of four ``jnp.sum``
+round-trips plus a host-side ``np.bincount``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costs import HostingCosts, per_slot_cost_matrix
-from repro.core.policies.base import OnlinePolicy, SlotObs
+from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
+from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs
 
 
 @dataclasses.dataclass
@@ -37,74 +59,260 @@ class SimResult:
         return self.total / len(self.r_hist)
 
 
+@dataclasses.dataclass
+class BatchSimResult:
+    """[B]-structured results of one batched simulation."""
+
+    total: np.ndarray         # [B]
+    fetch: np.ndarray         # [B]
+    rent: np.ndarray          # [B]
+    service: np.ndarray      # [B]
+    r_hist: np.ndarray        # [B, T] int level indices
+    level_slots: np.ndarray   # [B, K] slots spent at each level
+
+    @property
+    def B(self) -> int:
+        return self.total.shape[0]
+
+    @property
+    def per_slot(self) -> np.ndarray:
+        return self.total / self.r_hist.shape[1]
+
+    def instance(self, i: int) -> SimResult:
+        return SimResult(total=float(self.total[i]), fetch=float(self.fetch[i]),
+                         rent=float(self.rent[i]), service=float(self.service[i]),
+                         r_hist=self.r_hist[i], level_slots=self.level_slots[i])
+
+
 def _obs_arrays(costs: HostingCosts, x, c, svc, side):
+    dt = default_float_dtype()
     x = jnp.asarray(x, jnp.int32)
-    c = jnp.asarray(c, jnp.float32)
+    c = jnp.asarray(c, dt)
     T = x.shape[0]
     if svc is None:
-        gv = jnp.asarray(costs.g, jnp.float32)
-        svc = x[:, None].astype(jnp.float32) * gv[None, :]
+        gv = jnp.asarray(costs.g, dt)
+        svc = x[:, None].astype(dt) * gv[None, :]
     else:
-        svc = jnp.asarray(svc, jnp.float32)
+        svc = jnp.asarray(svc, dt)
     if side is None:
         side = jnp.zeros((T,), jnp.int32)
     return x, c, svc, side
 
 
-def run_policy(policy: OnlinePolicy, costs: HostingCosts, x, c,
-               svc=None, side=None, include_final_fetch: bool = True) -> SimResult:
-    """Simulate an online policy over the whole horizon."""
-    x, c, svc, side = _obs_arrays(costs, x, c, svc, side)
-    lv = jnp.asarray(costs.levels, jnp.float32)
-    T = x.shape[0]
+# ----------------------------------------------------------------------
+# Fused simulation core (shared by the single and the batched entry point).
+# ----------------------------------------------------------------------
+
+def _sim_core(init_fn, step_fn, include_final_fetch: bool,
+              params, lv, M, x, c, svc, side):
+    """One instance: scan the policy, reduce on-device.
+
+    The running rent/service/fetch totals and the level-occupancy histogram
+    ride along in the scan carry — strictly sequential accumulation, so the
+    vmapped batch reduces in exactly the same order as a single run and the
+    two are bit-for-bit identical (a post-hoc ``jnp.sum`` is not: XLA picks
+    a different reduction tree for [B, T] than for [T]).
+
+    Returns (r_hist [T], sums [3] = rent/service/fetch, counts [K]).
+    """
+    K = lv.shape[-1]
+    T = x.shape[-1]
+    dt = lv.dtype
+    # when the final speculative fetch is excluded, zero it inside the scan
+    # (same code path for single and batched runs)
+    last = jnp.arange(T) == T - 1
 
     def step(carry, inp):
-        state = carry
-        x_t, c_t, svc_t, side_t = inp
+        state, acc = carry
+        x_t, c_t, svc_t, side_t, last_t = inp
         r_t = state["r"]
-        rent_t = c_t * lv[r_t]
-        svc_cost_t = svc_t[r_t]
-        new_state = policy.step(state, SlotObs(x_t, c_t, svc_t, side_t))
+        # one-hot selections instead of gathers/scatters: bit-identical, but
+        # elementwise ops vectorise across the vmapped instance axis where
+        # per-row dynamic indexing does not (see alpha_rr_step)
+        onehot_t = jnp.arange(K) == r_t
+        lv_t = jnp.sum(jnp.where(onehot_t, lv, 0.0))
+        rent_t = c_t * lv_t
+        svc_cost_t = jnp.sum(jnp.where(onehot_t, svc_t, 0.0))
+        new_state = step_fn(params, state, SlotObs(x_t, c_t, svc_t, side_t))
         r_next = new_state["r"]
-        fetch_t = costs.M * jnp.maximum(lv[r_next] - lv[r_t], 0.0)
-        return new_state, (r_t, rent_t, svc_cost_t, fetch_t)
+        lv_next = jnp.sum(jnp.where(jnp.arange(K) == r_next, lv, 0.0))
+        fetch_t = M * jnp.maximum(lv_next - lv_t, 0.0)
+        if not include_final_fetch:
+            fetch_t = jnp.where(last_t, 0.0, fetch_t)
+        acc = {
+            "sums": acc["sums"] + jnp.stack([rent_t, svc_cost_t, fetch_t]),
+            "counts": acc["counts"] + onehot_t.astype(jnp.int32),
+        }
+        return (new_state, acc), r_t
 
-    state0 = policy.init()
-    _, (r_hist, rent, svc_cost, fetch) = jax.lax.scan(
-        step, state0, (x, c, svc, side))
-    if not include_final_fetch:
-        fetch = fetch.at[-1].set(0.0)
+    acc0 = {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
+    (_, acc), r_hist = jax.lax.scan(
+        step, (init_fn(params), acc0), (x, c, svc, side, last))
+    return r_hist, acc["sums"], acc["counts"]
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_core(init_fn, step_fn, include_final_fetch: bool, batched: bool):
+    core = functools.partial(_sim_core, init_fn, step_fn, include_final_fetch)
+    if batched:
+        core = jax.vmap(core)
+    return jax.jit(core)
+
+
+def run_policy(policy: OnlinePolicy, costs: HostingCosts, x, c,
+               svc=None, side=None, include_final_fetch: bool = True) -> SimResult:
+    """Simulate an online policy over the whole horizon (one instance)."""
+    x, c, svc, side = _obs_arrays(costs, x, c, svc, side)
+    dt = default_float_dtype()
+    lv = jnp.asarray(costs.levels, dt)
+    M = jnp.asarray(costs.M, dt)
+    fns = policy.fns()
+    if fns.params is not None:
+        core = _compiled_core(fns.init_fn, fns.step_fn, include_final_fetch,
+                              False)
+    else:
+        # legacy policy subclass (bound init/step, no pure pair): fresh
+        # closures can't key a compile cache — run the same core uncompiled.
+        core = functools.partial(_sim_core, fns.init_fn, fns.step_fn,
+                                 include_final_fetch)
+    r_hist, sums, counts = core(fns.params, lv, M, x, c, svc, side)
     r_np = np.asarray(r_hist)
-    counts = np.bincount(r_np, minlength=costs.K).astype(np.int64)
+    rent_s, svc_s, fetch_s = (float(v) for v in np.asarray(sums))
     return SimResult(
-        total=float(jnp.sum(rent) + jnp.sum(svc_cost) + jnp.sum(fetch)),
-        fetch=float(jnp.sum(fetch)),
-        rent=float(jnp.sum(rent)),
-        service=float(jnp.sum(svc_cost)),
+        total=rent_s + svc_s + fetch_s,
+        fetch=fetch_s, rent=rent_s, service=svc_s,
         r_hist=r_np,
-        level_slots=counts,
+        level_slots=np.asarray(counts).astype(np.int64),
     )
+
+
+def _batch_obs(grid: HostingGrid, x, c, svc, side):
+    """Broadcast observations to [B, T] / [B, T, K] stacked form."""
+    dt = default_float_dtype()
+    B = grid.B
+    x = jnp.asarray(x, jnp.int32)
+    if x.ndim == 1:
+        x = jnp.broadcast_to(x[None, :], (B, x.shape[0]))
+    T = x.shape[1]
+    c = jnp.asarray(c, dt)
+    if c.ndim == 1:
+        c = jnp.broadcast_to(c[None, :], (B, T))
+    if svc is None:
+        svc = x[:, :, None].astype(dt) * grid.g.astype(dt)[:, None, :]
+    else:
+        svc = jnp.asarray(svc, dt)
+        if svc.ndim == 2:
+            svc = jnp.broadcast_to(svc[None, :, :], (B,) + svc.shape)
+    if side is None:
+        side = jnp.zeros((B, T), jnp.int32)
+    else:
+        side = jnp.asarray(side, jnp.int32)
+        if side.ndim == 1:
+            side = jnp.broadcast_to(side[None, :], (B, T))
+    return x, c, svc, side
+
+
+def run_policy_batch(policy: PolicyFns, grid: HostingGrid, x, c,
+                     svc=None, side=None,
+                     include_final_fetch: bool = True) -> BatchSimResult:
+    """Simulate B independent hosting instances as one ``jit(vmap(scan))``.
+
+    Args:
+      policy: pure-function policy batch (``AlphaRR.batch(grid)``, ...);
+        every params leaf carries a leading [B] axis.
+      grid: the stacked instances the *accounting* runs on.  Must match the
+        grid the policy batch was built from (for RR-style restrictions,
+        pass the restricted grid, e.g. ``grid.restrict_to_endpoints()``).
+      x: [T] or [B, T] arrivals ([T] broadcasts across the batch).
+      c: [T] or [B, T] rent costs.
+      svc: optional [B, T, K] (or [T, K]) realized service costs; None means
+        Model 1 (``g * x``) on each instance's own g row.
+      side: optional [T] or [B, T] side-channel.
+
+    Returns a ``BatchSimResult`` with one fused device->host transfer for
+    all totals and histograms.
+    """
+    x, c, svc, side = _batch_obs(grid, x, c, svc, side)
+    dt = default_float_dtype()
+    core = _compiled_core(policy.init_fn, policy.step_fn, include_final_fetch,
+                          True)
+    r_hist, sums, counts = core(policy.params, grid.levels.astype(dt),
+                                grid.M.astype(dt), x, c, svc, side)
+    # float64 accumulation to match the scalar path's host-side addition
+    sums = np.asarray(sums).astype(np.float64)    # [B, 3]
+    return BatchSimResult(
+        total=sums.sum(axis=1),
+        rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
+        r_hist=np.asarray(r_hist),
+        level_slots=np.asarray(counts).astype(np.int64),
+    )
+
+
+# ----------------------------------------------------------------------
+# Schedule evaluation (offline schedules are arrays, not policies).
+# ----------------------------------------------------------------------
+
+def _schedule_core(lv, M, r, x, c, svc):
+    # same sequential in-scan accumulation as _sim_core, for the same
+    # reason: batched and single evaluations must reduce in the same order
+    K = lv.shape[-1]
+    dt = lv.dtype
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), r[:-1]])
+
+    def step(acc, inp):
+        r_t, prev_t, c_t, svc_t = inp
+        onehot_t = jnp.arange(K) == r_t
+        lv_t = jnp.sum(jnp.where(onehot_t, lv, 0.0))
+        lv_prev = jnp.sum(jnp.where(jnp.arange(K) == prev_t, lv, 0.0))
+        fetch_t = M * jnp.maximum(lv_t - lv_prev, 0.0)
+        rent_t = c_t * lv_t
+        svc_cost_t = jnp.sum(jnp.where(onehot_t, svc_t, 0.0))
+        acc = {
+            "sums": acc["sums"] + jnp.stack([rent_t, svc_cost_t, fetch_t]),
+            "counts": acc["counts"] + onehot_t.astype(jnp.int32),
+        }
+        return acc, None
+
+    acc0 = {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
+    acc, _ = jax.lax.scan(step, acc0, (r, prev, c, svc))
+    return acc["sums"], acc["counts"]
+
+
+_schedule_one = jax.jit(_schedule_core)
+_schedule_vmapped = jax.jit(jax.vmap(_schedule_core))
 
 
 def evaluate_schedule(costs: HostingCosts, r_hist, x, c, svc=None) -> SimResult:
     """Cost of an arbitrary hosting schedule ``r_hist`` ([T] level indices,
     entered from r=0 before slot 1; fetches charged on entry to each slot)."""
     x, c, svc, _ = _obs_arrays(costs, x, c, svc, None)
-    lv = jnp.asarray(costs.levels, jnp.float32)
+    dt = default_float_dtype()
+    lv = jnp.asarray(costs.levels, dt)
     r = jnp.asarray(r_hist, jnp.int32)
-    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), r[:-1]])
-    fetch = costs.M * jnp.maximum(lv[r] - lv[prev], 0.0)
-    rent = c * lv[r]
-    svc_cost = jnp.take_along_axis(svc, r[:, None], axis=1)[:, 0]
-    r_np = np.asarray(r)
-    counts = np.bincount(r_np, minlength=costs.K).astype(np.int64)
+    sums, counts = _schedule_one(lv, jnp.asarray(costs.M, dt), r, x, c, svc)
+    rent_s, svc_s, fetch_s = (float(v) for v in np.asarray(sums))
     return SimResult(
-        total=float(jnp.sum(fetch) + jnp.sum(rent) + jnp.sum(svc_cost)),
-        fetch=float(jnp.sum(fetch)),
-        rent=float(jnp.sum(rent)),
-        service=float(jnp.sum(svc_cost)),
-        r_hist=r_np,
-        level_slots=counts,
+        total=rent_s + svc_s + fetch_s,
+        fetch=fetch_s, rent=rent_s, service=svc_s,
+        r_hist=np.asarray(r),
+        level_slots=np.asarray(counts).astype(np.int64),
+    )
+
+
+def evaluate_schedule_batch(grid: HostingGrid, r_hist, x, c,
+                            svc=None) -> BatchSimResult:
+    """Batched ``evaluate_schedule``: ``r_hist`` is [B, T]."""
+    x, c, svc, _ = _batch_obs(grid, x, c, svc, None)
+    dt = default_float_dtype()
+    r = jnp.asarray(r_hist, jnp.int32)
+    sums, counts = _schedule_vmapped(grid.levels.astype(dt),
+                                     grid.M.astype(dt), r, x, c, svc)
+    sums = np.asarray(sums).astype(np.float64)
+    return BatchSimResult(
+        total=sums.sum(axis=1),
+        rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
+        r_hist=np.asarray(r),
+        level_slots=np.asarray(counts).astype(np.int64),
     )
 
 
@@ -115,7 +323,7 @@ def model2_service_matrix(key, costs: HostingCosts, x, max_per_slot: int | None 
     T = int(x.shape[0])
     R = int(max_per_slot if max_per_slot is not None else max(int(jnp.max(x)), 1))
     u = jax.random.uniform(key, (T, R))
-    gv = jnp.asarray(costs.g, jnp.float32)
+    gv = jnp.asarray(costs.g, default_float_dtype())
     live = jnp.arange(R)[None, :] < x[:, None]              # [T, R]
     fwd = u[:, :, None] < gv[None, None, :]                 # [T, R, K]
     return jnp.sum(jnp.where(live[:, :, None] & fwd, 1.0, 0.0), axis=1)  # [T, K]

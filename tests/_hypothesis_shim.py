@@ -1,0 +1,111 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface this
+test suite uses, installed by conftest.py only when the real package is
+missing (offline containers).  Deterministic: every test draws from an RNG
+seeded by its own name, so runs are reproducible; there is no shrinking.
+
+Covered: given, settings, strategies.{integers, sampled_from, lists,
+permutations, composite} and Strategy.map.  If a test starts using more of
+hypothesis, extend this shim or add the real dependency
+(requirements-dev.txt).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements._draw(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def permutations(seq):
+    seq = list(seq)
+    def draw(rng):
+        out = list(seq)
+        rng.shuffle(out)
+        return out
+    return Strategy(draw)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strategy: strategy._draw(rng), *args, **kwargs)
+        return Strategy(draw_value)
+    return builder
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.adler32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base * 100003 + i)
+                vals = [s._draw(rng) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} (shimmed hypothesis): "
+                        f"{vals!r}") from e
+        wrapper.hypothesis_shim = True
+        # all params are strategy-provided: hide the inner signature so
+        # pytest does not mistake the drawn arguments for fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def install():
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "lists", "permutations",
+                 "composite"):
+        setattr(st, name, globals()[name])
+    st.Strategy = Strategy
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.__is_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

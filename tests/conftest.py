@@ -7,3 +7,12 @@ os.environ.pop("XLA_FLAGS", None)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Offline containers lack `hypothesis`; install the deterministic shim so the
+# property-test modules still collect and run (see _hypothesis_shim.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim
+    _hypothesis_shim.install()
