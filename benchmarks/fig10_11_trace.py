@@ -1,6 +1,12 @@
 """Figs 10-11: trace-driven Model 1 — cluster-trace-like arrivals (stand-in
 for the Google cluster trace; see DESIGN.md) + AWS-spot-like ARMA rents,
-c=0.135, regimes (0.239, 0.38) and (0.5, 0.7), cost vs M."""
+c=0.135, regimes (0.239, 0.38) and (0.5, 0.7), cost vs M.
+
+Batched: the (regime x M grid) x (n_seeds sample paths) sweep runs as ONE
+stacked batch per policy on the batched engine (each seed draws its own
+arrival/rent trace); rows report seed-means with 95% CIs, keyed by
+(regime, M) like the paper's curves.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,25 +14,35 @@ import numpy as np
 
 from repro.core import arrivals, rentcosts
 from repro.core.costs import HostingCosts
-from benchmarks.common import policy_suite
+from benchmarks.common import batch_policy_suite, mc_aggregate
 
 C_MEAN = 0.135
 REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
+MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 
 
-def run(T=8000, seed=0):
-    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
-    x = arrivals.cluster_trace_like(kx, T, base_rate=0.15, burst_rate=1.2,
-                                    burst_p=0.08)
-    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
+def run(T=8000, seed=0, n_seeds=4):
+    costs_list, xs, cs, meta = [], [], [], []
+    for s in range(n_seeds):
+        kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
+        x = np.asarray(arrivals.cluster_trace_like(kx, T, base_rate=0.15,
+                                                   burst_rate=1.2,
+                                                   burst_p=0.08))
+        c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
+        for regime, (alpha, g_alpha) in REGIMES.items():
+            for M in MS:
+                costs_list.append(HostingCosts.three_level(
+                    M, alpha, g_alpha, c_min=float(c.min()),
+                    c_max=float(c.max())))
+                xs.append(x)
+                cs.append(c)
+                meta.append({"regime": regime, "M": M, "seed": s})
+    suite = batch_policy_suite(costs_list, np.stack(xs), np.stack(cs))
     rows = []
-    for regime, (alpha, g_alpha) in REGIMES.items():
-        for M in [2.0, 5.0, 10.0, 20.0, 40.0]:
-            costs = HostingCosts.three_level(
-                M, alpha, g_alpha, c_min=float(np.min(np.asarray(c))),
-                c_max=float(np.max(np.asarray(c))))
-            rows.append({"regime": regime, "M": M, **policy_suite(costs, x, c)})
-    return rows
+    for m, r in zip(meta, suite):
+        r.pop("hist")
+        rows.append({**m, **r})
+    return mc_aggregate(rows, ["regime", "M"])
 
 
 def check(rows):

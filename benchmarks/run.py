@@ -18,6 +18,10 @@ across PRs (BENCH_*.json):
       "totals": {"seconds", "failures"}
     }
 
+``fleet_throughput`` rows add keys *inside* their throughput entry
+(``fleet_vs_batched_1dev``, ``scaling_vs_1dev``, ``devices``) — additive,
+so the schema version stays 1 and existing consumers keep working.
+
 Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point);
 ``--fast`` shrinks both the horizon T and n_seeds for smoke runs.
 """
@@ -89,6 +93,15 @@ def main() -> None:
                     "slots_instances_per_sec":
                         r.get("batched_slots_instances_per_sec"),
                     "speedup_vs_loop": r["speedup_vs_loop"],
+                    "B": r.get("B"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "fleet_vs_batched_1dev" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("fleet_slots_instances_per_sec"),
+                    "fleet_vs_batched_1dev": r["fleet_vs_batched_1dev"],
+                    "scaling_vs_1dev": r.get("scaling_vs_1dev"),
+                    "devices": r.get("scale_devices"),
                     "B": r.get("B"), "T": r.get("T"),
                 }
         report["modules"].append({"name": name, "status": status,

@@ -3,9 +3,13 @@ edge, alpha-RetroRenting and its analysis) as composable JAX modules."""
 from repro.core.costs import HostingCosts
 from repro.core.simulator import (run_policy, evaluate_schedule, SimResult,
                                   model2_service_matrix)
+from repro.core.fleet import (FleetBatch, FleetResult, run_fleet,
+                              offline_opt_fleet, evaluate_schedule_fleet)
 from repro.core import arrivals, rentcosts, bounds, gcurve
 
 __all__ = [
     "HostingCosts", "run_policy", "evaluate_schedule", "SimResult",
-    "model2_service_matrix", "arrivals", "rentcosts", "bounds", "gcurve",
+    "model2_service_matrix", "FleetBatch", "FleetResult", "run_fleet",
+    "offline_opt_fleet", "evaluate_schedule_fleet",
+    "arrivals", "rentcosts", "bounds", "gcurve",
 ]

@@ -1,0 +1,640 @@
+"""Fleet engine: device-sharded, mixed-horizon, time-chunked simulation.
+
+This is the layer above ``simulator.run_policy_batch``: it runs a *fleet* —
+B independent hosting instances with possibly different horizons T_i — as
+one compiled program sharded over a 1-D device mesh, optionally streaming
+the time axis in fixed-size chunks.  Three orthogonal mechanisms, each a
+bitwise no-op when unused:
+
+**[B] sharding** — the instance axis is embarrassingly parallel, so the
+vmapped per-instance core is wrapped in ``shard_map`` over the ``fleet``
+mesh axis (``sharding.specs.fleet_mesh``).  B is padded up to a device
+multiple with dummy instances (``T = 0``: every slot invalid, zero cost,
+frozen state) and results are sliced back, so sharded output ==
+``run_policy_batch`` output bit-for-bit on any device count.
+
+**Mixed horizons** — a ``FleetBatch`` stacks per-instance horizons ``T``
+next to [B, T_max]-padded observations.  ``simulator.sim_chunk_core``
+freezes policy state and adds exactly ``0.0`` to every accumulator on slots
+at or past an instance's own T (see ``policies.base.freeze_invalid``), so
+each instance's totals/trace match a standalone run at its own horizon, and
+the final speculative fetch is charged at each instance's own last slot.
+
+**Time streaming** — the horizon is cut into fixed-size chunks with the
+``(policy state, accumulator)`` carry threaded across chunk boundaries;
+accumulation order is unchanged, so chunked == unchunked bit-for-bit.  Two
+drivers share the same chunk kernel:
+
+  * ``chunk_size=...`` — an outer ``lax.scan`` over chunks on device (one
+    XLA program; obs stay resident);
+  * ``stream=True``    — a host loop feeding one [B, chunk] slab at a time
+    to a jitted sharded chunk-step, so a T=10^6 trace never materialises
+    [B, T_max] on device (device memory is O(B * chunk)).
+
+``offline_opt_fleet`` applies the same three mechanisms to the offline DP
+(forward recursion chunked and frozen past T_i with identity backpointers;
+padded K levels priced ``+inf`` as in ``offline_opt_batch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
+from repro.core.policies.base import PolicyFns
+from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
+                                  schedule_chunk_core)
+from repro.sharding.context import shard_ctx
+from repro.sharding.specs import FLEET_AXIS, fleet_mesh
+
+
+# ----------------------------------------------------------------------
+# FleetBatch: stacked instances + per-instance horizons.
+# ----------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FleetBatch:
+    """B hosting instances stacked with per-instance horizons.
+
+    Attributes:
+      grid: stacked ``HostingGrid`` (K-padding conventions live there).
+      x:    [B, T_max] int32 arrivals, zero-padded past each instance's T.
+      c:    [B, T_max] rent costs, zero-padded.
+      T:    [B] int32 per-instance horizons (T_i <= T_max).
+      svc:  optional [B, T_max, K] realized Model-2 service costs; None means
+            Model 1 (``g * x``), computed chunk-by-chunk on device so it is
+            never materialised for the whole horizon.
+      side: optional [B, T_max] int32 side-channel (e.g. Markov state).
+
+    Slots with ``t >= T_i`` are *invalid*: the engine freezes policy state
+    and accumulates exactly zero cost there, so padded tails never affect an
+    instance (the padding values themselves are arbitrary).
+    """
+
+    grid: HostingGrid
+    x: jnp.ndarray
+    c: jnp.ndarray
+    T: jnp.ndarray
+    svc: Optional[jnp.ndarray] = None
+    side: Optional[jnp.ndarray] = None
+
+    # ---- pytree protocol ---------------------------------------------
+    def tree_flatten(self):
+        return (self.grid, self.x, self.c, self.T, self.svc, self.side), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---- constructors -------------------------------------------------
+    # Obs arrays are built HOST-resident (numpy): the compiled device paths
+    # transfer them at the jit boundary anyway, and the streaming driver
+    # must be able to slab-feed a horizon that never fits on device.
+
+    @staticmethod
+    def from_instances(costs_list: Sequence[HostingCosts], xs, cs,
+                       svcs=None, sides=None) -> "FleetBatch":
+        """Stack per-instance traces of *mixed lengths* (lists of [T_i]
+        arrays; ``svcs`` entries are [T_i, K_i]), padding T and K."""
+        grid = HostingGrid.from_costs(costs_list)
+        dt = default_float_dtype()
+        B, K = grid.B, grid.K
+        lens = [int(np.shape(xi)[0]) for xi in xs]
+        T_max = max(lens)
+        x = np.zeros((B, T_max), np.int32)
+        c = np.zeros((B, T_max), dt)
+        svc = None if svcs is None else np.zeros((B, T_max, K), dt)
+        side = None if sides is None else np.zeros((B, T_max), np.int32)
+        for i in range(B):
+            x[i, :lens[i]] = np.asarray(xs[i])
+            c[i, :lens[i]] = np.asarray(cs[i])
+            if svcs is not None:
+                si = np.asarray(svcs[i])
+                svc[i, :lens[i], :si.shape[1]] = si
+            if sides is not None:
+                side[i, :lens[i]] = np.asarray(sides[i])
+        return FleetBatch(grid=grid, x=x, c=c,
+                          T=np.asarray(lens, np.int32), svc=svc, side=side)
+
+    @staticmethod
+    def from_dense(grid: HostingGrid, x, c, svc=None, side=None,
+                   T=None) -> "FleetBatch":
+        """Wrap already-stacked [B, T] (or broadcastable [T]) observations;
+        ``T`` defaults to the uniform full horizon."""
+        dt = default_float_dtype()
+        B = grid.B
+        x = np.asarray(x, np.int32)
+        if x.ndim == 1:
+            x = np.broadcast_to(x[None, :], (B, x.shape[0]))
+        T_max = x.shape[1]
+        c = np.asarray(c, dt)
+        if c.ndim == 1:
+            c = np.broadcast_to(c[None, :], (B, T_max))
+        if svc is not None:
+            svc = np.asarray(svc, dt)
+            if svc.ndim == 2:
+                svc = np.broadcast_to(svc[None], (B,) + svc.shape)
+        if side is not None:
+            side = np.asarray(side, np.int32)
+            if side.ndim == 1:
+                side = np.broadcast_to(side[None, :], (B, T_max))
+        if T is None:
+            T = np.full((B,), T_max, np.int32)
+        else:
+            T = np.broadcast_to(np.asarray(T, np.int32), (B,))
+        return FleetBatch(grid=grid, x=x, c=c, T=T, svc=svc, side=side)
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def B(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.grid.K
+
+    @property
+    def T_max(self) -> int:
+        return self.x.shape[1]
+
+    def restrict_to_endpoints(self) -> "FleetBatch":
+        """The no-partial-hosting view (RR / OPT): 2-level grid, service
+        costs gathered down to the (0, top) columns.  The gather runs in
+        numpy so a host-resident svc stays on the host (same values as
+        ``HostingGrid.endpoint_service``, which works on device arrays)."""
+        svc2 = None
+        if self.svc is not None:
+            svc = np.asarray(self.svc)
+            top = np.asarray(self.grid.top_index())          # [B]
+            hi = np.take_along_axis(
+                svc, np.broadcast_to(top[:, None, None],
+                                     svc.shape[:2] + (1,)), axis=2)
+            svc2 = np.concatenate([svc[:, :, :1], hi], axis=2)
+        return FleetBatch(grid=self.grid.restrict_to_endpoints(),
+                          x=self.x, c=self.c, T=self.T, svc=svc2,
+                          side=self.side)
+
+
+def _pad_rows(a, B_pad, xp=jnp):
+    """Pad the leading [B] axis to B_pad by replicating row 0 (the padded
+    rows run with T=0, so their contents never matter)."""
+    B = a.shape[0]
+    if B == B_pad:
+        return a
+    rep = xp.broadcast_to(a[:1], (B_pad - B,) + a.shape[1:])
+    return xp.concatenate([a, rep], axis=0)
+
+
+def _pad_fleet(fleet: FleetBatch, B_pad: int, T_pad: int) -> FleetBatch:
+    """Pad instances to ``B_pad`` (dummy rows, T=0) and the time axis to
+    ``T_pad`` (invalid tail slots).
+
+    Obs padding runs in numpy so host-resident obs STAY on the host — the
+    compiled drivers transfer whole [B, T] blocks at the jit boundary, and
+    the streaming driver must never move more than one slab to the device.
+    The (small) grid stays a device pytree.
+    """
+    x, c, T, svc, side = (np.asarray(fleet.x), np.asarray(fleet.c),
+                          np.asarray(fleet.T), fleet.svc, fleet.side)
+    svc = None if svc is None else np.asarray(svc)
+    side = None if side is None else np.asarray(side)
+    if T_pad > fleet.T_max:
+        dt_pad = T_pad - fleet.T_max
+        x = np.pad(x, ((0, 0), (0, dt_pad)))
+        c = np.pad(c, ((0, 0), (0, dt_pad)))
+        if svc is not None:
+            svc = np.pad(svc, ((0, 0), (0, dt_pad), (0, 0)))
+        if side is not None:
+            side = np.pad(side, ((0, 0), (0, dt_pad)))
+    if B_pad > fleet.B:
+        grid = HostingGrid(M=_pad_rows(fleet.grid.M, B_pad),
+                           levels=_pad_rows(fleet.grid.levels, B_pad),
+                           g=_pad_rows(fleet.grid.g, B_pad),
+                           mask=_pad_rows(fleet.grid.mask, B_pad))
+        x = _pad_rows(x, B_pad, np)
+        c = _pad_rows(c, B_pad, np)
+        T = np.concatenate([T, np.zeros((B_pad - fleet.B,), np.int32)])
+        if svc is not None:
+            svc = _pad_rows(svc, B_pad, np)
+        if side is not None:
+            side = _pad_rows(side, B_pad, np)
+    else:
+        grid = fleet.grid
+    return FleetBatch(grid=grid, x=x, c=c, T=T, svc=svc, side=side)
+
+
+def _prepare_fleet(fleet: FleetBatch, mesh: Optional[Mesh],
+                   chunk_size: Optional[int]):
+    """Shared prologue of every fleet entry point: resolve the mesh, pad B
+    to a device multiple (dummy T=0 instances) and T to a chunk multiple."""
+    mesh = fleet_mesh() if mesh is None else mesh
+    n_dev = int(mesh.devices.size)
+    B_pad = math.ceil(fleet.B / n_dev) * n_dev
+    n_chunks, T_pad = _chunk_geometry(fleet.T_max, chunk_size)
+    return mesh, _pad_fleet(fleet, B_pad, T_pad), n_chunks
+
+
+# ----------------------------------------------------------------------
+# Results.
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetResult:
+    """[B]-structured results of one fleet simulation (padded instances and
+    padded time already sliced away)."""
+
+    total: np.ndarray         # [B]
+    fetch: np.ndarray         # [B]
+    rent: np.ndarray          # [B]
+    service: np.ndarray       # [B]
+    r_hist: np.ndarray        # [B, T_max] (rows frozen past each T_i)
+    level_slots: np.ndarray   # [B, K] slots spent at each level
+    T: np.ndarray             # [B] per-instance horizons
+
+    @property
+    def B(self) -> int:
+        return self.total.shape[0]
+
+    @property
+    def per_slot(self) -> np.ndarray:
+        return self.total / self.T
+
+    def instance(self, i: int) -> SimResult:
+        return SimResult(total=float(self.total[i]), fetch=float(self.fetch[i]),
+                         rent=float(self.rent[i]), service=float(self.service[i]),
+                         r_hist=self.r_hist[i, :int(self.T[i])],
+                         level_slots=self.level_slots[i])
+
+
+@dataclasses.dataclass
+class FleetOfflineResult:
+    cost: np.ndarray          # [B]
+    r_hist: np.ndarray        # [B, T_max]
+    sim: FleetResult
+
+
+def _fleet_result(r_hist, sums, counts, B, T_max, T) -> FleetResult:
+    # float64 host accumulation, matching run_policy_batch
+    sums = np.asarray(sums)[:B].astype(np.float64)
+    return FleetResult(
+        total=sums.sum(axis=1),
+        rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
+        r_hist=np.asarray(r_hist)[:B, :T_max],
+        level_slots=np.asarray(counts)[:B].astype(np.int64),
+        T=np.asarray(T).astype(np.int64))
+
+
+# ----------------------------------------------------------------------
+# Compiled cores: vmap over instances, shard_map over the fleet axis.
+# ----------------------------------------------------------------------
+
+def _chunk_geometry(T_max: int, chunk_size: Optional[int]):
+    if chunk_size is None:
+        return 1, T_max
+    chunk = int(chunk_size)
+    n_chunks = max(1, math.ceil(T_max / chunk))
+    return n_chunks, n_chunks * chunk
+
+
+def _model1_svc(x, g):
+    # identical elementwise to _batch_obs's full-horizon computation, so
+    # computing it per chunk is bitwise equivalent
+    return x[..., :, None].astype(g.dtype) * g[..., None, :]
+
+
+def _chunked_drive(run_chunk, carry0, n_chunks: int, arrays):
+    """The one chunk driver every fleet core shares (sim, DP fwd, schedule
+    eval): cut each [T_pad, ...] array of ``arrays`` (None entries pass
+    through) into ``n_chunks`` chunks, thread ``carry`` across them with an
+    outer ``lax.scan``, and restitch the per-chunk ys.  ``run_chunk(carry,
+    t0, *chunk_arrays) -> (carry', ys_chunk | None)``.  n_chunks == 1 calls
+    ``run_chunk`` directly — chunked == unchunked is proven against that
+    path, so keep any chunking change HERE, not in the cores."""
+    T_pad = next(a for a in arrays if a is not None).shape[0]
+    chunk = T_pad // n_chunks
+    if n_chunks == 1:
+        return run_chunk(carry0, jnp.asarray(0, jnp.int32), *arrays)
+    xs = tuple(None if a is None
+               else a.reshape((n_chunks, chunk) + a.shape[1:])
+               for a in arrays)
+
+    def outer(carry, inp):
+        t0, *cks = inp
+        return run_chunk(carry, t0, *cks)
+
+    carry, ys = jax.lax.scan(
+        outer, carry0, (jnp.arange(n_chunks, dtype=jnp.int32) * chunk,) + xs)
+    if ys is not None:
+        ys = ys.reshape((T_pad,) + ys.shape[2:])
+    return carry, ys
+
+
+def _make_instance_core(init_fn, step_fn, include_final_fetch: bool,
+                        n_chunks: int, has_svc: bool, has_side: bool):
+    """Whole-horizon core for ONE instance: outer scan over T-chunks, inner
+    ``sim_chunk_core`` per chunk.  Args: (params, lv, g, M, T_len, x, c
+    [, svc][, side]) with [T_pad]-shaped obs, T_pad = n_chunks * chunk."""
+
+    def core(params, lv, g, M, T_len, x, c, *opt):
+        K = lv.shape[-1]
+        svc = opt[0] if has_svc else None
+        side = opt[1 if has_svc else 0] if has_side else None
+        carry0 = (init_fn(params), sim_acc0(K, lv.dtype))
+
+        def run_chunk(carry, t0, xck, cck, sck, sdck):
+            if sck is None:
+                sck = _model1_svc(xck, g)
+            if sdck is None:
+                sdck = jnp.zeros(xck.shape, jnp.int32)
+            return sim_chunk_core(step_fn, include_final_fetch, params, lv, M,
+                                  T_len, t0, carry, xck, cck, sck, sdck)
+
+        carry, r_hist = _chunked_drive(run_chunk, carry0, n_chunks,
+                                       (x, c, svc, side))
+        (_, acc) = carry
+        return r_hist, acc["sums"], acc["counts"]
+
+    return core
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_fleet_core(init_fn, step_fn, include_final_fetch: bool,
+                         n_chunks: int, has_svc: bool, has_side: bool,
+                         mesh: Mesh):
+    core = _make_instance_core(init_fn, step_fn, include_final_fetch,
+                               n_chunks, has_svc, has_side)
+    n_args = 7 + int(has_svc) + int(has_side)
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(jax.vmap(core), mesh=mesh,
+                        in_specs=(spec,) * n_args,
+                        out_specs=(spec, spec, spec))
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_stream_step(init_fn, step_fn, include_final_fetch: bool,
+                          has_svc: bool, has_side: bool, mesh: Mesh):
+    """One [B, chunk] slab: (carry, chunk obs) -> (carry', r_chunk).  The
+    host streaming loop drives this; device memory stays O(B * chunk)."""
+
+    def step(params, lv, g, M, T_len, t0, carry, xck, cck, *opt):
+        sck = opt[0] if has_svc else _model1_svc(xck, g)
+        sdck = (opt[1 if has_svc else 0] if has_side
+                else jnp.zeros(xck.shape, jnp.int32))
+        return sim_chunk_core(step_fn, include_final_fetch, params, lv, M,
+                              T_len, t0, carry, xck, cck, sck, sdck)
+
+    n_opt = int(has_svc) + int(has_side)
+    in_axes = (0, 0, 0, 0, 0, None, 0, 0, 0) + (0,) * n_opt
+    spec = P(FLEET_AXIS)
+    in_specs = (spec,) * 5 + (P(),) + (spec,) * (3 + n_opt)
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes, out_axes=(0, 0)),
+                        mesh=mesh, in_specs=in_specs, out_specs=(spec, spec))
+    return jax.jit(sharded)
+
+
+def _policy_arrays(policy: PolicyFns, fleet: FleetBatch, B_pad: int):
+    dt = default_float_dtype()
+    params = jax.tree_util.tree_map(lambda a: _pad_rows(jnp.asarray(a), B_pad),
+                                    policy.params)
+    lv = _pad_rows(fleet.grid.levels.astype(dt), B_pad)
+    g = _pad_rows(fleet.grid.g.astype(dt), B_pad)
+    M = _pad_rows(fleet.grid.M.astype(dt), B_pad)
+    return params, lv, g, M
+
+
+def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
+              mesh: Optional[Mesh] = None, chunk_size: Optional[int] = None,
+              include_final_fetch: bool = True,
+              stream: bool = False) -> FleetResult:
+    """Simulate a fleet: sharded over devices, chunked/streamed over time.
+
+    Args:
+      policy: pure-function policy batch whose params carry a leading [B]
+        axis matching ``fleet.grid`` (``AlphaRR.fleet(fleet)``, ...).  For
+        RR-style restrictions pass the restricted fleet
+        (``fleet.restrict_to_endpoints()``), as with ``run_policy_batch``.
+      fleet: the stacked instances (mixed horizons allowed).
+      mesh: 1-D device mesh with axis ``fleet`` (default: all devices).
+      chunk_size: cut the horizon into chunks of this many slots (device-side
+        outer scan).  None = one chunk.
+      stream: drive the chunks from the host instead, one [B, chunk] slab at
+        a time (requires ``chunk_size``); bit-identical to the scan driver.
+
+    Every configuration (any mesh size x any chunking x any driver) returns
+    bit-identical results; see tests/test_fleet_engine.py.
+    """
+    if stream and chunk_size is None:
+        raise ValueError("stream=True requires chunk_size")
+    B, T_max = fleet.B, fleet.T_max
+    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
+    params, lv, g, M = _policy_arrays(policy, padded, padded.B)
+    has_svc, has_side = fleet.svc is not None, fleet.side is not None
+
+    if stream:
+        return _run_fleet_streamed(policy, padded, params, lv, g, M, mesh,
+                                   n_chunks, include_final_fetch,
+                                   B, T_max, fleet.T)
+
+    core = _compiled_fleet_core(policy.init_fn, policy.step_fn,
+                                include_final_fetch, n_chunks, has_svc,
+                                has_side, mesh)
+    args = (params, lv, g, M, padded.T, padded.x, padded.c)
+    if has_svc:
+        args += (padded.svc,)
+    if has_side:
+        args += (padded.side,)
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        r_hist, sums, counts = core(*args)
+    return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
+
+
+def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
+                        include_final_fetch, B, T_max, T_orig):
+    """Host-driven streaming: numpy slabs in, carry stays on device."""
+    has_svc, has_side = padded.svc is not None, padded.side is not None
+    step = _compiled_stream_step(policy.init_fn, policy.step_fn,
+                                 include_final_fetch, has_svc, has_side, mesh)
+    B_pad, T_pad = padded.B, padded.T_max
+    chunk = T_pad // n_chunks
+    K = padded.K
+    dt = lv.dtype
+    # host-resident obs (the point of streaming: slab-sized device transfers)
+    x_h = np.asarray(padded.x)
+    c_h = np.asarray(padded.c)
+    svc_h = None if not has_svc else np.asarray(padded.svc)
+    side_h = None if not has_side else np.asarray(padded.side)
+
+    carry = (jax.jit(jax.vmap(policy.init_fn))(params),
+             {"sums": jnp.zeros((B_pad, 3), dt),
+              "counts": jnp.zeros((B_pad, K), jnp.int32)})
+    r_parts = []
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        for i in range(n_chunks):
+            sl = slice(i * chunk, (i + 1) * chunk)
+            args = (params, lv, g, M, padded.T,
+                    jnp.asarray(i * chunk, jnp.int32), carry,
+                    jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
+            if has_svc:
+                args += (jnp.asarray(svc_h[:, sl]),)
+            if has_side:
+                args += (jnp.asarray(side_h[:, sl]),)
+            carry, r_chunk = step(*args)
+            r_parts.append(np.asarray(r_chunk))
+    (_, acc) = carry
+    r_hist = np.concatenate(r_parts, axis=1)
+    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig)
+
+
+# ----------------------------------------------------------------------
+# Offline DP on a fleet: chunked forward recursion, frozen past T_i.
+# ----------------------------------------------------------------------
+
+def _make_dp_instance_core(n_chunks: int, has_svc: bool):
+    """Forward DP + reverse backtrack for ONE instance, chunk-capable.
+
+    Matches ``offline_opt._dp_core`` op-for-op on valid slots; invalid slots
+    (t >= T_len) keep ``J`` frozen and write identity backpointers, so the
+    backtracked schedule is constant past T_len and the cost is exactly the
+    instance's own-horizon optimum.  Padded K levels are priced ``+inf``
+    exactly as in ``offline_opt_batch``.
+    """
+
+    def core(M, lv, g, kmask, T_len, x, c, *opt):
+        K = lv.shape[-1]
+        svc = opt[0] if has_svc else None
+        lv32 = lv.astype(jnp.float32)
+        M32 = M.astype(jnp.float32)
+        fetch_mat = M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
+
+        def fwd_chunk(J, t0, xck, cck, sck):
+            if sck is None:
+                sck = _model1_svc(xck, g)
+            tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
+            # the same float32 w as offline_opt_batch: rent + svc, +inf pads
+            wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
+                   + sck.astype(jnp.float32))
+            wck = jnp.where(kmask[None, :], wck, jnp.inf)
+
+            def fwd(J_prev, inp):
+                t, w_t = inp
+                valid_t = t < T_len
+                trans = J_prev[:, None] + fetch_mat
+                arg = jnp.argmin(trans, axis=0)
+                J = jnp.min(trans, axis=0) + w_t
+                J = jnp.where(valid_t, J, J_prev)
+                arg = jnp.where(valid_t, arg, jnp.arange(K))
+                return J, arg
+
+            return jax.lax.scan(fwd, J, (tids, wck))
+
+        J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
+        J_T, args = _chunked_drive(fwd_chunk, J0, n_chunks, (x, c, svc))
+
+        def back(k, arg_t):
+            return arg_t[k], k
+
+        k_T = jnp.argmin(J_T)
+        _, r_hist = jax.lax.scan(back, k_T, args, reverse=True)
+        return jnp.min(J_T), r_hist.astype(jnp.int32)
+
+    return core
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_core(n_chunks: int, has_svc: bool, mesh: Mesh):
+    core = _make_dp_instance_core(n_chunks, has_svc)
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(jax.vmap(core), mesh=mesh,
+                        in_specs=(spec,) * (7 + int(has_svc)),
+                        out_specs=(spec, spec))
+    return jax.jit(sharded)
+
+
+def offline_opt_fleet(fleet: FleetBatch, *, mesh: Optional[Mesh] = None,
+                      chunk_size: Optional[int] = None) -> FleetOfflineResult:
+    """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
+    time, each instance solved at its own horizon."""
+    dt = default_float_dtype()
+    B, T_max = fleet.B, fleet.T_max
+    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
+    has_svc = fleet.svc is not None
+    core = _compiled_dp_core(n_chunks, has_svc, mesh)
+    args = (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
+            padded.grid.g.astype(dt), padded.grid.mask, padded.T,
+            padded.x, padded.c)
+    if has_svc:
+        args += (padded.svc,)
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        cost, r_hist = core(*args)
+    cost = np.asarray(cost)[:B].astype(np.float64)
+    r_hist = np.asarray(r_hist)[:B, :T_max].astype(np.int64)
+    sim = evaluate_schedule_fleet(fleet, r_hist, mesh=mesh,
+                                  chunk_size=chunk_size)
+    return FleetOfflineResult(cost=cost, r_hist=r_hist, sim=sim)
+
+
+# ----------------------------------------------------------------------
+# Schedule evaluation on a fleet.
+# ----------------------------------------------------------------------
+
+def _make_schedule_instance_core(n_chunks: int, has_svc: bool):
+    def core(lv, g, M, T_len, r, x, c, *opt):
+        K = lv.shape[-1]
+        svc = opt[0] if has_svc else None
+        carry0 = (jnp.asarray(0, jnp.int32), sim_acc0(K, lv.dtype))
+
+        def run_chunk(carry, t0, rck, xck, cck, sck):
+            if sck is None:
+                sck = _model1_svc(xck, g)
+            return schedule_chunk_core(lv, M, T_len, t0, carry, rck, cck, sck)
+
+        carry, _ = _chunked_drive(run_chunk, carry0, n_chunks, (r, x, c, svc))
+        (_, acc) = carry
+        return acc["sums"], acc["counts"]
+
+    return core
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_schedule_core(n_chunks: int, has_svc: bool, mesh: Mesh):
+    core = _make_schedule_instance_core(n_chunks, has_svc)
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(jax.vmap(core), mesh=mesh,
+                        in_specs=(spec,) * (7 + int(has_svc)),
+                        out_specs=(spec, spec))
+    return jax.jit(sharded)
+
+
+def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
+                            mesh: Optional[Mesh] = None,
+                            chunk_size: Optional[int] = None) -> FleetResult:
+    """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
+    instance's T contribute nothing (and charge no fetch)."""
+    dt = default_float_dtype()
+    B, T_max = fleet.B, fleet.T_max
+    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
+    r = np.asarray(r_hist, np.int32)
+    if padded.T_max > T_max:
+        r = np.pad(r, ((0, 0), (0, padded.T_max - T_max)))
+    r = _pad_rows(r, padded.B, np)
+    has_svc = fleet.svc is not None
+    core = _compiled_schedule_core(n_chunks, has_svc, mesh)
+    args = (padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
+            padded.grid.M.astype(dt), padded.T, r, padded.x, padded.c)
+    if has_svc:
+        args += (padded.svc,)
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        sums, counts = core(*args)
+    res = _fleet_result(np.asarray(r_hist, np.int64), sums, counts,
+                        B, T_max, fleet.T)
+    return res

@@ -133,6 +133,13 @@ class AlphaRR(OnlinePolicy):
         return PolicyFns("alpha-RR", alpha_rr_init, alpha_rr_step,
                          alpha_rr_grid_params(grid))
 
+    @classmethod
+    def fleet(cls, fleet: "FleetBatch") -> PolicyFns:  # noqa: F821
+        """Policy batch for a mixed-horizon fleet (``core.fleet.run_fleet``).
+        alpha-RR carries no horizon state, so fleet params == batch params;
+        the engine handles per-instance T masking."""
+        return cls.batch(fleet.grid)
+
 
 class RetroRenting(AlphaRR):
     """RR of [22]: AlphaRR restricted to levels (0, 1).  Provided as a named
@@ -148,6 +155,12 @@ class RetroRenting(AlphaRR):
         g2 = grid.restrict_to_endpoints()
         return PolicyFns("RR", alpha_rr_init, alpha_rr_step,
                          alpha_rr_grid_params(g2))
+
+    @classmethod
+    def fleet(cls, fleet: "FleetBatch") -> PolicyFns:  # noqa: F821
+        """RR policy batch for a fleet; run it on
+        ``fleet.restrict_to_endpoints()`` (the accounting grid must match)."""
+        return cls.batch(fleet.grid)
 
 
 # ----------------------------------------------------------------------

@@ -23,6 +23,18 @@ binds ``params`` built from one ``HostingCosts`` and forwards ``init`` /
 directly (without defining ``init_fn``/``step_fn``) keep working — the
 simulator falls back to a closure over the bound methods.
 
+Mixed-horizon (fleet) convention
+--------------------------------
+Policies never see horizon padding: when a ``core.fleet.FleetBatch`` stacks
+instances with different horizons T_i, the engine calls ``step_fn`` on every
+(padded) slot and then applies ``freeze_invalid`` — on slots at or past the
+instance's own T the proposed state is discarded and the previous state kept,
+and every cost accumulator receives exactly ``0.0``.  A policy therefore
+needs no awareness of T at all; its only obligations are the existing ones
+(pure, pytree state with stable structure, ``state["r"]`` the next level
+index).  Concrete policies expose ``.fleet(...)`` classmethods mirroring
+``.batch(...)`` that bind stacked params from a ``FleetBatch``.
+
 Sequence of events in a slot (paper §2.5): arrivals happen and are served at
 the current level; the provider announces the next rent; the policy picks
 ``r_{t+1}``; any fetch for the increment is paid now.
@@ -31,6 +43,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.costs import HostingCosts
@@ -44,6 +57,16 @@ class SlotObs(NamedTuple):
 
 
 State = Dict[str, Any]
+
+
+def freeze_invalid(valid, new_state: State, old_state: State) -> State:
+    """The mixed-horizon masking rule (see module docstring): keep
+    ``new_state`` on valid slots, the unchanged ``old_state`` on slots past
+    the instance's own horizon.  On valid slots ``jnp.where`` *selects* (it
+    never recomputes), so a uniform-horizon run is bitwise unchanged by the
+    mask."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(valid, n, o), new_state, old_state)
 
 
 class PolicyFns(NamedTuple):

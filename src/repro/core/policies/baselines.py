@@ -74,6 +74,10 @@ class StaticPolicy(OnlinePolicy):
         return PolicyFns("static", static_init, static_step,
                          {"level_idx": idx})
 
+    @classmethod
+    def fleet(cls, fleet: "FleetBatch", level_idx) -> PolicyFns:  # noqa: F821
+        return cls.batch(fleet.grid, level_idx)
+
 
 # ----------------------------------------------------------------------
 # MDP / ABC: stationary decision tables pi[s, k] -> k'.
@@ -186,6 +190,11 @@ class MDPPolicy(OnlinePolicy):
         return PolicyFns("MDP", table_init, mdp_step,
                          {"pi": _pad_tables(tables, grid.K)})
 
+    @classmethod
+    def fleet(cls, fleet: "FleetBatch", costs_list, ges,  # noqa: F821
+              c_means) -> PolicyFns:
+        return cls.batch(fleet.grid, costs_list, ges, c_means)
+
 
 class ABCPolicy(OnlinePolicy):
     """Arrival Based Caching [26] (see module docstring for the reading)."""
@@ -215,3 +224,8 @@ class ABCPolicy(OnlinePolicy):
                           jnp.float32)
         return PolicyFns("ABC", table_init, abc_step,
                          {"pi": _pad_tables(tables, grid.K), "x_threshold": thr})
+
+    @classmethod
+    def fleet(cls, fleet: "FleetBatch", costs_list, ges,  # noqa: F821
+              c_means) -> PolicyFns:
+        return cls.batch(fleet.grid, costs_list, ges, c_means)

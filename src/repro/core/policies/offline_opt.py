@@ -11,6 +11,12 @@ loop), so the whole DP jits — and vmaps over a stacked ``HostingGrid``
 batches stay exact.  Argmins are kept so the optimal schedule feeds the
 hosting-status histograms (Figs 2, 8, 12-22).
 
+``core.fleet.offline_opt_fleet`` is the fleet form of this DP: the same
+forward recursion op-for-op, device-sharded over the instance axis, chunked
+over time, and frozen past each instance's own horizon (identity
+backpointers on padded slots) — bit-identical to ``offline_opt_batch`` on
+uniform-horizon fleets.
+
 ``OPT`` (no partial hosting, the benchmark of [22]) is the same DP on the
 2-level instance. Exhaustive-search cross-checks live in the tests.
 """

@@ -11,22 +11,33 @@ Conventions (paper §2.5/§2.6):
     at T.  ``evaluate_schedule`` charges fetches on entry so both styles are
     scored identically.
 
-Batched engine
---------------
+Batched / fleet engine
+----------------------
 Policies are pure ``(init_fn, step_fn)`` pairs over a pytree of array
 params (see ``policies/base.py``).  ``run_policy`` runs ONE instance;
 ``run_policy_batch`` takes a ``PolicyFns`` whose params carry a leading
 [B] axis (built by the policies' ``.batch`` classmethods from a stacked
 ``costs.HostingGrid``) plus [B, T]-shaped observations, and runs all B
 independent hosting problems as a single compiled ``jit(vmap(scan))``.
+``core/fleet.py`` layers device sharding (``shard_map`` over the ``fleet``
+mesh axis), mixed per-instance horizons, and T-chunked streaming on top.
+
+The shared kernel is ``sim_chunk_core``: it scans a ``[t0, t0 + chunk)``
+slot window carrying ``(policy state, accumulator)``, so chaining it over
+chunks reduces in exactly the same sequential order as one long scan
+(chunked == unchunked bit-for-bit), and its valid-slot mask freezes state /
+adds exactly 0.0 past an instance's own horizon (mixed-T batches match
+per-instance runs bit-for-bit).  The whole-horizon entry points here are
+its one-chunk, full-T_len special case.
 
 Mixed-K batches are padded to a common K with a validity ``mask`` (see
 ``HostingGrid``); padded levels cost ``+BIG``/``+inf`` so they are never
 selected, which makes batched level indices mean exactly what they mean in
 the unpadded per-instance run — ``run_policy_batch`` output matches
-``run_policy`` bit-for-bit instance by instance (tests/test_batched_engine).
+``run_policy`` bit-for-bit instance by instance (tests/test_batched_engine,
+tests/test_fleet_engine).
 
-Both entry points finish with one *fused* device reduction: the [3] totals
+All entry points finish with one *fused* device reduction: the [3] totals
 vector (rent/service/fetch), the [K] level-occupancy histogram and the
 trace leave the device in a single transfer instead of four ``jnp.sum``
 round-trips plus a host-side ``np.bincount``.
@@ -42,7 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
-from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs
+from repro.core.policies.base import (OnlinePolicy, PolicyFns, SlotObs,
+                                      freeze_invalid)
 
 
 @dataclasses.dataclass
@@ -100,31 +112,53 @@ def _obs_arrays(costs: HostingCosts, x, c, svc, side):
 
 
 # ----------------------------------------------------------------------
-# Fused simulation core (shared by the single and the batched entry point).
+# Fused simulation core (shared by the single, the batched and the fleet
+# entry points).
 # ----------------------------------------------------------------------
 
-def _sim_core(init_fn, step_fn, include_final_fetch: bool,
-              params, lv, M, x, c, svc, side):
-    """One instance: scan the policy, reduce on-device.
+def sim_acc0(K: int, dt) -> dict:
+    """Zero accumulator for the in-carry reductions: [3] rent/service/fetch
+    sums plus the [K] level-occupancy histogram."""
+    return {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
 
-    The running rent/service/fetch totals and the level-occupancy histogram
-    ride along in the scan carry — strictly sequential accumulation, so the
-    vmapped batch reduces in exactly the same order as a single run and the
-    two are bit-for-bit identical (a post-hoc ``jnp.sum`` is not: XLA picks
-    a different reduction tree for [B, T] than for [T]).
 
-    Returns (r_hist [T], sums [3] = rent/service/fetch, counts [K]).
+def sim_chunk_core(step_fn, include_final_fetch: bool,
+                   params, lv, M, T_len, t0, carry, x, c, svc, side):
+    """Scan slots ``[t0, t0 + chunk)`` of ONE instance, carrying
+    ``(policy state, accumulator)`` across chunk boundaries.
+
+    This is the fleet engine's unit of work (``core/fleet.py`` chains it over
+    T-chunks and vmaps/shard_maps it over instances); the whole-horizon run
+    is the one-chunk special case.  Two masking rules make mixed horizons and
+    chunking exact:
+
+      * **valid slots** — global slot index ``t < T_len`` (``T_len`` is this
+        instance's own horizon).  Invalid (padded-tail) slots add exactly
+        ``0.0`` to every accumulator and leave the policy state *frozen*, so
+        a fleet instance stops evolving at its own T and padded tails are a
+        bitwise no-op (float ``a + 0.0 == a`` for the finite, non-negative
+        costs here).
+      * **last slot** — ``t == T_len - 1``: the speculative final fetch is
+        zeroed here when ``include_final_fetch=False`` (per-instance, so
+        mixed-T batches charge each instance at its own horizon).
+
+    The running totals ride along in the scan carry — strictly sequential
+    accumulation, so the vmapped batch reduces in exactly the same order as a
+    single run, and a chunked run in exactly the same order as an unchunked
+    one (a post-hoc ``jnp.sum`` is not: XLA picks a different reduction tree
+    for [B, T] than for [T]).
+
+    Returns ``(carry', r_hist [chunk])``.
     """
     K = lv.shape[-1]
-    T = x.shape[-1]
-    dt = lv.dtype
-    # when the final speculative fetch is excluded, zero it inside the scan
-    # (same code path for single and batched runs)
-    last = jnp.arange(T) == T - 1
+    chunk = x.shape[-1]
+    tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
 
     def step(carry, inp):
         state, acc = carry
-        x_t, c_t, svc_t, side_t, last_t = inp
+        t, x_t, c_t, svc_t, side_t = inp
+        valid_t = t < T_len
+        last_t = t == T_len - 1
         r_t = state["r"]
         # one-hot selections instead of gathers/scatters: bit-identical, but
         # elementwise ops vectorise across the vmapped instance axis where
@@ -134,20 +168,36 @@ def _sim_core(init_fn, step_fn, include_final_fetch: bool,
         rent_t = c_t * lv_t
         svc_cost_t = jnp.sum(jnp.where(onehot_t, svc_t, 0.0))
         new_state = step_fn(params, state, SlotObs(x_t, c_t, svc_t, side_t))
+        new_state = freeze_invalid(valid_t, new_state, state)
         r_next = new_state["r"]
         lv_next = jnp.sum(jnp.where(jnp.arange(K) == r_next, lv, 0.0))
         fetch_t = M * jnp.maximum(lv_next - lv_t, 0.0)
         if not include_final_fetch:
             fetch_t = jnp.where(last_t, 0.0, fetch_t)
+        vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
         acc = {
-            "sums": acc["sums"] + jnp.stack([rent_t, svc_cost_t, fetch_t]),
-            "counts": acc["counts"] + onehot_t.astype(jnp.int32),
+            "sums": acc["sums"] + jnp.where(valid_t, vec, 0.0),
+            "counts": acc["counts"]
+                      + jnp.where(valid_t, onehot_t.astype(jnp.int32), 0),
         }
         return (new_state, acc), r_t
 
-    acc0 = {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
-    (_, acc), r_hist = jax.lax.scan(
-        step, (init_fn(params), acc0), (x, c, svc, side, last))
+    return jax.lax.scan(step, carry, (tids, x, c, svc, side))
+
+
+def _sim_core(init_fn, step_fn, include_final_fetch: bool,
+              params, lv, M, x, c, svc, side):
+    """One instance, whole horizon: the one-chunk case of ``sim_chunk_core``.
+
+    Returns (r_hist [T], sums [3] = rent/service/fetch, counts [K]).
+    """
+    K = lv.shape[-1]
+    T = x.shape[-1]
+    carry0 = (init_fn(params), sim_acc0(K, lv.dtype))
+    (_, acc), r_hist = sim_chunk_core(
+        step_fn, include_final_fetch, params, lv, M,
+        jnp.asarray(T, jnp.int32), jnp.asarray(0, jnp.int32), carry0,
+        x, c, svc, side)
     return r_hist, acc["sums"], acc["counts"]
 
 
@@ -252,29 +302,49 @@ def run_policy_batch(policy: PolicyFns, grid: HostingGrid, x, c,
 # Schedule evaluation (offline schedules are arrays, not policies).
 # ----------------------------------------------------------------------
 
-def _schedule_core(lv, M, r, x, c, svc):
-    # same sequential in-scan accumulation as _sim_core, for the same
-    # reason: batched and single evaluations must reduce in the same order
-    K = lv.shape[-1]
-    dt = lv.dtype
-    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), r[:-1]])
+def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc):
+    """Chunk of schedule evaluation for ONE instance; ``carry`` is
+    ``(prev level entering the chunk, accumulator)``.
 
-    def step(acc, inp):
-        r_t, prev_t, c_t, svc_t = inp
+    Same sequential in-scan accumulation and the same valid-slot masking as
+    ``sim_chunk_core``, for the same reasons: batched / single / chunked /
+    unchunked evaluations must all reduce in the same order, and slots past
+    an instance's own ``T_len`` must be bitwise no-ops (the held level is
+    frozen too, so a padded tail never charges a fetch).
+    """
+    K = lv.shape[-1]
+    chunk = r.shape[-1]
+    tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+
+    def step(carry, inp):
+        prev_t, acc = carry
+        t, r_t, c_t, svc_t = inp
+        valid_t = t < T_len
         onehot_t = jnp.arange(K) == r_t
         lv_t = jnp.sum(jnp.where(onehot_t, lv, 0.0))
         lv_prev = jnp.sum(jnp.where(jnp.arange(K) == prev_t, lv, 0.0))
         fetch_t = M * jnp.maximum(lv_t - lv_prev, 0.0)
         rent_t = c_t * lv_t
         svc_cost_t = jnp.sum(jnp.where(onehot_t, svc_t, 0.0))
+        vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
         acc = {
-            "sums": acc["sums"] + jnp.stack([rent_t, svc_cost_t, fetch_t]),
-            "counts": acc["counts"] + onehot_t.astype(jnp.int32),
+            "sums": acc["sums"] + jnp.where(valid_t, vec, 0.0),
+            "counts": acc["counts"]
+                      + jnp.where(valid_t, onehot_t.astype(jnp.int32), 0),
         }
-        return acc, None
+        prev_next = jnp.where(valid_t, r_t, prev_t).astype(jnp.int32)
+        return (prev_next, acc), None
 
-    acc0 = {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
-    acc, _ = jax.lax.scan(step, acc0, (r, prev, c, svc))
+    return jax.lax.scan(step, carry, (tids, r, c, svc))
+
+
+def _schedule_core(lv, M, r, x, c, svc):
+    K = lv.shape[-1]
+    T = r.shape[-1]
+    carry0 = (jnp.asarray(0, jnp.int32), sim_acc0(K, lv.dtype))
+    (_, acc), _ = schedule_chunk_core(
+        lv, M, jnp.asarray(T, jnp.int32), jnp.asarray(0, jnp.int32), carry0,
+        r, c, svc)
     return acc["sums"], acc["counts"]
 
 

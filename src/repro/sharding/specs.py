@@ -61,6 +61,17 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(n for n in ("pod", "data") if n in mesh.shape)
 
 
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(devices=None) -> Mesh:
+    """1-D mesh over all (or the given) devices, axis name ``fleet`` — the
+    hosting fleet engine (``core/fleet.py``) shards its [B] instance axis
+    over it.  Embarrassingly parallel: no collectives cross this axis."""
+    devs = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (FLEET_AXIS,))
+
+
 class ShardingRules:
     """Resolves a PartitionSpec for every param leaf of a model config."""
 

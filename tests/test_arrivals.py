@@ -1,0 +1,86 @@
+"""core/arrivals.py: shapes/dtypes, determinism given a key, and basic
+distributional sanity of every arrival process."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import arrivals
+from repro.core.arrivals import (GilbertElliot, adversarial_evict_bait,
+                                 adversarial_fetch_bait, bernoulli,
+                                 cluster_trace_like, poisson)
+
+T = 4000
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("sample", [
+    lambda k: bernoulli(k, 0.3, T),
+    lambda k: poisson(k, 2.5, T),
+    lambda k: GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=3.0,
+                            rate_l=0.2).sample(k, T),
+    lambda k: GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=0.9, rate_l=0.1,
+                            emission="bernoulli").sample(k, T),
+    lambda k: cluster_trace_like(k, T),
+    lambda k: cluster_trace_like(k, T, diurnal_period=500),
+], ids=["bernoulli", "poisson", "ge-poisson", "ge-bernoulli",
+        "cluster", "cluster-diurnal"])
+def test_shape_dtype_determinism(sample):
+    x1 = np.asarray(sample(KEY))
+    x2 = np.asarray(sample(KEY))
+    x3 = np.asarray(sample(jax.random.PRNGKey(43)))
+    assert x1.shape == (T,)
+    assert x1.dtype == np.int32
+    assert np.all(x1 >= 0)
+    assert np.array_equal(x1, x2), "same key must give the same trace"
+    assert not np.array_equal(x1, x3), "different keys must differ"
+
+
+def test_bernoulli_mean():
+    x = np.asarray(bernoulli(KEY, 0.3, 20000))
+    assert set(np.unique(x)) <= {0, 1}
+    assert abs(x.mean() - 0.3) < 0.02
+
+
+def test_poisson_moments():
+    x = np.asarray(poisson(KEY, 2.5, 20000))
+    assert abs(x.mean() - 2.5) < 0.1
+    assert abs(x.var() - 2.5) < 0.2      # Poisson: var == mean
+
+
+def test_gilbert_elliot_stationary_occupancy():
+    ge = GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=3.0, rate_l=0.2)
+    assert ge.stationary_h == pytest.approx(0.1 / 0.3)
+    x, states = ge.sample(KEY, 60000, return_states=True)
+    states = np.asarray(states)
+    occ_h = states.mean()
+    assert abs(occ_h - ge.stationary_h) < 0.02
+    # empirical transition frequencies match the chain parameters
+    h_to_l = np.mean(states[1:][states[:-1] == 1] == 0)
+    l_to_h = np.mean(states[1:][states[:-1] == 0] == 1)
+    assert abs(h_to_l - ge.p_hl) < 0.02
+    assert abs(l_to_h - ge.p_lh) < 0.02
+    # per-state emission rates
+    x = np.asarray(x)
+    assert abs(x[states == 1].mean() - ge.rate_h) < 0.1
+    assert abs(x[states == 0].mean() - ge.rate_l) < 0.05
+    assert abs(x.mean() - ge.mean_rate) < 0.15
+
+
+def test_cluster_trace_burstiness():
+    """The cluster-trace stand-in must be overdispersed (bursty), unlike a
+    plain Poisson at the same mean."""
+    x = np.asarray(cluster_trace_like(KEY, 50000, base_rate=2.0,
+                                      burst_rate=20.0, burst_p=0.05)).astype(float)
+    assert x.var() / x.mean() > 2.0
+    # positive autocorrelation at lag 1 (state persistence)
+    xc = x - x.mean()
+    rho1 = np.mean(xc[1:] * xc[:-1]) / x.var()
+    assert rho1 > 0.2
+
+
+def test_adversarial_constructions():
+    x = adversarial_fetch_bait(tau=10, T=30)
+    assert x.shape == (30,) and x.dtype == np.int32
+    assert np.all(x[:10] == 1) and np.all(x[10:] == 0)
+    y = adversarial_evict_bait(tau_bar=5, tau=10, T=30)
+    assert np.all(y[:5] == 0) and np.all(y[5:15] == 1) and np.all(y[15:] == 0)

@@ -1,0 +1,273 @@
+"""Fleet engine correctness (core/fleet.py), per the PR-2 acceptance bar:
+
+* sharded fleet == ``run_policy_batch`` **bit-for-bit** on a 1-device mesh,
+  and on a multi-device mesh (forced-CPU devices, run in a subprocess since
+  the test process is pinned to one device);
+* a mixed-horizon fleet matches per-instance ``run_policy`` /
+  ``offline_opt`` at each instance's *own* T, for every policy family;
+* chunked / streamed execution == unchunked, for every policy and the
+  offline DP, including a chunk size that does not divide T.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.arrivals import GilbertElliot
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (FleetBatch, evaluate_schedule_fleet,
+                              offline_opt_fleet, run_fleet)
+from repro.core.policies import (ABCPolicy, AlphaRR, MDPPolicy, RetroRenting,
+                                 StaticPolicy, offline_opt, offline_opt_batch)
+from repro.core.simulator import (evaluate_schedule_batch, run_policy,
+                                  run_policy_batch)
+from repro.sharding.specs import fleet_mesh
+
+T = 48
+CHUNKS = [16, 20]      # 20 does not divide 48: exercises the padded tail
+
+
+def mixed_costs(B=6):
+    """K in {2, 3, 5} interleaved (same scheme as test_batched_engine)."""
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(B):
+        M = float(rng.choice([2.0, 4.0, 10.0]))
+        kind = i % 3
+        if kind == 0:
+            out.append(HostingCosts.two_level(M))
+        elif kind == 1:
+            out.append(HostingCosts.three_level(M, 0.25 + 0.125 * (i % 3),
+                                                0.125 * (1 + i % 5)))
+        else:
+            out.append(HostingCosts(M=M, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                                    g=(1.0, 0.4, 0.3, 0.15, 0.0)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def stacked():
+    costs_list = mixed_costs()
+    grid = HostingGrid.from_costs(costs_list)
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 3, (grid.B, T))
+    c = rng.integers(1, 16, (grid.B, T)) / 8.0
+    side = rng.integers(0, 2, (grid.B, T))
+    ges = [GilbertElliot(p_hl=0.3, p_lh=0.2 + 0.1 * (i % 3),
+                         rate_h=2.0 + i % 2, rate_l=0.2)
+           for i in range(grid.B)]
+    c_means = [float(np.mean(c[i])) for i in range(grid.B)]
+    return costs_list, grid, x, c, side, ges, c_means
+
+
+def policy_cases(fleet, costs_list, ges, c_means):
+    """(name, PolicyFns, accounting fleet, per-instance factory) for every
+    policy family."""
+    f2 = fleet.restrict_to_endpoints()
+    return [
+        ("alpha-RR", AlphaRR.fleet(fleet), fleet,
+         lambda cc, i: AlphaRR(cc)),
+        ("RR", RetroRenting.fleet(fleet), f2,
+         lambda cc, i: RetroRenting(cc)),
+        ("static", StaticPolicy.fleet(fleet, fleet.grid.top_index()), fleet,
+         lambda cc, i: StaticPolicy(cc, cc.K - 1)),
+        ("MDP", MDPPolicy.fleet(fleet, costs_list, ges, c_means), fleet,
+         lambda cc, i: MDPPolicy(cc, ges[i], c_means[i])),
+        ("ABC", ABCPolicy.fleet(fleet, costs_list, ges, c_means), fleet,
+         lambda cc, i: ABCPolicy(cc, ges[i], c_means[i])),
+    ]
+
+
+def assert_bitwise_equal(fr, batch):
+    assert np.array_equal(fr.total, batch.total)
+    assert np.array_equal(fr.rent, batch.rent)
+    assert np.array_equal(fr.service, batch.service)
+    assert np.array_equal(fr.fetch, batch.fetch)
+    assert np.array_equal(fr.r_hist, batch.r_hist)
+    assert np.array_equal(fr.level_slots, batch.level_slots)
+
+
+# ----------------------------------------------------------------------
+# Sharded fleet == run_policy_batch (1-device mesh in-process).
+# ----------------------------------------------------------------------
+
+def test_fleet_matches_batch_one_device(stacked):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    fleet = FleetBatch.from_dense(grid, x, c, side=side)
+    mesh = fleet_mesh()
+    for name, fns, acct, _ in policy_cases(fleet, costs_list, ges, c_means):
+        batch = run_policy_batch(fns, acct.grid, x, c, side=side)
+        fr = run_fleet(fns, acct, mesh=mesh)
+        assert_bitwise_equal(fr, batch)
+
+
+def test_fleet_dp_matches_batch_dp(stacked):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    fleet = FleetBatch.from_dense(grid, x, c)
+    bo = offline_opt_batch(grid, x, c)
+    fo = offline_opt_fleet(fleet)
+    assert np.array_equal(fo.cost, bo.cost)
+    assert np.array_equal(fo.r_hist, bo.r_hist)
+    assert np.array_equal(fo.sim.total, bo.sim.total)
+
+
+def test_fleet_schedule_eval_matches_batch(stacked):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    rng = np.random.default_rng(11)
+    r = np.stack([rng.integers(0, cc.K, T) for cc in costs_list])
+    fleet = FleetBatch.from_dense(grid, x, c)
+    batch = evaluate_schedule_batch(grid, r, x, c)
+    fr = evaluate_schedule_fleet(fleet, r)
+    assert_bitwise_equal(fr, batch)
+    frc = evaluate_schedule_fleet(fleet, r, chunk_size=CHUNKS[1])
+    assert_bitwise_equal(frc, batch)
+
+
+# ----------------------------------------------------------------------
+# Mixed horizons: each instance at its own T.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("include_final_fetch", [True, False])
+def test_mixed_horizons_match_per_instance(stacked, include_final_fetch):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    Ts = [48, 37, 23, 48, 11, 30]
+    xs = [x[i, :t] for i, t in enumerate(Ts)]
+    cs = [c[i, :t] for i, t in enumerate(Ts)]
+    sides = [side[i, :t] for i, t in enumerate(Ts)]
+    fleet = FleetBatch.from_instances(costs_list, xs, cs, sides=sides)
+    for name, fns, acct, make in policy_cases(fleet, costs_list, ges, c_means):
+        fr = run_fleet(fns, acct, include_final_fetch=include_final_fetch)
+        for i, cc in enumerate(costs_list):
+            pol = make(cc, i)
+            single = run_policy(pol, pol.costs, xs[i], cs[i], side=sides[i],
+                                include_final_fetch=include_final_fetch)
+            assert fr.total[i] == single.total, (name, i)
+            assert fr.fetch[i] == single.fetch, (name, i)
+            assert np.array_equal(fr.r_hist[i, :Ts[i]], single.r_hist), (name, i)
+            K_i = 2 if name == "RR" else cc.K
+            assert np.array_equal(fr.level_slots[i][:K_i],
+                                  single.level_slots), (name, i)
+            assert fr.level_slots[i][K_i:].sum() == 0, (name, i)
+
+
+def test_mixed_horizons_dp_matches_per_instance(stacked):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    Ts = [48, 37, 23, 48, 11, 30]
+    xs = [x[i, :t] for i, t in enumerate(Ts)]
+    cs = [c[i, :t] for i, t in enumerate(Ts)]
+    fleet = FleetBatch.from_instances(costs_list, xs, cs)
+    fo = offline_opt_fleet(fleet)
+    for i, cc in enumerate(costs_list):
+        single = offline_opt(cc, xs[i], cs[i])
+        assert fo.cost[i] == pytest.approx(single.cost, abs=1e-9)
+        assert np.array_equal(fo.r_hist[i, :Ts[i]], single.r_hist)
+        assert fo.sim.total[i] == single.sim.total
+        # frozen past the horizon: the tail repeats the last valid level
+        if Ts[i] < fleet.T_max:
+            assert np.all(fo.r_hist[i, Ts[i]:] == fo.r_hist[i, Ts[i] - 1])
+
+
+# ----------------------------------------------------------------------
+# Chunked / streamed == unchunked.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_equals_unchunked_every_policy(stacked, chunk):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    Ts = [48, 37, 23, 48, 11, 30]
+    xs = [x[i, :t] for i, t in enumerate(Ts)]
+    cs = [c[i, :t] for i, t in enumerate(Ts)]
+    sides = [side[i, :t] for i, t in enumerate(Ts)]
+    fleet = FleetBatch.from_instances(costs_list, xs, cs, sides=sides)
+    for name, fns, acct, _ in policy_cases(fleet, costs_list, ges, c_means):
+        base = run_fleet(fns, acct)
+        chunked = run_fleet(fns, acct, chunk_size=chunk)
+        streamed = run_fleet(fns, acct, chunk_size=chunk, stream=True)
+        for fr in (chunked, streamed):
+            assert_bitwise_equal(fr, base)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_equals_unchunked_dp(stacked, chunk):
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    Ts = [48, 37, 23, 48, 11, 30]
+    xs = [x[i, :t] for i, t in enumerate(Ts)]
+    cs = [c[i, :t] for i, t in enumerate(Ts)]
+    fleet = FleetBatch.from_instances(costs_list, xs, cs)
+    base = offline_opt_fleet(fleet)
+    chunked = offline_opt_fleet(fleet, chunk_size=chunk)
+    assert np.array_equal(chunked.cost, base.cost)
+    assert np.array_equal(chunked.r_hist, base.r_hist)
+    assert np.array_equal(chunked.sim.total, base.sim.total)
+
+
+def test_model2_service_fleet_chunked(stacked):
+    """Realized [B, T, K] service costs ride through chunking unchanged."""
+    import jax
+    from repro.core.simulator import model2_service_matrix
+    costs_list, grid, x, c, side, ges, c_means = stacked
+    R = int(x.max())
+    svc = np.zeros((grid.B, T, grid.K))
+    for i, cc in enumerate(costs_list):
+        svc[i, :, :cc.K] = np.asarray(model2_service_matrix(
+            jax.random.PRNGKey(i), cc, x[i], max_per_slot=R))
+    fleet = FleetBatch.from_dense(grid, x, c, svc=svc)
+    fns = AlphaRR.fleet(fleet)
+    batch = run_policy_batch(AlphaRR.batch(grid), grid, x, c, svc=svc)
+    base = run_fleet(fns, fleet)
+    assert_bitwise_equal(base, batch)
+    for fr in (run_fleet(fns, fleet, chunk_size=CHUNKS[1]),
+               run_fleet(fns, fleet, chunk_size=CHUNKS[1], stream=True)):
+        assert_bitwise_equal(fr, base)
+
+
+# ----------------------------------------------------------------------
+# Multi-device mesh (forced CPU devices; subprocess, since this process is
+# pinned to one device by conftest).
+# ----------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core.costs import HostingCosts, HostingGrid
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR, offline_opt_batch
+    from repro.core.simulator import run_policy_batch
+    from repro.sharding.specs import fleet_mesh
+
+    rng = np.random.default_rng(3)
+    # B=6 is not a multiple of 4: exercises dummy-instance padding
+    costs_list = [HostingCosts.three_level(4.0 + i, 0.3, 0.4) for i in range(5)]
+    costs_list.append(HostingCosts.two_level(4.0))
+    grid = HostingGrid.from_costs(costs_list)
+    x = rng.integers(0, 3, (6, 48)); c = rng.integers(1, 16, (6, 48)) / 8.0
+    batch = run_policy_batch(AlphaRR.batch(grid), grid, x, c)
+    fleet = FleetBatch.from_dense(grid, x, c)
+    for mesh in (fleet_mesh(jax.devices()[:1]), fleet_mesh()):
+        for kw in ({}, {"chunk_size": 20}, {"chunk_size": 20, "stream": True}):
+            fr = run_fleet(AlphaRR.fleet(fleet), fleet, mesh=mesh, **kw)
+            assert np.array_equal(fr.total, batch.total), (mesh, kw)
+            assert np.array_equal(fr.r_hist, batch.r_hist), (mesh, kw)
+            assert np.array_equal(fr.level_slots, batch.level_slots), (mesh, kw)
+    bo = offline_opt_batch(grid, x, c)
+    fo = offline_opt_fleet(fleet, mesh=fleet_mesh(), chunk_size=20)
+    assert np.array_equal(fo.cost, bo.cost)
+    assert np.array_equal(fo.r_hist, bo.r_hist)
+    assert np.array_equal(fo.sim.total, bo.sim.total)
+    print("MULTI-DEVICE-OK")
+""")
+
+
+def test_fleet_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MULTI-DEVICE-OK" in out.stdout

@@ -1,0 +1,85 @@
+"""core/rentcosts.py: shapes/dtypes, determinism given a key, Assumption-3
+bound clipping, negative association of the antithetic construction, and the
+Hannan-Rissanen fitter's round-trip sanity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import rentcosts
+from repro.core.rentcosts import (ARMAProcess, aws_spot_like, constant,
+                                  fit_arma, iid_uniform,
+                                  negatively_associated)
+
+T = 4000
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("sample", [
+    lambda k: ARMAProcess(mean=0.5).sample(k, T),
+    lambda k: aws_spot_like(k, 0.35, T),
+    lambda k: iid_uniform(k, 0.5, 0.2, T),
+    lambda k: negatively_associated(k, 0.5, 0.2, T),
+], ids=["arma", "aws-spot", "iid-uniform", "neg-assoc"])
+def test_shape_dtype_determinism(sample):
+    c1 = np.asarray(sample(KEY))
+    c2 = np.asarray(sample(KEY))
+    c3 = np.asarray(sample(jax.random.PRNGKey(8)))
+    assert c1.shape == (T,)
+    assert np.issubdtype(c1.dtype, np.floating)
+    assert np.all(np.isfinite(c1))
+    assert np.array_equal(c1, c2), "same key must give the same trace"
+    assert not np.array_equal(c1, c3), "different keys must differ"
+
+
+def test_arma_respects_assumption3_bounds():
+    proc = ARMAProcess(mean=0.5, sigma=2.0, c_min=0.1, c_max=1.0)
+    c = np.asarray(proc.sample(KEY, 20000))
+    assert c.min() >= 0.1 - 1e-6
+    assert c.max() <= 1.0 + 1e-6
+    # a huge sigma must actually hit both clip rails
+    assert np.any(c <= 0.1 + 1e-6) and np.any(c >= 1.0 - 1e-6)
+
+
+def test_arma_mean_reversion():
+    c = np.asarray(aws_spot_like(KEY, 0.35, 50000))
+    assert abs(c.mean() - 0.35) < 0.05
+    # slow mean reversion: positively autocorrelated at lag 1
+    cc = c - c.mean()
+    rho1 = np.mean(cc[1:] * cc[:-1]) / c.var()
+    assert rho1 > 0.3
+
+
+def test_iid_uniform_bounds_and_mean():
+    c = np.asarray(iid_uniform(KEY, 0.5, 0.2, 20000))
+    assert c.min() >= 0.3 - 1e-6 and c.max() <= 0.7 + 1e-6
+    assert abs(c.mean() - 0.5) < 0.01
+
+
+def test_negatively_associated_pairs():
+    """Antithetic pairs (U, 1-U): consecutive pair members must be perfectly
+    anticorrelated and each uniform on the band."""
+    c = np.asarray(negatively_associated(KEY, 0.5, 0.2, 20000))
+    assert c.min() >= 0.3 - 1e-6 and c.max() <= 0.7 + 1e-6
+    u, v = c[0::2], c[1::2]
+    assert np.allclose(u + v, 1.0, atol=1e-6)        # v = 1 - u mapped to band
+    corr = np.corrcoef(u, v)[0, 1]
+    assert corr < -0.999
+
+
+def test_constant():
+    c = np.asarray(constant(0.35, 100))
+    assert c.shape == (100,) and np.all(c == np.float32(0.35))
+
+
+def test_fit_arma_roundtrip():
+    """Hannan-Rissanen on a long synthetic series recovers a process with
+    the right mean and bounds, and its samples stay inside them."""
+    series = np.asarray(aws_spot_like(KEY, 0.5, 8000))
+    proc = fit_arma(series, p=4, q=2)
+    assert isinstance(proc, ARMAProcess)
+    assert abs(proc.mean - float(series.mean())) < 1e-6
+    assert len(proc.ar) == 4 and len(proc.ma) == 2
+    assert proc.sigma > 0
+    c = np.asarray(proc.sample(jax.random.PRNGKey(1), 2000))
+    assert c.min() >= proc.c_min - 1e-6 and c.max() <= proc.c_max + 1e-6
+    assert abs(c.mean() - proc.mean) < 0.1
