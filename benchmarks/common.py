@@ -1,22 +1,40 @@
 """Shared helpers for the paper-figure benchmarks.
 
-Sweep-style figures now run on the batched engine: every (parameter-grid
+Sweep-style figures run on the batched/fleet engine: every (parameter-grid
 point x Monte-Carlo seed) pair becomes one instance of a stacked
-``HostingGrid`` and the whole sweep is a handful of ``jit(vmap(scan))``
-calls (``batch_policy_suite``), instead of a Python loop of per-instance
-simulations.  ``mc_aggregate`` then collapses the seed axis into
-mean / 95%-CI columns.
+``HostingGrid`` and the whole sweep is a handful of compiled calls instead
+of a Python loop of per-instance simulations.  ``mc_aggregate`` then
+collapses the seed axis into mean / 95%-CI columns.
+
+Two suite entry points:
+
+* ``batch_policy_suite`` — classic: the figure module materializes [B, T]
+  observation arrays and the suite runs ``run_policy_batch`` /
+  ``offline_opt_batch`` on them.
+* ``scenario_policy_suite`` — declarative: the figure module passes a
+  ``scenario_fn(grid) -> Scenario`` and generation fuses into the fleet
+  scan (``run_fleet(scenario=...)`` / ``offline_opt_fleet(scenario=...)``)
+  — no observation array is ever materialized, on host or device.  The
+  factory is called once per level grid (the full grid and its endpoint
+  restriction) so Model-2 service streams bind the right ``g`` columns and
+  RR prices the exact endpoint gather of the same coupled uniforms.
+
+The LB curves need arrival/rent *means*; the scenario suite takes them as
+arguments (analytic means of the declared processes) since no realized
+trace exists to average — the checks never read LB rows, they are plotted
+reference curves.
 """
 from __future__ import annotations
 
 import math
 import time
 from collections import OrderedDict
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
 from repro.core.policies import AlphaRR, RetroRenting, offline_opt_batch
 from repro.core.simulator import run_policy_batch
 from repro.core import bounds
@@ -73,6 +91,68 @@ def batch_policy_suite(costs_list: Sequence[HostingCosts], x, c, svc=None,
             c_hat = float(np.mean(cb[i]))
             row["alpha-LB"] = bounds.lemma14_opt_on_per_slot(costs, p_hat, c_hat)
             row["LB"] = min(c_hat, p_hat)
+        rows.append(row)
+    return rows
+
+
+def scenario_policy_suite(costs_list: Sequence[HostingCosts],
+                          scenario_fn: Callable, T: int, *,
+                          x_means=None, c_means=None,
+                          include_bounds: bool = True,
+                          chunk_size: Optional[int] = None):
+    """The classic six-curve suite with *fused on-device generation*.
+
+    Args:
+      costs_list: B per-instance costs (mixed K allowed).
+      scenario_fn: ``(grid: HostingGrid) -> Scenario`` factory; called for
+        the stacked grid and again for its endpoint restriction (RR/OPT).
+      T: horizon (scalar or [B]).
+      x_means / c_means: analytic per-instance arrival/rent means for the
+        Lemma-14 LB curves (scalar or [B]); bounds are skipped if omitted.
+      chunk_size: forwarded to the engine (None = single chunk).
+
+    Returns the same row dicts as ``batch_policy_suite``.
+    """
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    fleet = FleetBatch.for_scenario(grid, T)
+    sc = scenario_fn(grid)
+
+    fns = AlphaRR.fleet(fleet)
+    run_fleet(fns, fleet, scenario=sc, chunk_size=chunk_size)  # warm jit
+    t0 = time.time()
+    ar = run_fleet(fns, fleet, scenario=sc, chunk_size=chunk_size)
+    us_per_slot = (time.time() - t0) / float(np.sum(fleet.T)) * 1e6
+
+    g2 = grid.restrict_to_endpoints()
+    fleet2 = FleetBatch.for_scenario(g2, T)
+    sc2 = scenario_fn(g2)
+    rr = run_fleet(RetroRenting.fleet(fleet), fleet2, scenario=sc2,
+                   chunk_size=chunk_size)
+    aopt = offline_opt_fleet(fleet, scenario=sc, chunk_size=chunk_size)
+    opt = offline_opt_fleet(fleet2, scenario=sc2, chunk_size=chunk_size)
+
+    if include_bounds and (x_means is None or c_means is None):
+        include_bounds = False
+    if include_bounds:
+        x_means = np.broadcast_to(np.asarray(x_means, np.float64), (B,))
+        c_means = np.broadcast_to(np.asarray(c_means, np.float64), (B,))
+
+    Ts = np.asarray(fleet.T, np.float64)
+    rows = []
+    for i, costs in enumerate(costs_list):
+        row = {
+            "alpha-RR": ar.total[i] / Ts[i],
+            "RR": rr.total[i] / Ts[i],
+            "alpha-OPT": aopt.cost[i] / Ts[i],
+            "OPT": opt.cost[i] / Ts[i],
+            "_us_per_slot": us_per_slot,
+            "hist": ar.level_slots[i][:costs.K].tolist(),
+        }
+        if include_bounds:
+            row["alpha-LB"] = bounds.lemma14_opt_on_per_slot(
+                costs, float(x_means[i]), float(c_means[i]))
+            row["LB"] = min(float(c_means[i]), float(x_means[i]))
         rows.append(row)
     return rows
 

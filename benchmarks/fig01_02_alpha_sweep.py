@@ -2,17 +2,21 @@
 function of alpha + g(alpha).  M=10, c=0.35, p=0.35, alpha=0.4 (paper values),
 Bernoulli arrivals, ARMA(4,2) rent.
 
-Batched: the (10 alpha-grid points) x (n_seeds sample paths) sweep runs as
-ONE stacked batch per policy; rows report seed-means with 95% CIs.
+Declarative scenario spec: the (10 alpha-grid points) x (n_seeds sample
+paths) sweep is ONE fused-generation fleet per policy — each grid point of
+a seed replays that seed's sample path by *sharing its keys* (the classic
+reuse-one-trace idiom, now a key-sharing declaration instead of a
+broadcast obs array); nothing is materialized on host or device.  Rows
+report seed-means with 95% CIs.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
+from repro.core import scenarios as S
 from repro.core.costs import HostingCosts
-from benchmarks.common import batch_policy_suite, mc_aggregate
+from benchmarks.common import scenario_policy_suite, mc_aggregate
 
 M, C_MEAN, P, ALPHA = 10.0, 0.35, 0.35, 0.4
 T = 10000
@@ -20,19 +24,25 @@ AGS = np.linspace(0.5, 1.4, 10)
 
 
 def run(T=T, seed=0, n_seeds=4):
-    costs_list, xs, cs, meta = [], [], [], []
+    c_lo, c_hi = S.spot_bounds(C_MEAN)
+    costs_list, meta, kxs, kcs = [], [], [], []
     for s in range(n_seeds):
         kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        x = np.asarray(arrivals.bernoulli(kx, P, T))
-        c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
         for ag in AGS:
             g_alpha = float(np.clip(ag - ALPHA, 0.0, 1.0))
             costs_list.append(HostingCosts.three_level(
-                M, ALPHA, g_alpha, c_min=float(c.min()), c_max=float(c.max())))
-            xs.append(x)
-            cs.append(c)
+                M, ALPHA, g_alpha, c_min=c_lo, c_max=c_hi))
+            kxs.append(kx)
+            kcs.append(kc)
             meta.append({"alpha_plus_g": round(float(ag), 3), "seed": s})
-    suite = batch_policy_suite(costs_list, np.stack(xs), np.stack(cs))
+    kxs, kcs = np.stack(kxs), np.stack(kcs)
+
+    def scenario_fn(grid):
+        return S.combine(S.bernoulli_arrivals(kxs, P, grid.B),
+                         S.spot_rents(kcs, C_MEAN, grid.B))
+
+    suite = scenario_policy_suite(costs_list, scenario_fn, T,
+                                  x_means=P, c_means=C_MEAN)
     rows = []
     for m, r in zip(meta, suite):
         hist = r.pop("hist")

@@ -2,17 +2,20 @@
 probability p (Figs 5/6), in the alpha+g(alpha)<1 and >=1 regimes.
 Paper values: c=0.35; (alpha, g) = (0.239, 0.380) / (0.5, 0.7).
 
-Batched: all (regime x M) and (regime x p) grid points x n_seeds sample
-paths are stacked into one batch; rows are seed-means with 95% CIs.
+Declarative scenario spec: per-instance Bernoulli-p and rent params ride in
+the stream params, so the whole (regime x M) + (regime x p) x n_seeds sweep
+is one fused-generation fleet per policy — the M-sweep instances of a seed
+share one sample path (shared keys), each p gets its own path (per-p keys),
+exactly the legacy trace-reuse pattern without materializing anything.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
+from repro.core import scenarios as S
 from repro.core.costs import HostingCosts
-from benchmarks.common import batch_policy_suite, mc_aggregate
+from benchmarks.common import scenario_policy_suite, mc_aggregate
 
 C_MEAN = 0.35
 REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
@@ -20,38 +23,39 @@ MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 PS = [0.15, 0.25, 0.35, 0.45, 0.6, 0.8]
 
 
-def _instance(key, p, T):
-    kx, kc = jax.random.split(key)
-    x = np.asarray(arrivals.bernoulli(kx, p, T))
-    c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
-    return x, c
-
-
 def run(T=8000, seed=0, n_seeds=4):
-    costs_list, xs, cs, meta = [], [], [], []
+    c_lo, c_hi = S.spot_bounds(C_MEAN)
+    costs_list, meta, kxs, kcs, ps = [], [], [], [], []
     for s in range(n_seeds):
-        x_m, c_m = _instance(jax.random.PRNGKey(seed + 101 * s), 0.42, T)
-        p_paths = {p: _instance(jax.random.PRNGKey(seed + 101 * s + 1 + i), p, T)
-                   for i, p in enumerate(PS)}
+        km = jax.random.split(jax.random.PRNGKey(seed + 101 * s))
+        kp = {p: jax.random.split(jax.random.PRNGKey(seed + 101 * s + 1 + i))
+              for i, p in enumerate(PS)}
         for regime, (alpha, g_alpha) in REGIMES.items():
             for M in MS:
                 costs_list.append(HostingCosts.three_level(
-                    M, alpha, g_alpha, c_min=float(c_m.min()),
-                    c_max=float(c_m.max())))
-                xs.append(x_m)
-                cs.append(c_m)
+                    M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+                kxs.append(km[0])
+                kcs.append(km[1])
+                ps.append(0.42)
                 meta.append({"fig": "3_4", "regime": regime, "M": M,
                              "p": 0.42, "seed": s})
             for p in PS:
-                x2, c2 = p_paths[p]
                 costs_list.append(HostingCosts.three_level(
-                    10.0, alpha, g_alpha, c_min=float(c2.min()),
-                    c_max=float(c2.max())))
-                xs.append(x2)
-                cs.append(c2)
+                    10.0, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+                kxs.append(kp[p][0])
+                kcs.append(kp[p][1])
+                ps.append(p)
                 meta.append({"fig": "5_6", "regime": regime, "M": 10.0,
                              "p": p, "seed": s})
-    suite = batch_policy_suite(costs_list, np.stack(xs), np.stack(cs))
+    kxs, kcs = np.stack(kxs), np.stack(kcs)
+    ps = np.asarray(ps, np.float32)
+
+    def scenario_fn(grid):
+        return S.combine(S.bernoulli_arrivals(kxs, ps, grid.B),
+                         S.spot_rents(kcs, C_MEAN, grid.B))
+
+    suite = scenario_policy_suite(costs_list, scenario_fn, T,
+                                  x_means=ps, c_means=C_MEAN)
     rows = [{**m, **{k: v for k, v in r.items() if k != "hist"}}
             for m, r in zip(meta, suite)]
     return mc_aggregate(rows, ["fig", "regime", "M", "p"])

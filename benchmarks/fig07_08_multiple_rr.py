@@ -2,53 +2,58 @@
 alpha-RR vs RR, Gilbert-Elliot arrivals (Bern(0.9) in H, Bern(0.1) in L).
 Paper values: alpha=.3 g=.4 | a1=.4 g=.3 | a2=.5 g=.15, c=0.5.
 
-Batched: the K=5 (multiple-RR) and K=3 (alpha-RR) instances for every
-(M, seed) pair live in ONE mixed-K ``HostingGrid`` (padded + masked), so a
-single vmapped scan serves both level-grid families; RR runs on the
-endpoint restriction of the same grid.
+Declarative scenario spec: the K=5 (multiple-RR) and K=3 (alpha-RR)
+instances for every (M, seed) pair live in ONE mixed-K ``HostingGrid``
+(padded + masked) driven by a fused Gilbert-Elliot + spot-rent scenario
+(per-seed shared keys), so a single fleet scan serves both level-grid
+families with zero materialized observations; RR runs on the endpoint
+restriction of the same grid/scenario.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
+from repro.core import scenarios as S
 from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, run_fleet
 from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.simulator import run_policy_batch
 from benchmarks.common import mc_aggregate
 
 LEVELS = (0.0, 0.3, 0.4, 0.5, 1.0)
 GS = (1.0, 0.4, 0.3, 0.15, 0.0)
+GE = dict(p_hl=0.4, p_lh=0.4, rate_h=0.9, rate_l=0.1)
 C_MEAN = 0.5
 MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 
 
 def run(T=8000, seed=0, n_seeds=4):
-    ge = arrivals.GilbertElliot(p_hl=0.4, p_lh=0.4, rate_h=0.9, rate_l=0.1,
-                                emission="bernoulli")
-    costs_list, xs, cs, meta = [], [], [], []
+    c_lo, c_hi = S.spot_bounds(C_MEAN)
+    costs_list, meta, kxs, kcs = [], [], [], []
     for s in range(n_seeds):
         kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        x = np.asarray(ge.sample(kx, T))
-        c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
-        cmin, cmax = float(c.min()), float(c.max())
         for M in MS:
             for fam, costs in (
                     ("multiple-RR", HostingCosts(M=M, levels=LEVELS, g=GS,
-                                                 c_min=cmin, c_max=cmax)),
+                                                 c_min=c_lo, c_max=c_hi)),
                     ("alpha-RR", HostingCosts.three_level(M, 0.3, 0.4,
-                                                          c_min=cmin,
-                                                          c_max=cmax))):
+                                                          c_min=c_lo,
+                                                          c_max=c_hi))):
                 costs_list.append(costs)
-                xs.append(x)
-                cs.append(c)
+                kxs.append(kx)
+                kcs.append(kc)
                 meta.append({"M": M, "family": fam, "seed": s})
     grid = HostingGrid.from_costs(costs_list)       # mixed K: 5 and 3
-    x_b, c_b = np.stack(xs), np.stack(cs)
-    multi = run_policy_batch(AlphaRR.batch(grid), grid, x_b, c_b)
-    rr = run_policy_batch(RetroRenting.batch(grid),
-                          grid.restrict_to_endpoints(), x_b, c_b)
+    B = grid.B
+    kxs, kcs = np.stack(kxs), np.stack(kcs)
+    sc = S.combine(
+        S.ge_arrivals(kxs, GE["p_hl"], GE["p_lh"], GE["rate_h"], GE["rate_l"],
+                      B, emission="bernoulli"),
+        S.spot_rents(kcs, C_MEAN, B))
+    fleet = FleetBatch.for_scenario(grid, T)
+    multi = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc)
+    rr = run_fleet(RetroRenting.fleet(fleet), fleet.restrict_to_endpoints(),
+                   scenario=sc)
 
     per_seed = {}
     for i, m in enumerate(meta):

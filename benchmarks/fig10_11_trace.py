@@ -2,42 +2,54 @@
 for the Google cluster trace; see DESIGN.md) + AWS-spot-like ARMA rents,
 c=0.135, regimes (0.239, 0.38) and (0.5, 0.7), cost vs M.
 
-Batched: the (regime x M grid) x (n_seeds sample paths) sweep runs as ONE
-stacked batch per policy on the batched engine (each seed draws its own
-arrival/rent trace); rows report seed-means with 95% CIs, keyed by
-(regime, M) like the paper's curves.
+Declarative scenario spec: the (regime x M grid) x (n_seeds sample paths)
+sweep runs as ONE fused-generation fleet per policy (bursty + spot streams,
+per-seed shared keys so every grid point of a seed scores the same sample
+path); rows report seed-means with 95% CIs, keyed by (regime, M) like the
+paper's curves.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
+from repro.core import scenarios as S
+from repro.core.arrivals import GilbertElliot
 from repro.core.costs import HostingCosts
-from benchmarks.common import batch_policy_suite, mc_aggregate
+from repro.core.scenarios.streams import BURSTY_EXIT_P
+from benchmarks.common import scenario_policy_suite, mc_aggregate
 
 C_MEAN = 0.135
+BURST = dict(base_rate=0.15, burst_rate=1.2, burst_p=0.08)
 REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
 MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 
+# stationary mean rate of the bursty GE background (for the LB curves)
+X_MEAN = GilbertElliot(p_hl=BURSTY_EXIT_P, p_lh=BURST["burst_p"],
+                       rate_h=BURST["burst_rate"],
+                       rate_l=BURST["base_rate"]).mean_rate
+
 
 def run(T=8000, seed=0, n_seeds=4):
-    costs_list, xs, cs, meta = [], [], [], []
+    c_lo, c_hi = S.spot_bounds(C_MEAN)
+    costs_list, meta, kxs, kcs = [], [], [], []
     for s in range(n_seeds):
         kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        x = np.asarray(arrivals.cluster_trace_like(kx, T, base_rate=0.15,
-                                                   burst_rate=1.2,
-                                                   burst_p=0.08))
-        c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
         for regime, (alpha, g_alpha) in REGIMES.items():
             for M in MS:
                 costs_list.append(HostingCosts.three_level(
-                    M, alpha, g_alpha, c_min=float(c.min()),
-                    c_max=float(c.max())))
-                xs.append(x)
-                cs.append(c)
+                    M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+                kxs.append(kx)
+                kcs.append(kc)
                 meta.append({"regime": regime, "M": M, "seed": s})
-    suite = batch_policy_suite(costs_list, np.stack(xs), np.stack(cs))
+    kxs, kcs = np.stack(kxs), np.stack(kcs)
+
+    def scenario_fn(grid):
+        return S.combine(S.bursty_arrivals(kxs, grid.B, **BURST),
+                         S.spot_rents(kcs, C_MEAN, grid.B))
+
+    suite = scenario_policy_suite(costs_list, scenario_fn, T,
+                                  x_means=X_MEAN, c_means=C_MEAN)
     rows = []
     for m, r in zip(meta, suite):
         r.pop("hist")

@@ -2,76 +2,83 @@
 cost/slot vs fetch cost M for lambda in {2,4,8} (c=4.5, alpha=.3, g=.5), and
 vs rent c for lambda=4, M=40.
 
-Batched: all (lambda, M) and (c,) grid points x n_seeds realized sample
-paths (arrivals AND the coupled Model-2 service uniforms are redrawn per
-seed) are stacked into one batch; rows are seed-means with 95% CIs.
+Declarative scenario spec: all (lambda, M) and (c,) grid points x n_seeds
+sample paths run as one fused-generation fleet per policy — arrivals AND
+the coupled Model-2 service uniforms are drawn on device inside the scan.
+Key sharing reproduces the paper's common-sample-path scoring: the M-sweep
+instances of a (lambda, seed) cell share arrival AND service keys (the
+service uniforms do not depend on M), so the same realized requests score
+every M; RR prices the endpoint gather of the same uniforms by binding the
+service stream to the restricted grid's g columns.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
-from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.simulator import model2_service_matrix, run_policy_batch
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts
 from repro.core import bounds
+from repro.core.fleet import FleetBatch, run_fleet
+from repro.core.policies import AlphaRR, RetroRenting
+from repro.core.costs import HostingGrid
 from benchmarks.common import mc_aggregate
 
 ALPHA, G_ALPHA = 0.30, 0.50
 LAMS = [2.0, 4.0, 8.0]
 M_GRID = [10.0, 20.0, 40.0, 80.0]
 C_GRID = [1.0, 2.0, 3.0, 4.5, 6.0, 8.0, 10.0]
+MAX_PER_SLOT = 24      # covers Poisson(8) tails (P[X>24] ~ 1e-6 per slot)
 
 
 def run(T=6000, seed=0, n_seeds=4):
     key = jax.random.PRNGKey(seed)
-    costs_list, xs, cs, svcs, meta = [], [], [], [], []
+    costs_list, meta, kxs, kcs, ksvcs, lams = [], [], [], [], [], []
 
-    def add(costs, x, c, svc, **m):
+    def add(costs, kx, kc, ksvc, **m):
         costs_list.append(costs)
-        xs.append(x)
-        cs.append(c)
-        svcs.append(np.asarray(svc))
+        kxs.append(kx)
+        kcs.append(kc)
+        ksvcs.append(ksvc)
+        lams.append(m["lam"])
         meta.append(m)
 
     for s in range(n_seeds):
         ks = jax.random.fold_in(key, 7919 * s)
         for lam in LAMS:
             kx, kc, ksvc = jax.random.split(jax.random.fold_in(ks, int(lam)), 3)
-            x = np.asarray(arrivals.poisson(kx, lam, T))
-            c = np.asarray(rentcosts.aws_spot_like(kc, 4.5, T))
-            # service realization is per (lam, seed): the same coupled
-            # uniforms score every M (the matrix does not depend on M),
-            # like the paper's common sample path
-            svc = model2_service_matrix(
-                ksvc, HostingCosts.three_level(10.0, ALPHA, G_ALPHA), x)
+            c_lo, c_hi = S.spot_bounds(4.5)
             for M in M_GRID:
                 costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
-                                                 c_min=float(c.min()),
-                                                 c_max=float(c.max()))
-                add(costs, x, c, svc, fig="12_14", lam=lam, M=M, c_mean=4.5,
-                    seed=s)
+                                                 c_min=c_lo, c_max=c_hi)
+                add(costs, kx, kc, ksvc, fig="12_14", lam=lam, M=M,
+                    c_mean=4.5, seed=s)
         # Fig 15: vs rent c at lam=4, M=40
         kx, ksvc = jax.random.split(jax.random.fold_in(ks, 99))
-        x = np.asarray(arrivals.poisson(kx, 4.0, T))
-        svc = model2_service_matrix(
-            ksvc, HostingCosts.three_level(40.0, ALPHA, G_ALPHA), x)
         for cc in C_GRID:
             kc2 = jax.random.fold_in(ks, int(cc * 10))
-            c = np.asarray(rentcosts.aws_spot_like(kc2, cc, T))
+            c_lo, c_hi = S.spot_bounds(cc)
             costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
-                                             c_min=float(c.min()),
-                                             c_max=float(c.max()))
-            add(costs, x, c, svc, fig="15", lam=4.0, M=40.0, c_mean=cc, seed=s)
+                                             c_min=c_lo, c_max=c_hi)
+            add(costs, kx, kc2, ksvc, fig="15", lam=4.0, M=40.0,
+                c_mean=cc, seed=s)
 
     grid = HostingGrid.from_costs(costs_list)
-    x_b, c_b = np.stack(xs), np.stack(cs)
-    svc_b = np.stack(svcs)
-    ar = run_policy_batch(AlphaRR.batch(grid), grid, x_b, c_b, svc=svc_b)
-    rr = run_policy_batch(RetroRenting.batch(grid),
-                          grid.restrict_to_endpoints(), x_b, c_b,
-                          svc=grid.endpoint_service(svc_b))
+    B = grid.B
+    kxs, kcs, ksvcs = np.stack(kxs), np.stack(kcs), np.stack(ksvcs)
+    lams_a = np.asarray(lams, np.float32)
+    c_means = np.asarray([m["c_mean"] for m in meta], np.float32)
+
+    def scenario_fn(g):
+        return S.combine(S.poisson_arrivals(kxs, lams_a, B),
+                         S.spot_rents(kcs, c_means, B),
+                         svc=S.model2_service(ksvcs, g.g, B, MAX_PER_SLOT))
+
+    fleet = FleetBatch.for_scenario(grid, T)
+    ar = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=scenario_fn(grid))
+    g2 = grid.restrict_to_endpoints()
+    rr = run_fleet(RetroRenting.fleet(fleet), fleet.restrict_to_endpoints(),
+                   scenario=scenario_fn(g2))
     rows = []
     for i, m in enumerate(meta):
         costs = costs_list[i]

@@ -1,15 +1,25 @@
 """Figs 17-22 (Model 2, Gilbert-Elliot Poisson arrivals): alpha-RR vs RR vs
 the statistics-aware MDP and ABC baselines; three transition regimes;
-alpha=0.16, g(alpha)=0.76 (the Fig-23 operating point), M=50 / c sweeps."""
+alpha=0.16, g(alpha)=0.76 (the Fig-23 operating point), M=50 / c sweeps.
+
+Fleet-engine port: the (3 regimes x 8 sweep points x n_seeds) grid runs as
+ONE fused-generation fleet per policy — no per-instance ``run_policy``
+loop.  The GE scenario emits the chain state as side-state, which is
+exactly what the batched MDP/ABC policies observe (``side=states``
+surviving batching); the Model-2 service uniforms are drawn on device,
+key-shared across the sweep points of a (regime, seed) cell like the
+paper's common sample path.  Rows are seed-means with 95% CIs.
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts
-from repro.core.costs import HostingCosts
-from repro.core.policies import AlphaRR, RetroRenting, MDPPolicy, ABCPolicy
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import scenarios as S
+from repro.core.arrivals import GilbertElliot
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, run_fleet
+from repro.core.policies import ABCPolicy, AlphaRR, MDPPolicy, RetroRenting
 
 ALPHA, G_ALPHA = 0.16, 0.76
 REGIMES = {
@@ -17,49 +27,76 @@ REGIMES = {
     "slow":  dict(p_hl=0.2, p_lh=0.1, rate_h=200.0, rate_l=10.0),   # Figs 19/20
     "asym":  dict(p_hl=0.8, p_lh=0.1, rate_h=200.0, rate_l=10.0),   # Figs 21/22
 }
+MAX_PER_SLOT = 260
+C_SWEEP = [5.0, 20.0, 80.0, 160.0, 320.0]
+M_SWEEP = [10.0, 50.0, 150.0]
 
 
-def _suite(costs, x, c, states, ge, c_mean, key):
-    svc = model2_service_matrix(key, costs, x, max_per_slot=260)
-    svc2 = np.asarray(svc)[:, [0, costs.K - 1]]
-    res = {}
-    res["alpha-RR"] = run_policy(AlphaRR(costs), costs, x, c, svc=svc).total
-    rr = RetroRenting(costs)
-    res["RR"] = run_policy(rr, rr.costs, x, c, svc=svc2).total
-    res["MDP"] = run_policy(MDPPolicy(costs, ge, c_mean), costs, x, c,
-                            svc=svc, side=states).total
-    res["ABC"] = run_policy(ABCPolicy(costs, ge, c_mean), costs, x, c,
-                            svc=svc, side=states).total
-    hist = run_policy(AlphaRR(costs), costs, x, c, svc=svc).level_slots
-    res["hist"] = hist.tolist()
-    return res
+def run(T=3000, seed=0, n_seeds=4):
+    from benchmarks.common import mc_aggregate
+    costs_list, ges, c_means, meta = [], [], [], []
+    kxs, kcs, ksvcs = [], [], []
+    for ri, (regime, kw) in enumerate(REGIMES.items()):
+        ge = GilbertElliot(emission="poisson", **kw)
+        for s in range(n_seeds):
+            kx, kc, ksvc = jax.random.split(
+                jax.random.PRNGKey(seed + 7919 * s + 101 * ri), 3)
+            # dict.fromkeys dedups the (M=50, c=20) point the two sweeps
+            # share — a duplicate instance would double-count its seeds
+            # in mc_aggregate's (regime, M, c) cell
+            sweep = list(dict.fromkeys(
+                [(50.0, cm) for cm in C_SWEEP]
+                + [(M, 20.0) for M in M_SWEEP]))
+            for M, c_mean in sweep:
+                c_lo, c_hi = S.spot_bounds(c_mean)
+                costs_list.append(HostingCosts.three_level(
+                    M, ALPHA, G_ALPHA, c_min=c_lo, c_max=c_hi))
+                ges.append(ge)
+                c_means.append(c_mean)
+                # the whole (regime, seed) cell shares one sample path
+                kxs.append(kx)
+                kcs.append(kc)
+                ksvcs.append(ksvc)
+                meta.append({"regime": regime, "M": M, "c": c_mean,
+                             "seed": s})
 
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    kxs, kcs, ksvcs = np.stack(kxs), np.stack(kcs), np.stack(ksvcs)
+    p_hl = np.asarray([ge.p_hl for ge in ges], np.float32)
+    p_lh = np.asarray([ge.p_lh for ge in ges], np.float32)
+    r_h = np.asarray([ge.rate_h for ge in ges], np.float32)
+    r_l = np.asarray([ge.rate_l for ge in ges], np.float32)
+    cm_arr = np.asarray(c_means, np.float32)
 
-def run(T=3000, seed=0):
+    def scenario_fn(g):
+        return S.combine(
+            S.ge_arrivals(kxs, p_hl, p_lh, r_h, r_l, B),
+            S.spot_rents(kcs, cm_arr, B),
+            svc=S.model2_service(ksvcs, g.g, B, MAX_PER_SLOT))
+
+    fleet = FleetBatch.for_scenario(grid, T)
+    sc = scenario_fn(grid)
+    # chunk the scan: the fused [chunk, R, K] service draws stay bounded
+    kw = dict(scenario=sc, chunk_size=512)
+    res = {
+        "alpha-RR": run_fleet(AlphaRR.fleet(fleet), fleet, **kw),
+        "MDP": run_fleet(MDPPolicy.fleet(fleet, costs_list, ges, c_means),
+                         fleet, **kw),
+        "ABC": run_fleet(ABCPolicy.fleet(fleet, costs_list, ges, c_means),
+                         fleet, **kw),
+        "RR": run_fleet(RetroRenting.fleet(fleet),
+                        fleet.restrict_to_endpoints(),
+                        scenario=scenario_fn(grid.restrict_to_endpoints()),
+                        chunk_size=512),
+    }
     rows = []
-    for regime, kw in REGIMES.items():
-        ge = arrivals.GilbertElliot(emission="poisson", **kw)
-        kx, kc, ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-        x, states = ge.sample(kx, T, return_states=True)
-        for c_mean in [5.0, 20.0, 80.0, 160.0, 320.0]:
-            c = rentcosts.aws_spot_like(kc, c_mean, T)
-            costs = HostingCosts.three_level(
-                50.0, ALPHA, G_ALPHA, c_min=float(np.min(np.asarray(c))),
-                c_max=float(np.max(np.asarray(c))))
-            r = _suite(costs, x, c, states, ge, c_mean, ks)
-            rows.append({"regime": regime, "M": 50.0, "c": c_mean,
-                         **{k: (v / T if isinstance(v, float) else v)
-                            for k, v in r.items()}})
-        for M in [10.0, 50.0, 150.0]:
-            c = rentcosts.aws_spot_like(kc, 20.0, T)
-            costs = HostingCosts.three_level(
-                M, ALPHA, G_ALPHA, c_min=float(np.min(np.asarray(c))),
-                c_max=float(np.max(np.asarray(c))))
-            r = _suite(costs, x, c, states, ge, 20.0, ks)
-            rows.append({"regime": regime, "M": M, "c": 20.0,
-                         **{k: (v / T if isinstance(v, float) else v)
-                            for k, v in r.items()}})
-    return rows
+    for i, m in enumerate(meta):
+        rows.append({**m,
+                     **{k: v.total[i] / T for k, v in res.items()},
+                     "hist": res["alpha-RR"].level_slots[i]
+                             [:costs_list[i].K].tolist()})
+    return mc_aggregate(rows, ["regime", "M", "c"])
 
 
 def check(rows):

@@ -1,18 +1,37 @@
 """Figs 23-25: the shortest-path-service pipeline — g(alpha) curve from the
 (synthetic-city) trajectory dataset via Dijkstra + normalised-hit-rate
 knapsack; then cost vs cache fraction (Fig 24) and cost vs M at the best
-alpha (Fig 25)."""
+alpha (Fig 25).
+
+Batched-engine port: the g-curve stays a host pipeline (Dijkstra /
+knapsack), but the cost sweeps run as fleets on trace-playback scenarios —
+ONE recorded (arrivals, rents) sample path replayed for every grid point
+(``scenarios.trace_arrivals`` / ``trace_rents``), with the Model-2 service
+uniforms drawn on device from a shared key so every alpha / M scores the
+same realized requests (per-instance ``g`` columns bind each grid point's
+knapsack operating point).  No per-instance ``run_policy`` loop remains.
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
 from repro.core import arrivals, rentcosts, geolife
-from repro.core.costs import HostingCosts
-from repro.core.policies import AlphaRR, RetroRenting, offline_opt_no_partial
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+from repro.core.policies import AlphaRR, RetroRenting
 
 C_MEAN = 0.55   # operating point where the knapsack curve makes partial pay
+
+
+def _sweep_scenario(grid, x, c, ksvc):
+    """Trace playback of one shared sample path + fused coupled service
+    draws at each instance's own g columns (Bernoulli arrivals: R=1)."""
+    return S.combine(S.trace_arrivals(x, B=grid.B),
+                     S.trace_rents(c, B=grid.B),
+                     svc=S.model2_service(S.shared_keys(ksvc, grid.B),
+                                          grid.g, grid.B, max_per_slot=1))
 
 
 def run(T=4000, seed=0):
@@ -22,35 +41,45 @@ def run(T=4000, seed=0):
              "served": float(1 - g)} for a, g in zip(alphas, gs)]
 
     kx, kc, ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    x = arrivals.bernoulli(kx, 0.5, T)
-    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
-    cmin, cmax = float(np.min(np.asarray(c))), float(np.max(np.asarray(c)))
+    x = np.asarray(arrivals.bernoulli(kx, 0.5, T))
+    c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
+    cmin, cmax = float(c.min()), float(c.max())
 
-    # Fig 24: total cost vs cache fraction alpha (M = 10)
-    best = (None, np.inf)
-    for a, g in zip(alphas, gs):
-        if not (0.0 < a < 1.0) or not (0.0 < g < 1.0):
-            continue
-        costs = HostingCosts.three_level(10.0, float(a), float(g), cmin, cmax)
-        svc = model2_service_matrix(ks, costs, x)
-        tot = run_policy(AlphaRR(costs), costs, x, c, svc=svc).total / T
-        rows.append({"fig": "24", "alpha": float(a), "alpha-RR": tot})
-        if tot < best[1]:
-            best = (float(a), tot, float(g))
-    a_star, _, g_star = best[0], best[1], best[2]
+    # Fig 24: total cost vs cache fraction alpha (M = 10) — one fleet over
+    # the whole knapsack curve
+    points = [(float(a), float(g)) for a, g in zip(alphas, gs)
+              if 0.0 < a < 1.0 and 0.0 < g < 1.0]
+    costs24 = [HostingCosts.three_level(10.0, a, g, cmin, cmax)
+               for a, g in points]
+    grid24 = HostingGrid.from_costs(costs24)
+    fleet24 = FleetBatch.for_scenario(grid24, T)
+    ar24 = run_fleet(AlphaRR.fleet(fleet24), fleet24,
+                     scenario=_sweep_scenario(grid24, x, c, ks))
+    tots = ar24.total / T
+    for (a, g), tot in zip(points, tots):
+        rows.append({"fig": "24", "alpha": a, "alpha-RR": float(tot)})
+    best = int(np.argmin(tots))
+    a_star, g_star = points[best]
 
-    # Fig 25: cost vs M at the best alpha
-    for M in [2.0, 5.0, 10.0, 20.0, 40.0]:
-        costs = HostingCosts.three_level(M, a_star, g_star, cmin, cmax)
-        svc = model2_service_matrix(ks, costs, x)
-        ar = run_policy(AlphaRR(costs), costs, x, c, svc=svc)
-        rr = RetroRenting(costs)
-        rrres = run_policy(rr, rr.costs, x, c,
-                           svc=np.asarray(svc)[:, [0, 2]])
-        opt = offline_opt_no_partial(costs, x, c, np.asarray(svc))
+    # Fig 25: cost vs M at the best alpha — alpha-RR, RR and the
+    # no-partial offline OPT as one fleet each
+    Ms = [2.0, 5.0, 10.0, 20.0, 40.0]
+    costs25 = [HostingCosts.three_level(M, a_star, g_star, cmin, cmax)
+               for M in Ms]
+    grid25 = HostingGrid.from_costs(costs25)
+    fleet25 = FleetBatch.for_scenario(grid25, T)
+    sc25 = _sweep_scenario(grid25, x, c, ks)
+    g2 = grid25.restrict_to_endpoints()
+    sc25_2 = _sweep_scenario(g2, x, c, ks)
+    ar = run_fleet(AlphaRR.fleet(fleet25), fleet25, scenario=sc25)
+    rr = run_fleet(RetroRenting.fleet(fleet25),
+                   fleet25.restrict_to_endpoints(), scenario=sc25_2)
+    opt = offline_opt_fleet(FleetBatch.for_scenario(g2, T), scenario=sc25_2)
+    for i, M in enumerate(Ms):
         rows.append({"fig": "25", "alpha": a_star, "M": M,
-                     "alpha-RR": ar.total / T, "RR": rrres.total / T,
-                     "OPT": opt.cost / T, "hist": ar.level_slots.tolist()})
+                     "alpha-RR": ar.total[i] / T, "RR": rr.total[i] / T,
+                     "OPT": opt.cost[i] / T,
+                     "hist": ar.level_slots[i][:costs25[i].K].tolist()})
     return rows
 
 

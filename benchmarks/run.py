@@ -20,7 +20,10 @@ across PRs (BENCH_*.json):
 
 ``fleet_throughput`` rows add keys *inside* their throughput entry
 (``fleet_vs_batched_1dev``, ``scaling_vs_1dev``, ``devices``) — additive,
-so the schema version stays 1 and existing consumers keep working.
+so the schema version stays 1 and existing consumers keep working;
+``scenario_fused_throughput`` rows likewise add ``fused_vs_stream`` and
+``materialize_seconds`` (fused on-device generation vs host-materialized
+streaming).
 
 Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point);
 ``--fast`` shrinks both the horizon T and n_seeds for smoke runs.
@@ -102,6 +105,15 @@ def main() -> None:
                     "fleet_vs_batched_1dev": r["fleet_vs_batched_1dev"],
                     "scaling_vs_1dev": r.get("scaling_vs_1dev"),
                     "devices": r.get("scale_devices"),
+                    "B": r.get("B"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "fused_vs_stream" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("fused_slots_instances_per_sec"),
+                    "fused_vs_host_e2e": r.get("fused_vs_host_e2e"),
+                    "fused_vs_stream": r["fused_vs_stream"],
+                    "materialize_seconds": r.get("materialize_seconds"),
                     "B": r.get("B"), "T": r.get("T"),
                 }
         report["modules"].append({"name": name, "status": status,

@@ -10,22 +10,38 @@
 
 Everything returns int32 arrays of shape [T] and is deterministic given a
 ``jax.random`` key.
+
+Since the scenario engine landed, the *generation* lives in
+``core.scenarios.streams`` as counter-based ``Stream``s that fuse into the
+fleet scan (``run_fleet(scenario=...)``); the functions here are the
+whole-horizon materializations of those streams (bit-identical under the
+same key — tests/test_scenarios.py) kept for the classic array-building
+API.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scenarios import base as _base
+from repro.core.scenarios import streams as _streams
 
-def bernoulli(key, p: float, T: int) -> jnp.ndarray:
-    return jax.random.bernoulli(key, p, (T,)).astype(jnp.int32)
+
+def _mat1(stream, T: int):
+    """Materialize a B=1 stream; returns the values pytree minus the
+    instance axis."""
+    vals = _base.materialize_stream(stream, int(T))
+    return jax.tree_util.tree_map(lambda a: a[0], vals)
 
 
-def poisson(key, lam: float, T: int) -> jnp.ndarray:
-    return jax.random.poisson(key, lam, (T,)).astype(jnp.int32)
+def bernoulli(key, p: float, T: int):
+    return _mat1(_streams.bernoulli_arrivals(key, p, B=1), T)[0]
+
+
+def poisson(key, lam: float, T: int):
+    return _mat1(_streams.poisson_arrivals(key, lam, B=1), T)[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,27 +68,13 @@ class GilbertElliot:
         ph = self.stationary_h
         return ph * self.rate_h + (1.0 - ph) * self.rate_l
 
+    def stream(self, key, B: int = 1) -> "_base.Stream":
+        """This chain as a fleet-fusable arrival stream (side = state)."""
+        return _streams.ge_arrivals(key, self.p_hl, self.p_lh, self.rate_h,
+                                    self.rate_l, B=B, emission=self.emission)
+
     def sample(self, key, T: int, return_states: bool = False):
-        kc, ke = jax.random.split(key)
-        flips = jax.random.uniform(kc, (T,))
-
-        def step(state, u):
-            # state: 1 = H, 0 = L
-            stay_h = u >= self.p_hl
-            go_h = u < self.p_lh
-            nxt = jnp.where(state == 1, jnp.where(stay_h, 1, 0), jnp.where(go_h, 1, 0))
-            return nxt, nxt
-
-        # start from the stationary distribution to avoid burn-in artifacts
-        s0 = (jax.random.uniform(jax.random.fold_in(kc, 1)) < self.stationary_h).astype(jnp.int32)
-        _, states = jax.lax.scan(step, s0, flips)
-        rates = jnp.where(states == 1, self.rate_h, self.rate_l)
-        if self.emission == "poisson":
-            x = jax.random.poisson(ke, rates, (T,)).astype(jnp.int32)
-        elif self.emission == "bernoulli":
-            x = (jax.random.uniform(ke, (T,)) < rates).astype(jnp.int32)
-        else:
-            raise ValueError(self.emission)
+        x, states = _mat1(self.stream(key), T)
         if return_states:
             return x, states
         return x
@@ -80,21 +82,15 @@ class GilbertElliot:
 
 def cluster_trace_like(key, T: int, base_rate: float = 2.0,
                        burst_rate: float = 20.0, burst_p: float = 0.05,
-                       diurnal_period: int = 0) -> jnp.ndarray:
+                       diurnal_period: int = 0):
     """Synthetic stand-in for the Google cluster-usage trace [14]: a
     low-intensity Poisson background with geometric-length bursts, optionally
     modulated by a diurnal sinusoid. Statistically bursty + autocorrelated,
     which is what matters to RetroRenting-style policies."""
-    kb, kp, kd = jax.random.split(key, 3)
-    ge = GilbertElliot(p_hl=0.2, p_lh=burst_p, rate_h=burst_rate, rate_l=base_rate,
-                       emission="poisson")
-    x = ge.sample(kb, T).astype(jnp.float32)
-    if diurnal_period:
-        t = jnp.arange(T, dtype=jnp.float32)
-        mod = 1.0 + 0.5 * jnp.sin(2 * jnp.pi * t / diurnal_period)
-        lam = x * mod
-        x = jax.random.poisson(kd, jnp.maximum(lam, 0.0), (T,)).astype(jnp.float32)
-    return x.astype(jnp.int32)
+    return _mat1(_streams.bursty_arrivals(key, B=1, base_rate=base_rate,
+                                          burst_rate=burst_rate,
+                                          burst_p=burst_p,
+                                          diurnal_period=diurnal_period), T)[0]
 
 
 # ----------------------------------------------------------------------
@@ -105,15 +101,13 @@ def adversarial_fetch_bait(tau: int, T: int) -> np.ndarray:
     """Arrivals every slot until slot ``tau`` (when the online policy is
     goaded into fetching), then silence — the Theorem-4 lower-bound
     construction for a policy starting at r=0."""
-    x = np.zeros(T, dtype=np.int32)
-    x[:tau] = 1
-    return x
+    return np.asarray(
+        _mat1(_streams.adversarial_fetch_bait(tau, B=1), T)[0])
 
 
 def adversarial_evict_bait(tau_bar: int, tau: int, T: int) -> np.ndarray:
     """No arrivals until the policy evicts (slot ``tau_bar``), then arrivals
     every slot until ``tau_bar + tau``, then silence (second construction in
     the proof of Theorem 4)."""
-    x = np.zeros(T, dtype=np.int32)
-    x[tau_bar:tau_bar + tau] = 1
-    return x
+    return np.asarray(
+        _mat1(_streams.adversarial_evict_bait(tau_bar, tau, B=1), T)[0])

@@ -34,6 +34,23 @@ drivers share the same chunk kernel:
 ``offline_opt_fleet`` applies the same three mechanisms to the offline DP
 (forward recursion chunked and frozen past T_i with identity backpointers;
 padded K levels priced ``+inf`` as in ``offline_opt_batch``).
+
+**Scenario fusion** — every entry point alternatively accepts
+``scenario=...`` (a ``core.scenarios.Scenario``) in place of materialized
+observations: the generator's ``chunk_fn`` runs *inside* the chunked scan,
+emitting one [B, chunk] slab of arrivals/rents (plus optional Model-2
+service draws and side-state) per chunk, with the generator state threaded
+through the scan carry next to the policy state.  Device memory stays
+O(B * chunk) at any horizon and **zero** observation bytes cross the
+host->device boundary (the streaming driver ships only a scalar chunk
+offset).  Because scenario streams are counter-keyed (see
+``core/scenarios/base.py``), fused generation is bit-identical to
+materializing the same scenario (``scenarios.materialize`` /
+``FleetBatch.from_scenario``) and running the classic path — for every
+policy, the offline DP, and schedule evaluation, under every
+mesh x chunking x driver configuration (tests/test_scenarios.py).  Pass
+``collect_trace=False`` to drop the [B, T] ``r_hist`` output, the one
+remaining O(T) device buffer, for T >= 10^6 fleets.
 """
 from __future__ import annotations
 
@@ -50,6 +67,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.policies.base import PolicyFns
+from repro.core.scenarios.base import Scenario, chunk_geometry
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
                                   schedule_chunk_core)
 from repro.sharding.context import shard_ctx
@@ -67,8 +85,10 @@ class FleetBatch:
 
     Attributes:
       grid: stacked ``HostingGrid`` (K-padding conventions live there).
-      x:    [B, T_max] int32 arrivals, zero-padded past each instance's T.
-      c:    [B, T_max] rent costs, zero-padded.
+      x:    [B, T_max] int32 arrivals, zero-padded past each instance's T —
+            or None for a scenario-driven fleet (``for_scenario``), whose
+            observations are generated on device inside the scan.
+      c:    [B, T_max] rent costs, zero-padded (None with a scenario).
       T:    [B] int32 per-instance horizons (T_i <= T_max).
       svc:  optional [B, T_max, K] realized Model-2 service costs; None means
             Model 1 (``g * x``), computed chunk-by-chunk on device so it is
@@ -81,8 +101,8 @@ class FleetBatch:
     """
 
     grid: HostingGrid
-    x: jnp.ndarray
-    c: jnp.ndarray
+    x: Optional[jnp.ndarray]
+    c: Optional[jnp.ndarray]
     T: jnp.ndarray
     svc: Optional[jnp.ndarray] = None
     side: Optional[jnp.ndarray] = None
@@ -153,10 +173,29 @@ class FleetBatch:
             T = np.broadcast_to(np.asarray(T, np.int32), (B,))
         return FleetBatch(grid=grid, x=x, c=c, T=T, svc=svc, side=side)
 
+    @staticmethod
+    def for_scenario(grid: HostingGrid, T) -> "FleetBatch":
+        """A fleet with NO materialized observations: pass the matching
+        ``scenario=...`` to the engine entry points and the obs are
+        generated on device inside the scan.  ``T`` is a scalar or [B]
+        per-instance horizon vector."""
+        T = np.broadcast_to(np.asarray(T, np.int32), (grid.B,))
+        return FleetBatch(grid=grid, x=None, c=None, T=T)
+
+    @staticmethod
+    def from_scenario(grid: HostingGrid, scenario: Scenario, T,
+                      chunk_size: Optional[int] = None) -> "FleetBatch":
+        """Materialize a scenario into a classic obs-backed fleet (the
+        reference the fused path is proven bit-identical against)."""
+        from repro.core.scenarios.base import materialize
+        T = np.broadcast_to(np.asarray(T, np.int32), (grid.B,))
+        x, c, svc, side = materialize(scenario, int(T.max()), chunk_size)
+        return FleetBatch.from_dense(grid, x, c, svc=svc, side=side, T=T)
+
     # ---- derived ------------------------------------------------------
     @property
     def B(self) -> int:
-        return self.x.shape[0]
+        return self.grid.B
 
     @property
     def K(self) -> int:
@@ -164,6 +203,8 @@ class FleetBatch:
 
     @property
     def T_max(self) -> int:
+        if self.x is None:
+            return int(np.max(np.asarray(self.T)))
         return self.x.shape[1]
 
     def restrict_to_endpoints(self) -> "FleetBatch":
@@ -201,13 +242,15 @@ def _pad_fleet(fleet: FleetBatch, B_pad: int, T_pad: int) -> FleetBatch:
     Obs padding runs in numpy so host-resident obs STAY on the host — the
     compiled drivers transfer whole [B, T] blocks at the jit boundary, and
     the streaming driver must never move more than one slab to the device.
-    The (small) grid stays a device pytree.
+    The (small) grid stays a device pytree.  Scenario-driven fleets
+    (``x is None``) have no obs to pad — only the grid and T rows.
     """
-    x, c, T, svc, side = (np.asarray(fleet.x), np.asarray(fleet.c),
-                          np.asarray(fleet.T), fleet.svc, fleet.side)
-    svc = None if svc is None else np.asarray(svc)
-    side = None if side is None else np.asarray(side)
-    if T_pad > fleet.T_max:
+    x = None if fleet.x is None else np.asarray(fleet.x)
+    c = None if fleet.c is None else np.asarray(fleet.c)
+    T = np.asarray(fleet.T)
+    svc = None if fleet.svc is None else np.asarray(fleet.svc)
+    side = None if fleet.side is None else np.asarray(fleet.side)
+    if T_pad > fleet.T_max and x is not None:
         dt_pad = T_pad - fleet.T_max
         x = np.pad(x, ((0, 0), (0, dt_pad)))
         c = np.pad(c, ((0, 0), (0, dt_pad)))
@@ -220,8 +263,9 @@ def _pad_fleet(fleet: FleetBatch, B_pad: int, T_pad: int) -> FleetBatch:
                            levels=_pad_rows(fleet.grid.levels, B_pad),
                            g=_pad_rows(fleet.grid.g, B_pad),
                            mask=_pad_rows(fleet.grid.mask, B_pad))
-        x = _pad_rows(x, B_pad, np)
-        c = _pad_rows(c, B_pad, np)
+        if x is not None:
+            x = _pad_rows(x, B_pad, np)
+            c = _pad_rows(c, B_pad, np)
         T = np.concatenate([T, np.zeros((B_pad - fleet.B,), np.int32)])
         if svc is not None:
             svc = _pad_rows(svc, B_pad, np)
@@ -235,12 +279,14 @@ def _pad_fleet(fleet: FleetBatch, B_pad: int, T_pad: int) -> FleetBatch:
 def _prepare_fleet(fleet: FleetBatch, mesh: Optional[Mesh],
                    chunk_size: Optional[int]):
     """Shared prologue of every fleet entry point: resolve the mesh, pad B
-    to a device multiple (dummy T=0 instances) and T to a chunk multiple."""
+    to a device multiple (dummy T=0 instances) and T to a chunk multiple.
+    Returns ``(mesh, padded fleet, n_chunks, T_pad)`` — T_pad is explicit
+    because scenario-driven fleets carry no obs array to read it from."""
     mesh = fleet_mesh() if mesh is None else mesh
     n_dev = int(mesh.devices.size)
     B_pad = math.ceil(fleet.B / n_dev) * n_dev
-    n_chunks, T_pad = _chunk_geometry(fleet.T_max, chunk_size)
-    return mesh, _pad_fleet(fleet, B_pad, T_pad), n_chunks
+    n_chunks, T_pad = chunk_geometry(fleet.T_max, chunk_size)
+    return mesh, _pad_fleet(fleet, B_pad, T_pad), n_chunks, T_pad
 
 
 # ----------------------------------------------------------------------
@@ -256,7 +302,8 @@ class FleetResult:
     fetch: np.ndarray         # [B]
     rent: np.ndarray          # [B]
     service: np.ndarray       # [B]
-    r_hist: np.ndarray        # [B, T_max] (rows frozen past each T_i)
+    r_hist: Optional[np.ndarray]  # [B, T_max] (frozen past each T_i); None
+                                  # when run with collect_trace=False
     level_slots: np.ndarray   # [B, K] slots spent at each level
     T: np.ndarray             # [B] per-instance horizons
 
@@ -269,6 +316,8 @@ class FleetResult:
         return self.total / self.T
 
     def instance(self, i: int) -> SimResult:
+        if self.r_hist is None:
+            raise ValueError("no r_hist: fleet ran with collect_trace=False")
         return SimResult(total=float(self.total[i]), fetch=float(self.fetch[i]),
                          rent=float(self.rent[i]), service=float(self.service[i]),
                          r_hist=self.r_hist[i, :int(self.T[i])],
@@ -288,7 +337,7 @@ def _fleet_result(r_hist, sums, counts, B, T_max, T) -> FleetResult:
     return FleetResult(
         total=sums.sum(axis=1),
         rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
-        r_hist=np.asarray(r_hist)[:B, :T_max],
+        r_hist=None if r_hist is None else np.asarray(r_hist)[:B, :T_max],
         level_slots=np.asarray(counts)[:B].astype(np.int64),
         T=np.asarray(T).astype(np.int64))
 
@@ -296,14 +345,6 @@ def _fleet_result(r_hist, sums, counts, B, T_max, T) -> FleetResult:
 # ----------------------------------------------------------------------
 # Compiled cores: vmap over instances, shard_map over the fleet axis.
 # ----------------------------------------------------------------------
-
-def _chunk_geometry(T_max: int, chunk_size: Optional[int]):
-    if chunk_size is None:
-        return 1, T_max
-    chunk = int(chunk_size)
-    n_chunks = max(1, math.ceil(T_max / chunk))
-    return n_chunks, n_chunks * chunk
-
 
 def _model1_svc(x, g):
     # identical elementwise to _batch_obs's full-horizon computation, so
@@ -339,7 +380,8 @@ def _chunked_drive(run_chunk, carry0, n_chunks: int, arrays):
 
 
 def _make_instance_core(init_fn, step_fn, include_final_fetch: bool,
-                        n_chunks: int, has_svc: bool, has_side: bool):
+                        n_chunks: int, has_svc: bool, has_side: bool,
+                        collect_trace: bool = True):
     """Whole-horizon core for ONE instance: outer scan over T-chunks, inner
     ``sim_chunk_core`` per chunk.  Args: (params, lv, g, M, T_len, x, c
     [, svc][, side]) with [T_pad]-shaped obs, T_pad = n_chunks * chunk."""
@@ -355,13 +397,17 @@ def _make_instance_core(init_fn, step_fn, include_final_fetch: bool,
                 sck = _model1_svc(xck, g)
             if sdck is None:
                 sdck = jnp.zeros(xck.shape, jnp.int32)
-            return sim_chunk_core(step_fn, include_final_fetch, params, lv, M,
-                                  T_len, t0, carry, xck, cck, sck, sdck)
+            carry, r = sim_chunk_core(step_fn, include_final_fetch, params,
+                                      lv, M, T_len, t0, carry, xck, cck,
+                                      sck, sdck)
+            return carry, (r if collect_trace else None)
 
         carry, r_hist = _chunked_drive(run_chunk, carry0, n_chunks,
                                        (x, c, svc, side))
         (_, acc) = carry
-        return r_hist, acc["sums"], acc["counts"]
+        if collect_trace:
+            return r_hist, acc["sums"], acc["counts"]
+        return acc["sums"], acc["counts"]
 
     return core
 
@@ -369,14 +415,72 @@ def _make_instance_core(init_fn, step_fn, include_final_fetch: bool,
 @functools.lru_cache(maxsize=64)
 def _compiled_fleet_core(init_fn, step_fn, include_final_fetch: bool,
                          n_chunks: int, has_svc: bool, has_side: bool,
-                         mesh: Mesh):
+                         collect_trace: bool, mesh: Mesh):
     core = _make_instance_core(init_fn, step_fn, include_final_fetch,
-                               n_chunks, has_svc, has_side)
+                               n_chunks, has_svc, has_side, collect_trace)
     n_args = 7 + int(has_svc) + int(has_side)
     spec = P(FLEET_AXIS)
+    n_out = 3 if collect_trace else 2
     sharded = shard_map(jax.vmap(core), mesh=mesh,
                         in_specs=(spec,) * n_args,
-                        out_specs=(spec, spec, spec))
+                        out_specs=(spec,) * n_out)
+    return jax.jit(sharded)
+
+
+def _slab_obs(slab, g):
+    """Fill a generated slab's optional channels with the engine defaults
+    (Model-1 service from the slab's own arrivals; zero side)."""
+    svc = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+    side = (slab.side if slab.side is not None
+            else jnp.zeros(slab.x.shape, jnp.int32))
+    return slab.x, slab.c, svc, side
+
+
+def _make_scenario_instance_core(init_fn, step_fn, sc_init, sc_chunk,
+                                 include_final_fetch: bool, n_chunks: int,
+                                 collect_trace: bool):
+    """Fused core for ONE instance: the scenario's ``chunk_fn`` generates
+    each [chunk] slab *inside* the outer scan (generator state threaded
+    through the carry next to the policy state), then ``sim_chunk_core``
+    consumes it.  Args: (pparams, sparams, lv, g, M, T_len, tids_all) where
+    ``tids_all = arange(T_pad)`` is the only [T]-shaped input — replicated,
+    never sharded, and the only thing resembling an obs array anywhere."""
+
+    def core(pparams, sparams, lv, g, M, T_len, tids_all):
+        K = lv.shape[-1]
+        carry0 = (sc_init(sparams), (init_fn(pparams), sim_acc0(K, lv.dtype)))
+
+        def run_chunk(carry, t0, tids):
+            gen_state, sim = carry
+            gen_state, slab = sc_chunk(sparams, gen_state, tids)
+            x, c, svc, side = _slab_obs(slab, g)
+            sim, r = sim_chunk_core(step_fn, include_final_fetch, pparams,
+                                    lv, M, T_len, t0, sim, x, c, svc, side)
+            return (gen_state, sim), (r if collect_trace else None)
+
+        carry, r_hist = _chunked_drive(run_chunk, carry0, n_chunks,
+                                       (tids_all,))
+        (_, (_, acc)) = carry
+        if collect_trace:
+            return r_hist, acc["sums"], acc["counts"]
+        return acc["sums"], acc["counts"]
+
+    return core
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_scenario_core(init_fn, step_fn, sc_init, sc_chunk,
+                            include_final_fetch: bool, n_chunks: int,
+                            collect_trace: bool, mesh: Mesh):
+    core = _make_scenario_instance_core(init_fn, step_fn, sc_init, sc_chunk,
+                                        include_final_fetch, n_chunks,
+                                        collect_trace)
+    spec = P(FLEET_AXIS)
+    n_out = 3 if collect_trace else 2
+    sharded = shard_map(
+        jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)), mesh=mesh,
+        in_specs=(spec,) * 6 + (P(),), out_specs=(spec,) * n_out,
+        check_rep=False)  # generators may use while-loops (e.g. Poisson)
     return jax.jit(sharded)
 
 
@@ -402,20 +506,64 @@ def _compiled_stream_step(init_fn, step_fn, include_final_fetch: bool,
     return jax.jit(sharded)
 
 
+@functools.lru_cache(maxsize=64)
+def _compiled_scenario_stream_step(init_fn, step_fn, sc_init, sc_chunk,
+                                   include_final_fetch: bool, chunk: int,
+                                   collect_trace: bool, mesh: Mesh):
+    """One fused-generation slab step for the host-driven streaming loop:
+    the host ships a scalar chunk offset per iteration — zero observation
+    bytes cross the host->device boundary."""
+
+    def step(pparams, sparams, lv, g, M, T_len, t0, carry):
+        tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        gen_state, sim = carry
+        gen_state, slab = sc_chunk(sparams, gen_state, tids)
+        x, c, svc, side = _slab_obs(slab, g)
+        sim, r = sim_chunk_core(step_fn, include_final_fetch, pparams, lv, M,
+                                T_len, t0, sim, x, c, svc, side)
+        carry = (gen_state, sim)
+        return (carry, r) if collect_trace else carry
+
+    spec = P(FLEET_AXIS)
+    in_axes = (0, 0, 0, 0, 0, 0, None, 0)
+    in_specs = (spec,) * 6 + (P(),) + (spec,)
+    out_specs = (spec, spec) if collect_trace else spec
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
+                        in_specs=in_specs, out_specs=out_specs,
+                        check_rep=False)
+    return jax.jit(sharded)
+
+
+def _pad_params(params, B_pad: int):
+    """Pad every [B]-leading leaf of a params pytree (policy or scenario)
+    to B_pad by replicating row 0 (padded instances run with T = 0)."""
+    return jax.tree_util.tree_map(
+        lambda a: _pad_rows(jnp.asarray(a), B_pad), params)
+
+
 def _policy_arrays(policy: PolicyFns, fleet: FleetBatch, B_pad: int):
     dt = default_float_dtype()
-    params = jax.tree_util.tree_map(lambda a: _pad_rows(jnp.asarray(a), B_pad),
-                                    policy.params)
+    params = _pad_params(policy.params, B_pad)
     lv = _pad_rows(fleet.grid.levels.astype(dt), B_pad)
     g = _pad_rows(fleet.grid.g.astype(dt), B_pad)
     M = _pad_rows(fleet.grid.M.astype(dt), B_pad)
     return params, lv, g, M
 
 
+def _check_scenario(scenario: Scenario, fleet: FleetBatch):
+    if fleet.x is not None or fleet.c is not None:
+        raise ValueError(
+            "scenario=... needs an obs-less fleet (FleetBatch.for_scenario); "
+            "materialized observations would be silently ignored")
+    if scenario.B != fleet.B:
+        raise ValueError(f"scenario B={scenario.B} != fleet B={fleet.B}")
+
+
 def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
+              scenario: Optional[Scenario] = None,
               mesh: Optional[Mesh] = None, chunk_size: Optional[int] = None,
               include_final_fetch: bool = True,
-              stream: bool = False) -> FleetResult:
+              stream: bool = False, collect_trace: bool = True) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -424,59 +572,90 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         RR-style restrictions pass the restricted fleet
         (``fleet.restrict_to_endpoints()``), as with ``run_policy_batch``.
       fleet: the stacked instances (mixed horizons allowed).
+      scenario: generate observations ON DEVICE inside the scan instead of
+        reading them from ``fleet`` (which must then be obs-less:
+        ``FleetBatch.for_scenario``).  Bit-identical to materializing the
+        same scenario and running the classic path, with O(B * chunk)
+        device memory and zero host->device observation transfer.
       mesh: 1-D device mesh with axis ``fleet`` (default: all devices).
       chunk_size: cut the horizon into chunks of this many slots (device-side
         outer scan).  None = one chunk.
       stream: drive the chunks from the host instead, one [B, chunk] slab at
         a time (requires ``chunk_size``); bit-identical to the scan driver.
+        With a scenario the host ships only the scalar chunk offset.
+      collect_trace: False drops the [B, T_max] ``r_hist`` output (the one
+        O(T) device buffer) — totals/histograms are unchanged; use for
+        T >= 10^6 horizons.
 
-    Every configuration (any mesh size x any chunking x any driver) returns
-    bit-identical results; see tests/test_fleet_engine.py.
+    Every configuration (any mesh size x any chunking x any driver x fused
+    or materialized generation) returns bit-identical results; see
+    tests/test_fleet_engine.py and tests/test_scenarios.py.
     """
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
     B, T_max = fleet.B, fleet.T_max
-    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
+    mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     params, lv, g, M = _policy_arrays(policy, padded, padded.B)
-    has_svc, has_side = fleet.svc is not None, fleet.side is not None
 
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+        sparams = _pad_params(scenario.params, padded.B)
+        if stream:
+            return _run_fleet_scenario_streamed(
+                policy, scenario, padded, params, sparams, lv, g, M, mesh,
+                n_chunks, T_pad, include_final_fetch, collect_trace,
+                B, T_max, fleet.T)
+        core = _compiled_scenario_core(policy.init_fn, policy.step_fn,
+                                       scenario.init_fn, scenario.chunk_fn,
+                                       include_final_fetch, n_chunks,
+                                       collect_trace, mesh)
+        tids_all = jnp.arange(T_pad, dtype=jnp.int32)
+        with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+            out = core(params, sparams, lv, g, M, padded.T, tids_all)
+        r_hist, sums, counts = out if collect_trace else (None,) + out
+        return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
+
+    has_svc, has_side = fleet.svc is not None, fleet.side is not None
     if stream:
         return _run_fleet_streamed(policy, padded, params, lv, g, M, mesh,
                                    n_chunks, include_final_fetch,
-                                   B, T_max, fleet.T)
+                                   collect_trace, B, T_max, fleet.T)
 
     core = _compiled_fleet_core(policy.init_fn, policy.step_fn,
                                 include_final_fetch, n_chunks, has_svc,
-                                has_side, mesh)
+                                has_side, collect_trace, mesh)
     args = (params, lv, g, M, padded.T, padded.x, padded.c)
     if has_svc:
         args += (padded.svc,)
     if has_side:
         args += (padded.side,)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-        r_hist, sums, counts = core(*args)
+        out = core(*args)
+    r_hist, sums, counts = out if collect_trace else (None,) + out
     return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
 
 
+def _sim_carry0(policy, params, B_pad, K, dt):
+    return (jax.jit(jax.vmap(policy.init_fn))(params),
+            {"sums": jnp.zeros((B_pad, 3), dt),
+             "counts": jnp.zeros((B_pad, K), jnp.int32)})
+
+
 def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
-                        include_final_fetch, B, T_max, T_orig):
+                        include_final_fetch, collect_trace, B, T_max, T_orig):
     """Host-driven streaming: numpy slabs in, carry stays on device."""
     has_svc, has_side = padded.svc is not None, padded.side is not None
     step = _compiled_stream_step(policy.init_fn, policy.step_fn,
                                  include_final_fetch, has_svc, has_side, mesh)
     B_pad, T_pad = padded.B, padded.T_max
     chunk = T_pad // n_chunks
-    K = padded.K
-    dt = lv.dtype
     # host-resident obs (the point of streaming: slab-sized device transfers)
     x_h = np.asarray(padded.x)
     c_h = np.asarray(padded.c)
     svc_h = None if not has_svc else np.asarray(padded.svc)
     side_h = None if not has_side else np.asarray(padded.side)
 
-    carry = (jax.jit(jax.vmap(policy.init_fn))(params),
-             {"sums": jnp.zeros((B_pad, 3), dt),
-              "counts": jnp.zeros((B_pad, K), jnp.int32)})
+    carry = _sim_carry0(policy, params, B_pad, padded.K, lv.dtype)
     r_parts = []
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         for i in range(n_chunks):
@@ -489,9 +668,38 @@ def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
             if has_side:
                 args += (jnp.asarray(side_h[:, sl]),)
             carry, r_chunk = step(*args)
-            r_parts.append(np.asarray(r_chunk))
+            if collect_trace:
+                r_parts.append(np.asarray(r_chunk))
     (_, acc) = carry
-    r_hist = np.concatenate(r_parts, axis=1)
+    r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
+    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig)
+
+
+def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
+                                 lv, g, M, mesh, n_chunks, T_pad,
+                                 include_final_fetch, collect_trace,
+                                 B, T_max, T_orig):
+    """Host-driven streaming with fused generation: per chunk the host
+    ships ONE scalar (the chunk offset); obs never exist on the host."""
+    chunk = T_pad // n_chunks
+    step = _compiled_scenario_stream_step(policy.init_fn, policy.step_fn,
+                                          scenario.init_fn, scenario.chunk_fn,
+                                          include_final_fetch, chunk,
+                                          collect_trace, mesh)
+    carry = (jax.jit(jax.vmap(scenario.init_fn))(sparams),
+             _sim_carry0(policy, params, padded.B, padded.K, lv.dtype))
+    r_parts = []
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        for i in range(n_chunks):
+            out = step(params, sparams, lv, g, M, padded.T,
+                       jnp.asarray(i * chunk, jnp.int32), carry)
+            if collect_trace:
+                carry, r_chunk = out
+                r_parts.append(np.asarray(r_chunk))
+            else:
+                carry = out
+    (_, (_, acc)) = carry
+    r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
     return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig)
 
 
@@ -520,32 +728,71 @@ def _make_dp_instance_core(n_chunks: int, has_svc: bool):
             if sck is None:
                 sck = _model1_svc(xck, g)
             tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
-            # the same float32 w as offline_opt_batch: rent + svc, +inf pads
-            wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
-                   + sck.astype(jnp.float32))
-            wck = jnp.where(kmask[None, :], wck, jnp.inf)
-
-            def fwd(J_prev, inp):
-                t, w_t = inp
-                valid_t = t < T_len
-                trans = J_prev[:, None] + fetch_mat
-                arg = jnp.argmin(trans, axis=0)
-                J = jnp.min(trans, axis=0) + w_t
-                J = jnp.where(valid_t, J, J_prev)
-                arg = jnp.where(valid_t, arg, jnp.arange(K))
-                return J, arg
-
-            return jax.lax.scan(fwd, J, (tids, wck))
+            return _dp_fwd_scan(J, tids, cck, sck, lv32, kmask, fetch_mat,
+                                T_len, K)
 
         J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
         J_T, args = _chunked_drive(fwd_chunk, J0, n_chunks, (x, c, svc))
+        return _dp_backtrack(J_T, args)
 
-        def back(k, arg_t):
-            return arg_t[k], k
+    return core
 
-        k_T = jnp.argmin(J_T)
-        _, r_hist = jax.lax.scan(back, k_T, args, reverse=True)
-        return jnp.min(J_T), r_hist.astype(jnp.int32)
+
+def _dp_fwd_scan(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len, K):
+    """One chunk of the forward value recursion (shared verbatim by the
+    obs-backed and the scenario-fused DP cores, so fused == materialized is
+    op-for-op).  Invalid slots keep J frozen and write identity args."""
+    # the same float32 w as offline_opt_batch: rent + svc, +inf pads
+    wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
+           + sck.astype(jnp.float32))
+    wck = jnp.where(kmask[None, :], wck, jnp.inf)
+
+    def fwd(J_prev, inp):
+        t, w_t = inp
+        valid_t = t < T_len
+        trans = J_prev[:, None] + fetch_mat
+        arg = jnp.argmin(trans, axis=0)
+        J = jnp.min(trans, axis=0) + w_t
+        J = jnp.where(valid_t, J, J_prev)
+        arg = jnp.where(valid_t, arg, jnp.arange(K))
+        return J, arg
+
+    return jax.lax.scan(fwd, J, (tids, wck))
+
+
+def _dp_backtrack(J_T, args):
+    def back(k, arg_t):
+        return arg_t[k], k
+
+    k_T = jnp.argmin(J_T)
+    _, r_hist = jax.lax.scan(back, k_T, args, reverse=True)
+    return jnp.min(J_T), r_hist.astype(jnp.int32)
+
+
+def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int):
+    """Scenario-fused forward DP for ONE instance: slabs are generated
+    inside the chunk scan (generator state in the carry next to J); the
+    recursion itself is ``_dp_fwd_scan``, shared with the obs-backed core."""
+
+    def core(sparams, M, lv, g, kmask, T_len, tids_all):
+        K = lv.shape[-1]
+        lv32 = lv.astype(jnp.float32)
+        M32 = M.astype(jnp.float32)
+        fetch_mat = M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
+
+        def fwd_chunk(carry, t0, tids):
+            gen_state, J = carry
+            gen_state, slab = sc_chunk(sparams, gen_state, tids)
+            sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+            J, args = _dp_fwd_scan(J, tids, slab.c, sck, lv32, kmask,
+                                   fetch_mat, T_len, K)
+            return (gen_state, J), args
+
+        J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
+        carry0 = (sc_init(sparams), J0)
+        (_, J_T), args = _chunked_drive(fwd_chunk, carry0, n_chunks,
+                                        (tids_all,))
+        return _dp_backtrack(J_T, args)
 
     return core
 
@@ -560,25 +807,50 @@ def _compiled_dp_core(n_chunks: int, has_svc: bool, mesh: Mesh):
     return jax.jit(sharded)
 
 
-def offline_opt_fleet(fleet: FleetBatch, *, mesh: Optional[Mesh] = None,
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh):
+    core = _make_dp_scenario_core(sc_init, sc_chunk, n_chunks)
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)),
+                        mesh=mesh, in_specs=(spec,) * 6 + (P(),),
+                        out_specs=(spec, spec), check_rep=False)
+    return jax.jit(sharded)
+
+
+def offline_opt_fleet(fleet: FleetBatch, *,
+                      scenario: Optional[Scenario] = None,
+                      mesh: Optional[Mesh] = None,
                       chunk_size: Optional[int] = None) -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
-    time, each instance solved at its own horizon."""
+    time, each instance solved at its own horizon.  With ``scenario=...``
+    the observations are generated on device inside the forward recursion
+    (and again inside the schedule evaluation) — bit-identical to the
+    materialized run."""
     dt = default_float_dtype()
     B, T_max = fleet.B, fleet.T_max
-    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
-    has_svc = fleet.svc is not None
-    core = _compiled_dp_core(n_chunks, has_svc, mesh)
-    args = (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
-            padded.grid.g.astype(dt), padded.grid.mask, padded.T,
-            padded.x, padded.c)
-    if has_svc:
-        args += (padded.svc,)
+    mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+        sparams = _pad_params(scenario.params, padded.B)
+        core = _compiled_dp_scenario_core(scenario.init_fn, scenario.chunk_fn,
+                                          n_chunks, mesh)
+        args = (sparams, padded.grid.M.astype(dt),
+                padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
+                padded.grid.mask, padded.T,
+                jnp.arange(T_pad, dtype=jnp.int32))
+    else:
+        has_svc = fleet.svc is not None
+        core = _compiled_dp_core(n_chunks, has_svc, mesh)
+        args = (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
+                padded.grid.g.astype(dt), padded.grid.mask, padded.T,
+                padded.x, padded.c)
+        if has_svc:
+            args += (padded.svc,)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         cost, r_hist = core(*args)
     cost = np.asarray(cost)[:B].astype(np.float64)
     r_hist = np.asarray(r_hist)[:B, :T_max].astype(np.int64)
-    sim = evaluate_schedule_fleet(fleet, r_hist, mesh=mesh,
+    sim = evaluate_schedule_fleet(fleet, r_hist, scenario=scenario, mesh=mesh,
                                   chunk_size=chunk_size)
     return FleetOfflineResult(cost=cost, r_hist=r_hist, sim=sim)
 
@@ -605,6 +877,31 @@ def _make_schedule_instance_core(n_chunks: int, has_svc: bool):
     return core
 
 
+def _make_schedule_scenario_core(sc_init, sc_chunk, n_chunks: int):
+    """Schedule evaluation with fused generation: the schedule ``r`` stays
+    a resident array (it is the *input*), the obs it is priced on are
+    generated chunk-by-chunk."""
+
+    def core(sparams, lv, g, M, T_len, r, tids_all):
+        K = lv.shape[-1]
+        carry0 = (sc_init(sparams),
+                  (jnp.asarray(0, jnp.int32), sim_acc0(K, lv.dtype)))
+
+        def run_chunk(carry, t0, rck, tids):
+            gen_state, sched = carry
+            gen_state, slab = sc_chunk(sparams, gen_state, tids)
+            sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+            sched, _ = schedule_chunk_core(lv, M, T_len, t0, sched, rck,
+                                           slab.c, sck)
+            return (gen_state, sched), None
+
+        carry, _ = _chunked_drive(run_chunk, carry0, n_chunks, (r, tids_all))
+        (_, (_, acc)) = carry
+        return acc["sums"], acc["counts"]
+
+    return core
+
+
 @functools.lru_cache(maxsize=32)
 def _compiled_schedule_core(n_chunks: int, has_svc: bool, mesh: Mesh):
     core = _make_schedule_instance_core(n_chunks, has_svc)
@@ -615,24 +912,47 @@ def _compiled_schedule_core(n_chunks: int, has_svc: bool, mesh: Mesh):
     return jax.jit(sharded)
 
 
+@functools.lru_cache(maxsize=32)
+def _compiled_schedule_scenario_core(sc_init, sc_chunk, n_chunks: int,
+                                     mesh: Mesh):
+    core = _make_schedule_scenario_core(sc_init, sc_chunk, n_chunks)
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)),
+                        mesh=mesh, in_specs=(spec,) * 6 + (P(),),
+                        out_specs=(spec, spec), check_rep=False)
+    return jax.jit(sharded)
+
+
 def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
+                            scenario: Optional[Scenario] = None,
                             mesh: Optional[Mesh] = None,
                             chunk_size: Optional[int] = None) -> FleetResult:
     """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
-    instance's T contribute nothing (and charge no fetch)."""
+    instance's T contribute nothing (and charge no fetch).  With
+    ``scenario=...`` the priced observations are generated on device."""
     dt = default_float_dtype()
     B, T_max = fleet.B, fleet.T_max
-    mesh, padded, n_chunks = _prepare_fleet(fleet, mesh, chunk_size)
+    mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     r = np.asarray(r_hist, np.int32)
-    if padded.T_max > T_max:
-        r = np.pad(r, ((0, 0), (0, padded.T_max - T_max)))
+    if T_pad > T_max:
+        r = np.pad(r, ((0, 0), (0, T_pad - T_max)))
     r = _pad_rows(r, padded.B, np)
-    has_svc = fleet.svc is not None
-    core = _compiled_schedule_core(n_chunks, has_svc, mesh)
-    args = (padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
-            padded.grid.M.astype(dt), padded.T, r, padded.x, padded.c)
-    if has_svc:
-        args += (padded.svc,)
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+        sparams = _pad_params(scenario.params, padded.B)
+        core = _compiled_schedule_scenario_core(scenario.init_fn,
+                                                scenario.chunk_fn,
+                                                n_chunks, mesh)
+        args = (sparams, padded.grid.levels.astype(dt),
+                padded.grid.g.astype(dt), padded.grid.M.astype(dt),
+                padded.T, jnp.asarray(r), jnp.arange(T_pad, dtype=jnp.int32))
+    else:
+        has_svc = fleet.svc is not None
+        core = _compiled_schedule_core(n_chunks, has_svc, mesh)
+        args = (padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
+                padded.grid.M.astype(dt), padded.T, r, padded.x, padded.c)
+        if has_svc:
+            args += (padded.svc,)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         sums, counts = core(*args)
     res = _fleet_result(np.asarray(r_hist, np.int64), sums, counts,

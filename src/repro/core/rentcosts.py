@@ -8,6 +8,11 @@ user-supplied price series can be fit the way the paper describes [16]).
 
 Also provides i.i.d. uniform rents and negatively-associated rents
 (Assumption 7 uses negative association; antithetic pairs are NA).
+
+Generation lives in ``core.scenarios.streams`` (counter-based streams that
+fuse into the fleet scan); the functions here materialize those streams
+over a whole horizon (bit-identical under the same key) for the classic
+array-building API.
 """
 from __future__ import annotations
 
@@ -24,6 +29,11 @@ DEFAULT_AR = (0.55, 0.20, 0.10, 0.05)
 DEFAULT_MA = (0.40, 0.20)
 
 
+def _mat1(stream, T: int):
+    from repro.core.scenarios.base import materialize_stream
+    return materialize_stream(stream, int(T))[0]
+
+
 @dataclasses.dataclass(frozen=True)
 class ARMAProcess:
     """ARMA(p, q):  (c_t - mu) = sum phi_i (c_{t-i} - mu) + eps_t + sum th_j eps_{t-j}."""
@@ -35,42 +45,28 @@ class ARMAProcess:
     c_min: float = 0.05
     c_max: float = 10.0
 
+    def stream(self, key, B: int = 1):
+        """This process as a fleet-fusable rent stream."""
+        from repro.core.scenarios.streams import arma_rents
+        return arma_rents(key, self.mean, B=B, ar=self.ar, ma=self.ma,
+                          sigma=self.sigma, c_min=self.c_min,
+                          c_max=self.c_max)
+
     def sample(self, key, T: int) -> jnp.ndarray:
-        p, q = len(self.ar), len(self.ma)
-        eps = self.sigma * jax.random.normal(key, (T + q,))
-        phi = jnp.asarray(self.ar, dtype=jnp.float32)
-        th = jnp.asarray(self.ma, dtype=jnp.float32)
-
-        def step(carry, t):
-            hist, eps_hist = carry  # hist: last p deviations, eps_hist: last q epsilons
-            e_t = eps[t + q]
-            dev = jnp.dot(phi, hist) + e_t + jnp.dot(th, eps_hist)
-            hist = jnp.concatenate([dev[None], hist[:-1]])
-            eps_hist = jnp.concatenate([e_t[None], eps_hist[:-1]])
-            return (hist, eps_hist), dev
-
-        init = (jnp.zeros((p,), jnp.float32), eps[:q][::-1])
-        _, devs = jax.lax.scan(step, init, jnp.arange(T))
-        c = self.mean + devs
-        # scale deviations so clipping is rare, then clip to Assumption 3 bounds
-        return jnp.clip(c, self.c_min, self.c_max)
+        return _mat1(self.stream(key), T)
 
 
 def iid_uniform(key, c_mean: float, half_width: float, T: int,
                 c_min: float = 1e-3) -> jnp.ndarray:
-    lo = max(c_mean - half_width, c_min)
-    hi = c_mean + half_width
-    return jax.random.uniform(key, (T,), minval=lo, maxval=hi)
+    from repro.core.scenarios.streams import uniform_rents
+    return _mat1(uniform_rents(key, c_mean, half_width, B=1, c_min=c_min), T)
 
 
 def negatively_associated(key, c_mean: float, half_width: float, T: int) -> jnp.ndarray:
     """Antithetic-pair construction: (U, 1-U) pairs are negatively associated,
     satisfying Assumption 7's rent-process requirement."""
-    n = (T + 1) // 2
-    u = jax.random.uniform(key, (n,))
-    pair = jnp.stack([u, 1.0 - u], axis=1).reshape(-1)[:T]
-    lo, hi = c_mean - half_width, c_mean + half_width
-    return lo + (hi - lo) * pair
+    from repro.core.scenarios.streams import na_rents
+    return _mat1(na_rents(key, c_mean, half_width, B=1), T)
 
 
 def constant(c: float, T: int) -> jnp.ndarray:
@@ -117,7 +113,9 @@ def fit_arma(series: np.ndarray, p: int = 4, q: int = 2,
 def aws_spot_like(key, c_mean: float, T: int, rel_sigma: float = 0.15,
                   c_min: float | None = None, c_max: float | None = None) -> jnp.ndarray:
     """Convenience: ARMA(4,2) with default coefficients, scaled to a target
-    mean — the shape of the paper's EC2 spot-price rent process."""
+    mean — the shape of the paper's EC2 spot-price rent process.  The
+    stream form is ``scenarios.spot_rents`` (same defaults; same bits under
+    the same key)."""
     proc = ARMAProcess(mean=c_mean, sigma=rel_sigma * c_mean,
                        c_min=c_min if c_min is not None else max(0.2 * c_mean, 1e-3),
                        c_max=c_max if c_max is not None else 3.0 * c_mean)

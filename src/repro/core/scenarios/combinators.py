@@ -1,0 +1,232 @@
+"""Scenario combinators: declare mixed workloads instead of hand-assembling
+observation arrays.
+
+* ``combine``             — one stream per channel -> a full ``Scenario``.
+* ``mixture``             — per-instance mixture over [B]: instance b plays
+                            component ``component[b]``'s stream.
+* ``mixture_from_weights``— sample that assignment from mixture weights.
+* ``regime_switch``       — time-based switching at fixed slot boundaries.
+* ``antithetic_pairing``  — negatively-associated instance pairs: (2m, 2m+1)
+                            share a key, the odd member flips its uniforms.
+* ``trace_scenario``      — deterministic playback of recorded [B, T] obs.
+
+Composition happens at the *stream* level, so combinator outputs are
+ordinary streams: mixtures of regime-switched antithetic pairs are
+one-liners and everything still fuses into the fleet scan.  Selection uses
+compute-all-then-select (``jnp.where``), the same trick the policies use
+for one-hot levels: every component advances its state and draws every
+slot, which keeps the combinators vmap/shard_map-transparent and makes the
+selected rows *bitwise equal* to running the selected component alone
+(tests/test_scenarios.py::test_mixture_selects_components).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scenarios.base import ObsSlab, Scenario, Stream
+from repro.core.scenarios import streams as _streams
+
+
+@functools.lru_cache(maxsize=256)
+def _combine_fns(arr_fns, rent_fns, svc_fns):
+    """(init_fn, chunk_fn) for a channel combination, memoized on the
+    component *functions* (not params): combining the same stream families
+    twice yields identical function objects, so the identity-keyed compile
+    caches downstream hit instead of re-tracing per Scenario construction."""
+    arr_init, arr_chunk = arr_fns
+    rent_init, rent_chunk = rent_fns
+
+    def init_fn(params):
+        st = {"arr": arr_init(params["arr"]),
+              "rent": rent_init(params["rent"])}
+        if svc_fns is not None:
+            st["svc"] = svc_fns[0](params["svc"])
+        return st
+
+    def chunk_fn(params, state, tids):
+        sa, (x, side) = arr_chunk(params["arr"], state["arr"], tids)
+        sr, c = rent_chunk(params["rent"], state["rent"], tids)
+        st = {"arr": sa, "rent": sr}
+        svc_v = None
+        if svc_fns is not None:
+            st["svc"], svc_v = svc_fns[1](params["svc"], state["svc"],
+                                          tids, x)
+        return st, ObsSlab(x=x, c=c, svc=svc_v, side=side)
+
+    return init_fn, chunk_fn
+
+
+def combine(arrivals: Stream, rents: Stream, svc: Optional[Stream] = None,
+            name: Optional[str] = None) -> Scenario:
+    """Fuse per-channel streams into one Scenario."""
+    for s, kind in ((arrivals, "arrivals"), (rents, "rents")):
+        if s.kind != kind:
+            raise ValueError(f"{s.name} is a {s.kind} stream, expected {kind}")
+    if svc is not None and svc.kind != "svc":
+        raise ValueError(f"{svc.name} is a {svc.kind} stream, expected svc")
+    params = {"arr": arrivals.params, "rent": rents.params}
+    if svc is not None:
+        params["svc"] = svc.params
+    init_fn, chunk_fn = _combine_fns(
+        (arrivals.init_fn, arrivals.chunk_fn),
+        (rents.init_fn, rents.chunk_fn),
+        None if svc is None else (svc.init_fn, svc.chunk_fn))
+    name = name or f"{arrivals.name}+{rents.name}" + \
+        (f"+{svc.name}" if svc is not None else "")
+    return Scenario(name, init_fn, chunk_fn, params,
+                    has_svc=svc is not None, has_side=arrivals.has_side)
+
+
+def _check_same_kind(components: Sequence[Stream]) -> str:
+    kinds = {s.kind for s in components}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot mix stream kinds {sorted(kinds)}")
+    return kinds.pop()
+
+
+@functools.lru_cache(maxsize=256)
+def _select_fns(comp_fns, by_time: bool):
+    """(init_fn, chunk_fn) for compute-all-then-select composition, memoized
+    on the component *functions* so repeated mixture()/regime_switch()
+    constructions reuse the same function objects (and therefore hit the
+    identity-keyed compile caches downstream, like ``_combine_fns``).
+
+    ``by_time=False`` selects per instance by ``params["component"]``;
+    ``by_time=True`` selects per slot by ``params["bounds"]`` boundaries.
+    """
+
+    def init_fn(params):
+        return tuple(f[0](p) for f, p in zip(comp_fns, params["subs"]))
+
+    def chunk_fn(params, state, tids, *extra):
+        states, values = [], []
+        for f, p, st in zip(comp_fns, params["subs"], state):
+            st2, v = f[1](p, st, tids, *extra)
+            states.append(st2)
+            values.append(v)
+        if by_time:
+            sel = jnp.sum(tids[:, None] >= params["bounds"][None, :],
+                          axis=1)                                # [chunk]
+        else:
+            sel = params["component"]                            # scalar
+        out = values[0]
+        for i in range(1, len(values)):
+            pick = sel == i
+            out = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(
+                    pick.reshape(pick.shape + (1,) * (a.ndim - pick.ndim))
+                    if by_time else pick, b, a),
+                out, values[i])
+        return tuple(states), out
+
+    return init_fn, chunk_fn
+
+
+def _component_B(components: Sequence[Stream]) -> int:
+    return jax.tree_util.tree_leaves(components[0].params)[0].shape[0]
+
+
+def mixture(components: Sequence[Stream], component) -> Stream:
+    """Per-instance mixture: instance b emits component ``component[b]``'s
+    stream (all components must be the same channel kind).  Every
+    component's state advances on every instance; the winner is selected
+    per instance, so row b is bitwise the winner's own output."""
+    kind = _check_same_kind(components)
+    comp = np.asarray(component, np.int32)
+    if np.any((comp < 0) | (comp >= len(components))):
+        raise ValueError(f"component indices must be in [0, "
+                         f"{len(components)}), got {comp}")
+    params = {"component": jnp.asarray(comp),
+              "subs": tuple(s.params for s in components)}
+    init_fn, chunk_fn = _select_fns(
+        tuple((s.init_fn, s.chunk_fn) for s in components), False)
+    name = "mix(" + ",".join(s.name for s in components) + ")"
+    return Stream(name, kind, init_fn, chunk_fn, params,
+                  has_side=any(s.has_side for s in components))
+
+
+def mixture_from_weights(components: Sequence[Stream], weights, key,
+                         B: int) -> Stream:
+    """Mixture with the per-instance assignment sampled once from
+    ``weights`` (the declarative form of "30% bursty, 70% Bernoulli")."""
+    w = np.asarray(weights, np.float64)
+    comp = jax.random.choice(jnp.asarray(key), len(components), (B,),
+                             p=jnp.asarray(w / w.sum()))
+    return mixture(components, comp)
+
+
+def regime_switch(components: Sequence[Stream],
+                  boundaries: Sequence[int]) -> Stream:
+    """Time-based switching: slots ``[boundaries[i-1], boundaries[i])`` play
+    component i (``boundaries`` are global slot indices, strictly
+    increasing, one fewer than components).  Every component keeps
+    advancing its own state through foreign regimes, so for counter-based
+    (stateless) components each regime's slots are bitwise the component's
+    own slots."""
+    kind = _check_same_kind(components)
+    if len(boundaries) != len(components) - 1:
+        raise ValueError("need len(components) - 1 boundaries")
+    bounds = np.asarray(boundaries, np.int32)
+    if bounds.size and np.any(np.diff(bounds) <= 0):
+        raise ValueError("boundaries must be strictly increasing")
+    B = _component_B(components)
+    # [B, n-1] params leaf (every leaf needs the instance axis for vmap)
+    params = {"bounds": jnp.broadcast_to(jnp.asarray(bounds)[None],
+                                         (B,) + bounds.shape),
+              "subs": tuple(s.params for s in components)}
+    init_fn, chunk_fn = _select_fns(
+        tuple((s.init_fn, s.chunk_fn) for s in components), True)
+    name = "switch(" + ",".join(s.name for s in components) + ")"
+    return Stream(name, kind, init_fn, chunk_fn, params,
+                  has_side=any(s.has_side for s in components))
+
+
+def antithetic_pairing(stream: Stream) -> Stream:
+    """Negatively-associated instance pairs: instances (2m, 2m+1) share
+    instance 2m's key and the odd member flips every slot uniform
+    ``u -> 1 - u``.  Requires a stream with ``key`` and ``flip`` params
+    (``bernoulli_arrivals``, ``uniform_rents``); pair sums of uniforms are
+    exactly ``lo + hi`` (variance-reduction law in the tests)."""
+    if not (isinstance(stream.params, dict) and "flip" in stream.params
+            and "key" in stream.params):
+        raise ValueError(f"{stream.name} does not support antithetic "
+                         "pairing (no flip/key params)")
+    B = stream.params["flip"].shape[0]
+    even = (np.arange(B) // 2) * 2
+    params = dict(stream.params)
+    params["key"] = jnp.asarray(stream.params["key"])[even]
+    params["flip"] = jnp.asarray(np.arange(B) % 2 == 1)
+    return Stream(f"antithetic({stream.name})", stream.kind, stream.init_fn,
+                  stream.chunk_fn, params, has_side=stream.has_side)
+
+
+def _trace_svc_chunk(params, state, tids, x):
+    tr = params["trace"]
+    return state, jnp.take(tr, jnp.minimum(tids, tr.shape[0] - 1), axis=0)
+
+
+def _trace_svc_init(params):
+    return ()
+
+
+def trace_scenario(x, c, B: Optional[int] = None, svc=None,
+                   side=None) -> Scenario:
+    """Deterministic playback of recorded observations through the fused
+    engine (g-curve pipelines, real traces).  ``svc`` rides as a [B, T, K]
+    trace when given."""
+    arr = _streams.trace_arrivals(x, B=B, side=side)
+    B_eff = arr.params["trace"].shape[0]
+    rent = _streams.trace_rents(c, B=B_eff)
+    svc_stream = None
+    if svc is not None:
+        svc_arr = jnp.asarray(svc)
+        if svc_arr.ndim == 2:
+            svc_arr = jnp.broadcast_to(svc_arr[None], (B_eff,) + svc_arr.shape)
+        svc_stream = Stream("trace", "svc", _trace_svc_init, _trace_svc_chunk,
+                            {"trace": svc_arr})
+    return combine(arr, rent, svc=svc_stream, name="trace")

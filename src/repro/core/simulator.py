@@ -20,7 +20,11 @@ params (see ``policies/base.py``).  ``run_policy`` runs ONE instance;
 ``costs.HostingGrid``) plus [B, T]-shaped observations, and runs all B
 independent hosting problems as a single compiled ``jit(vmap(scan))``.
 ``core/fleet.py`` layers device sharding (``shard_map`` over the ``fleet``
-mesh axis), mixed per-instance horizons, and T-chunked streaming on top.
+mesh axis), mixed per-instance horizons, T-chunked streaming, and fused
+on-device workload generation (``run_fleet(scenario=...)`` feeds
+``sim_chunk_core`` slabs emitted by a ``core.scenarios.Scenario`` inside
+the scan instead of slices of a resident obs array — bit-identical, with
+O(B * chunk) device memory) on top.
 
 The shared kernel is ``sim_chunk_core``: it scans a ``[t0, t0 + chunk)``
 slot window carrying ``(policy state, accumulator)``, so chaining it over

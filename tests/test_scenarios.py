@@ -1,0 +1,405 @@
+"""Scenario engine correctness (core/scenarios/ + fleet fusion), per the
+PR-3 acceptance bar:
+
+* every migrated generator is **bit-identical** to its legacy
+  ``arrivals.py`` / ``rentcosts.py`` counterpart under the same key, and
+  invariant to the materialization chunking (the counter-key contract);
+* fused ``run_fleet(scenario=...)`` == materialize-then-run **bit-for-bit**
+  for every policy family, the offline DP and schedule evaluation, across
+  chunked / streamed / multi-device (forced-CPU subprocess) configurations
+  and mixed horizons;
+* combinator laws: mixtures select components exactly, regime switches are
+  exact at their boundaries, antithetic pairs sum to ``lo + hi``, trace
+  playback reproduces recorded observations through the fused engine.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import arrivals, rentcosts
+from repro.core import scenarios as S
+from repro.core.arrivals import GilbertElliot
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (FleetBatch, evaluate_schedule_fleet,
+                              offline_opt_fleet, run_fleet)
+from repro.core.policies import (ABCPolicy, AlphaRR, MDPPolicy, RetroRenting,
+                                 StaticPolicy)
+
+T = 48
+KEY = jax.random.PRNGKey(42)
+CHUNKS = [16, 20]      # 20 does not divide 48: exercises the padded tail
+
+
+# ----------------------------------------------------------------------
+# (a) migrated generators: legacy == stream, any materialization chunking.
+# ----------------------------------------------------------------------
+
+GEN_CASES = [
+    ("bernoulli",
+     lambda k, t: arrivals.bernoulli(k, 0.3, t),
+     lambda k: S.bernoulli_arrivals(k, 0.3, B=1), 0),
+    ("poisson",
+     lambda k, t: arrivals.poisson(k, 2.5, t),
+     lambda k: S.poisson_arrivals(k, 2.5, B=1), 0),
+    ("ge-poisson",
+     lambda k, t: GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=3.0,
+                                rate_l=0.2).sample(k, t),
+     lambda k: S.ge_arrivals(k, 0.2, 0.1, 3.0, 0.2, B=1), 0),
+    ("ge-bernoulli",
+     lambda k, t: GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=0.9, rate_l=0.1,
+                                emission="bernoulli").sample(k, t),
+     lambda k: S.ge_arrivals(k, 0.2, 0.1, 0.9, 0.1, B=1,
+                             emission="bernoulli"), 0),
+    ("cluster",
+     lambda k, t: arrivals.cluster_trace_like(k, t),
+     lambda k: S.bursty_arrivals(k, B=1), 0),
+    ("cluster-diurnal",
+     lambda k, t: arrivals.cluster_trace_like(k, t, diurnal_period=16),
+     lambda k: S.bursty_arrivals(k, B=1, diurnal_period=16), 0),
+    ("fetch-bait",
+     lambda k, t: arrivals.adversarial_fetch_bait(10, t),
+     lambda k: S.adversarial_fetch_bait(10, B=1), 0),
+    ("evict-bait",
+     lambda k, t: arrivals.adversarial_evict_bait(5, 10, t),
+     lambda k: S.adversarial_evict_bait(5, 10, B=1), 0),
+    ("arma",
+     lambda k, t: rentcosts.ARMAProcess(mean=0.5).sample(k, t),
+     lambda k: rentcosts.ARMAProcess(mean=0.5).stream(k), None),
+    ("aws-spot",
+     lambda k, t: rentcosts.aws_spot_like(k, 0.35, t),
+     lambda k: S.spot_rents(k, 0.35, B=1), None),
+    ("iid-uniform",
+     lambda k, t: rentcosts.iid_uniform(k, 0.5, 0.2, t),
+     lambda k: S.uniform_rents(k, 0.5, 0.2, B=1), None),
+    ("neg-assoc",
+     lambda k, t: rentcosts.negatively_associated(k, 0.5, 0.2, t),
+     lambda k: S.na_rents(k, 0.5, 0.2, B=1), None),
+]
+
+
+@pytest.mark.parametrize("name,legacy,stream_fn,leaf",
+                         GEN_CASES, ids=[c[0] for c in GEN_CASES])
+def test_stream_matches_legacy_and_is_chunk_invariant(name, legacy,
+                                                      stream_fn, leaf):
+    """Same key -> the stream materialization IS the legacy array, and any
+    materialization chunk size produces the identical bits."""
+    ref = np.asarray(legacy(KEY, T))
+    stream = stream_fn(KEY)
+    for chunk in [None] + CHUNKS + [7]:
+        vals = S.materialize_stream(stream, T, chunk_size=chunk)
+        got = vals[leaf] if leaf is not None else vals
+        assert np.array_equal(np.asarray(got)[0], ref), (name, chunk)
+
+
+def test_ge_states_side_channel_matches_legacy():
+    ge = GilbertElliot(p_hl=0.2, p_lh=0.1, rate_h=3.0, rate_l=0.2)
+    x_ref, s_ref = ge.sample(KEY, T, return_states=True)
+    x, side = S.materialize_stream(ge.stream(KEY), T, chunk_size=7)
+    assert np.array_equal(np.asarray(x)[0], np.asarray(x_ref))
+    assert np.array_equal(np.asarray(side)[0], np.asarray(s_ref))
+
+
+def test_scenario_materialize_chunk_invariant():
+    B = 3
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(KEY, B), 0.3, 0.2, 2.0, 0.2, B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B),
+        svc=S.model2_service(jax.random.PRNGKey(2),
+                             np.array([1.0, 0.5, 0.0]), B, max_per_slot=6))
+    base = S.materialize(sc, T)
+    for chunk in CHUNKS + [7]:
+        got = S.materialize(sc, T, chunk_size=chunk)
+        for a, b in zip(base, got):
+            assert np.array_equal(a, b), chunk
+
+
+# ----------------------------------------------------------------------
+# (b) fused run_fleet(scenario=...) == materialize-then-run, bit for bit.
+# ----------------------------------------------------------------------
+
+def mixed_costs(B=6):
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(B):
+        M = float(rng.choice([2.0, 4.0, 10.0]))
+        kind = i % 3
+        if kind == 0:
+            out.append(HostingCosts.two_level(M))
+        elif kind == 1:
+            out.append(HostingCosts.three_level(M, 0.25 + 0.125 * (i % 3),
+                                                0.125 * (1 + i % 5)))
+        else:
+            out.append(HostingCosts(M=M, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                                    g=(1.0, 0.4, 0.3, 0.15, 0.0)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def stacked():
+    costs_list = mixed_costs()
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    ges = [GilbertElliot(p_hl=0.3, p_lh=0.2 + 0.1 * (i % 3),
+                         rate_h=2.0 + i % 2, rate_l=0.2) for i in range(B)]
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(KEY, B), np.array([g.p_hl for g in ges]),
+                      np.array([g.p_lh for g in ges]),
+                      np.array([g.rate_h for g in ges]),
+                      np.array([g.rate_l for g in ges]), B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B))
+    fleet = FleetBatch.for_scenario(grid, T)
+    fleet_m = FleetBatch.from_scenario(grid, sc, T)
+    c_means = [float(np.mean(fleet_m.c[i])) for i in range(B)]
+    return costs_list, grid, ges, c_means, sc, fleet, fleet_m
+
+
+def policy_cases(fleet, costs_list, ges, c_means):
+    return [
+        ("alpha-RR", AlphaRR.fleet(fleet), False),
+        ("RR", RetroRenting.fleet(fleet), True),
+        ("static", StaticPolicy.fleet(fleet, fleet.grid.top_index()), False),
+        ("MDP", MDPPolicy.fleet(fleet, costs_list, ges, c_means), False),
+        ("ABC", ABCPolicy.fleet(fleet, costs_list, ges, c_means), False),
+    ]
+
+
+def assert_bitwise_equal(a, b):
+    assert np.array_equal(a.total, b.total)
+    assert np.array_equal(a.rent, b.rent)
+    assert np.array_equal(a.service, b.service)
+    assert np.array_equal(a.fetch, b.fetch)
+    if a.r_hist is not None and b.r_hist is not None:
+        assert np.array_equal(a.r_hist, b.r_hist)
+    assert np.array_equal(a.level_slots, b.level_slots)
+
+
+def test_fused_matches_materialized_every_policy(stacked):
+    costs_list, grid, ges, c_means, sc, fleet, fleet_m = stacked
+    for name, fns, endpoints in policy_cases(fleet, costs_list, ges,
+                                             c_means):
+        fl = fleet.restrict_to_endpoints() if endpoints else fleet
+        flm = fleet_m.restrict_to_endpoints() if endpoints else fleet_m
+        base = run_fleet(fns, flm)
+        for kw in ({}, {"chunk_size": CHUNKS[0]}, {"chunk_size": CHUNKS[1]},
+                   {"chunk_size": CHUNKS[1], "stream": True}):
+            fused = run_fleet(fns, fl, scenario=sc, **kw)
+            assert_bitwise_equal(fused, base)
+        # collect_trace=False drops only the trace
+        nt = run_fleet(fns, fl, scenario=sc, chunk_size=CHUNKS[0],
+                       collect_trace=False)
+        assert nt.r_hist is None
+        assert np.array_equal(nt.total, base.total), name
+
+
+def test_fused_matches_materialized_dp_and_schedule(stacked):
+    costs_list, grid, ges, c_means, sc, fleet, fleet_m = stacked
+    base = offline_opt_fleet(fleet_m)
+    for kw in ({}, {"chunk_size": CHUNKS[1]}):
+        fo = offline_opt_fleet(fleet, scenario=sc, **kw)
+        assert np.array_equal(fo.cost, base.cost)
+        assert np.array_equal(fo.r_hist, base.r_hist)
+        assert np.array_equal(fo.sim.total, base.sim.total)
+    rng = np.random.default_rng(11)
+    r = np.stack([rng.integers(0, cc.K, T) for cc in costs_list])
+    ev = evaluate_schedule_fleet(fleet_m, r)
+    for kw in ({}, {"chunk_size": CHUNKS[1]}):
+        assert_bitwise_equal(
+            evaluate_schedule_fleet(fleet, r, scenario=sc, **kw), ev)
+
+
+def test_fused_matches_materialized_mixed_horizons(stacked):
+    costs_list, grid, ges, c_means, sc, fleet, fleet_m = stacked
+    Ts = [48, 37, 23, 48, 11, 30]
+    fl = FleetBatch.for_scenario(grid, Ts)
+    flm = FleetBatch.from_scenario(grid, sc, Ts)
+    fns = AlphaRR.fleet(fl)
+    base = run_fleet(fns, flm)
+    for kw in ({}, {"chunk_size": CHUNKS[1]},
+               {"chunk_size": CHUNKS[1], "stream": True}):
+        assert_bitwise_equal(run_fleet(fns, fl, scenario=sc, **kw), base)
+    bo = offline_opt_fleet(flm)
+    fo = offline_opt_fleet(fl, scenario=sc, chunk_size=CHUNKS[0])
+    assert np.array_equal(bo.cost, fo.cost)
+    assert np.array_equal(bo.r_hist, fo.r_hist)
+
+
+def test_fused_model2_service_and_endpoint_coupling(stacked):
+    """The service stream bound to the endpoint-restricted grid prices RR
+    on exactly the endpoint gather of the full grid's coupled uniforms."""
+    costs_list, grid, *_ = stacked
+    B = grid.B
+    ksvc = jax.random.PRNGKey(9)
+
+    def scenario_fn(g):
+        return S.combine(
+            S.poisson_arrivals(S.shared_keys(jax.random.PRNGKey(3), B),
+                               2.0, B),
+            S.uniform_rents(jax.random.PRNGKey(4), 0.5, 0.2, B),
+            svc=S.model2_service(S.shared_keys(ksvc, B), g.g, B,
+                                 max_per_slot=8))
+    sc = scenario_fn(grid)
+    fleet = FleetBatch.for_scenario(grid, T)
+    fleet_m = FleetBatch.from_scenario(grid, sc, T)
+    base = run_fleet(AlphaRR.fleet(fleet), fleet_m)
+    fused = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
+                      chunk_size=CHUNKS[1], stream=True)
+    assert_bitwise_equal(fused, base)
+    # endpoint coupling: materialized svc gathered to (0, top) == the
+    # endpoint-grid stream's own draws
+    g2 = grid.restrict_to_endpoints()
+    x2, c2, svc2, _ = S.materialize(scenario_fn(g2), T)
+    gathered = np.asarray(grid.endpoint_service(np.asarray(fleet_m.svc)))
+    assert np.array_equal(svc2, gathered)
+    fo = offline_opt_fleet(FleetBatch.for_scenario(g2, T),
+                           scenario=scenario_fn(g2))
+    bo = offline_opt_fleet(fleet_m.restrict_to_endpoints())
+    assert np.array_equal(fo.cost, bo.cost)
+
+
+def test_scenario_requires_obsless_fleet(stacked):
+    costs_list, grid, ges, c_means, sc, fleet, fleet_m = stacked
+    with pytest.raises(ValueError):
+        run_fleet(AlphaRR.fleet(fleet_m), fleet_m, scenario=sc)
+
+
+# ----------------------------------------------------------------------
+# (c) combinator laws.
+# ----------------------------------------------------------------------
+
+def test_mixture_selects_components():
+    B = 4
+    comps = [S.bernoulli_arrivals(S.split_keys(KEY, B), 0.2, B),
+             S.poisson_arrivals(S.split_keys(jax.random.PRNGKey(7), B),
+                                2.0, B)]
+    assign = [0, 1, 0, 1]
+    mixed = S.mixture(comps, assign)
+    xm, _ = S.materialize_stream(mixed, T, chunk_size=7)
+    x0, _ = S.materialize_stream(comps[0], T)
+    x1, _ = S.materialize_stream(comps[1], T)
+    for b, comp in enumerate(assign):
+        src = (x0, x1)[comp]
+        assert np.array_equal(np.asarray(xm)[b], np.asarray(src)[b]), b
+
+
+def test_mixture_from_weights_frequencies():
+    B = 400
+    comps = [S.constant_rents(1.0, B), S.constant_rents(2.0, B)]
+    mixed = S.mixture_from_weights(comps, [0.25, 0.75],
+                                   jax.random.PRNGKey(0), B)
+    c = np.asarray(S.materialize_stream(mixed, 2))
+    frac2 = float(np.mean(c[:, 0] == 2.0))
+    assert abs(frac2 - 0.75) < 0.07
+
+
+def test_regime_switch_boundaries():
+    B = 3
+    a = S.bernoulli_arrivals(S.split_keys(KEY, B), 0.9, B)
+    b = S.bernoulli_arrivals(S.split_keys(jax.random.PRNGKey(5), B), 0.1, B)
+    sw = S.regime_switch([a, b], [20])
+    xs, _ = S.materialize_stream(sw, T, chunk_size=16)  # boundary mid-chunk
+    xa, _ = S.materialize_stream(a, T)
+    xb, _ = S.materialize_stream(b, T)
+    assert np.array_equal(np.asarray(xs)[:, :20], np.asarray(xa)[:, :20])
+    assert np.array_equal(np.asarray(xs)[:, 20:], np.asarray(xb)[:, 20:])
+
+
+def test_antithetic_pairing_symmetry():
+    B = 6
+    paired = S.antithetic_pairing(S.uniform_rents(KEY, 0.5, 0.2, B))
+    c = np.asarray(S.materialize_stream(paired, T))
+    # pair members sum to lo + hi = 2 * c_mean on every slot...
+    assert np.allclose(c[0::2] + c[1::2], 1.0, atol=1e-6)
+    # ...and are genuinely antithetic, not constant
+    assert np.std(c[0]) > 0.01
+    # pairing a paired stream is idempotent on the even members
+    c2 = np.asarray(S.materialize_stream(
+        S.antithetic_pairing(S.uniform_rents(KEY, 0.5, 0.2, B)), T))
+    assert np.array_equal(c, c2)
+
+
+def test_antithetic_pairing_requires_flip_support():
+    with pytest.raises(ValueError):
+        S.antithetic_pairing(S.poisson_arrivals(KEY, 2.0, B=2))
+
+
+def test_trace_playback_reproduces_obs_through_engine():
+    """A recorded sample path replayed through the fused engine gives the
+    exact obs-backed run (the geolife/g-curve port's contract)."""
+    costs_list = mixed_costs(4)
+    grid = HostingGrid.from_costs(costs_list)
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 3, (grid.B, T))
+    c = rng.integers(1, 16, (grid.B, T)) / 8.0
+    sc = S.trace_scenario(x, c)
+    fleet_obs = FleetBatch.from_dense(grid, x, c)
+    fleet = FleetBatch.for_scenario(grid, T)
+    fns = AlphaRR.fleet(fleet)
+    base = run_fleet(fns, fleet_obs)
+    for kw in ({}, {"chunk_size": CHUNKS[1]},
+               {"chunk_size": CHUNKS[1], "stream": True}):
+        assert_bitwise_equal(run_fleet(fns, fleet, scenario=sc, **kw), base)
+    fo = offline_opt_fleet(fleet, scenario=sc, chunk_size=CHUNKS[1])
+    bo = offline_opt_fleet(fleet_obs)
+    assert np.array_equal(fo.cost, bo.cost)
+    assert np.array_equal(fo.r_hist, bo.r_hist)
+
+
+# ----------------------------------------------------------------------
+# Multi-device mesh (forced CPU devices; subprocess, since this process is
+# pinned to one device by conftest).
+# ----------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import scenarios as S
+    from repro.core.costs import HostingCosts, HostingGrid
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR
+    from repro.sharding.specs import fleet_mesh
+
+    # B=6 is not a multiple of 4: exercises dummy-instance padding of the
+    # scenario params
+    costs_list = [HostingCosts.three_level(4.0 + i, 0.3, 0.4) for i in range(5)]
+    costs_list.append(HostingCosts.two_level(4.0))
+    grid = HostingGrid.from_costs(costs_list)
+    B, T = grid.B, 48
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(jax.random.PRNGKey(0), B), 0.3, 0.2,
+                      2.0, 0.2, B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B))
+    fleet = FleetBatch.for_scenario(grid, T)
+    fleet_m = FleetBatch.from_scenario(grid, sc, T)
+    fns = AlphaRR.fleet(fleet)
+    base = run_fleet(fns, fleet_m, mesh=fleet_mesh(jax.devices()[:1]))
+    for mesh in (fleet_mesh(jax.devices()[:1]), fleet_mesh()):
+        for kw in ({}, {"chunk_size": 20}, {"chunk_size": 20, "stream": True}):
+            fr = run_fleet(fns, fleet, scenario=sc, mesh=mesh, **kw)
+            assert np.array_equal(fr.total, base.total), (mesh, kw)
+            assert np.array_equal(fr.r_hist, base.r_hist), (mesh, kw)
+            assert np.array_equal(fr.level_slots, base.level_slots), (mesh, kw)
+    bo = offline_opt_fleet(fleet_m, mesh=fleet_mesh(jax.devices()[:1]))
+    fo = offline_opt_fleet(fleet, scenario=sc, mesh=fleet_mesh(),
+                           chunk_size=20)
+    assert np.array_equal(fo.cost, bo.cost)
+    assert np.array_equal(fo.r_hist, bo.r_hist)
+    assert np.array_equal(fo.sim.total, bo.sim.total)
+    print("MULTI-DEVICE-SCENARIO-OK")
+""")
+
+
+def test_scenario_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MULTI-DEVICE-SCENARIO-OK" in out.stdout
