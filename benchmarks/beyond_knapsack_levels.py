@@ -8,6 +8,15 @@ knee points, a knapsack-flavoured rule) and run multiple-RR on the
 resulting grid, against the paper's 3-level alpha-RR at its best single
 alpha, RR, and the uniform-grid multiple-RR.
 
+Fleet-engine port: every candidate grid — each 3-level curve point for the
+best-alpha search, plain RR, and the knapsack/uniform multi-level grids —
+is one instance of a single mixed-K fleet, and the whole table is ONE
+seed-fused ``run_fleet`` on a Bernoulli + spot scenario with coupled
+Model-2 service draws bound to each instance's own g columns
+(``n_seeds`` Monte-Carlo sample paths folded into the stream keys by the
+engine; costs are seed-means).  No per-instance ``run_policy`` loop
+remains anywhere in benchmarks/.
+
 Claim tested: measured-curve grids dominate uniform grids of the same K,
 and more levels help monotonically (up to noise) — quantifying the open
 problem on this instance family.
@@ -17,13 +26,15 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import arrivals, rentcosts, geolife
-from repro.core.costs import HostingCosts
-from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import geolife
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, mc_stats, run_fleet
+from repro.core.policies import AlphaRR
 
 C_MEAN = 0.55
 M = 10.0
+P_ARRIVAL = 0.5
 
 
 def pick_levels(alphas, gs, k: int):
@@ -56,51 +67,60 @@ def _grid_costs(levels_g, cmin, cmax):
     return HostingCosts(M=M, levels=levels, g=gs, c_min=cmin, c_max=cmax)
 
 
-def run(T=4000, seed=0):
+def run(T=4000, seed=0, n_seeds=4):
     al, gl, _ = geolife.gcurve_from_city(n_side=12, n_train=1200, n_test=400,
                                          seed=seed)
     kx, kc, ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    x = arrivals.bernoulli(kx, 0.5, T)
-    c = rentcosts.aws_spot_like(kc, C_MEAN, T)
-    cmin, cmax = float(np.min(np.asarray(c))), float(np.max(np.asarray(c)))
-    rows = []
+    cmin, cmax = S.spot_bounds(C_MEAN)
 
-    # paper's 3-level alpha-RR at its best measured alpha + plain RR
-    best3 = None
-    for a, g in zip(al, gl):
-        if not (0.0 < a < 1.0 and 0.0 < g < 1.0):
-            continue
-        costs = HostingCosts.three_level(M, float(a), float(g), cmin, cmax)
-        svc = model2_service_matrix(ks, costs, x)
-        tot = run_policy(AlphaRR(costs), costs, x, c, svc=svc).total / T
-        if best3 is None or tot < best3[1]:
-            best3 = (float(a), tot)
-    rows.append({"grid": "alpha-RR(best alpha)", "K": 1, "cost": best3[1],
-                 "levels": [best3[0]]})
-    costs2 = HostingCosts.two_level(M, cmin, cmax)
-    svc2 = model2_service_matrix(ks, costs2, x)
-    rows.append({"grid": "RR", "K": 0,
-                 "cost": run_policy(AlphaRR(costs2), costs2, x, c,
-                                    svc=svc2).total / T,
-                 "levels": []})
-
+    # every candidate grid is one instance of a mixed-K fleet
+    curve_pts = [(float(a), float(g)) for a, g in zip(al, gl)
+                 if 0.0 < a < 1.0 and 0.0 < g < 1.0]
+    costs_list = [HostingCosts.three_level(M, a, g, cmin, cmax)
+                  for a, g in curve_pts]
+    n_curve = len(costs_list)
+    costs_list.append(HostingCosts.two_level(M, cmin, cmax))        # RR
     g_of = lambda a: float(np.interp(a, al, gl))
+    grids_k = {}
     for k in (2, 4, 6):
-        # measured-curve (knapsack) grid
         kn = pick_levels(al, gl, k)
-        costs_k = _grid_costs(kn, cmin, cmax)
-        svc = model2_service_matrix(ks, costs_k, x)
-        cost_kn = run_policy(AlphaRR(costs_k), costs_k, x, c, svc=svc).total / T
-        # uniform grid of same K
         ua = [(i + 1) / (k + 1) for i in range(k)]
         un = [(a, g_of(a)) for a in ua]
-        costs_u = _grid_costs(un, cmin, cmax)
-        svc_u = model2_service_matrix(ks, costs_u, x)
-        cost_un = run_policy(AlphaRR(costs_u), costs_u, x, c, svc=svc_u).total / T
-        rows.append({"grid": "knapsack", "K": k, "cost": cost_kn,
-                     "levels": [round(a, 3) for a, _ in kn]})
-        rows.append({"grid": "uniform", "K": k, "cost": cost_un,
-                     "levels": [round(a, 3) for a, _ in un]})
+        grids_k[k] = (kn, un)
+        costs_list.append(_grid_costs(kn, cmin, cmax))
+        costs_list.append(_grid_costs(un, cmin, cmax))
+
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    sc = S.combine(
+        S.bernoulli_arrivals(S.shared_keys(kx, B), P_ARRIVAL, B),
+        S.spot_rents(S.shared_keys(kc, B), C_MEAN, B),
+        svc=S.model2_service(S.shared_keys(ks, B), grid.g, B,
+                             max_per_slot=1))
+    fleet = FleetBatch.for_scenario(grid, T)
+    res = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
+                    n_seeds=n_seeds)
+    mean, ci = mc_stats(res.seed_view(res.total) / T, axis=1)       # [B]
+
+    rows = []
+    best = int(np.argmin(mean[:n_curve]))
+    rows.append({"grid": "alpha-RR(best alpha)", "K": 1,
+                 "cost": float(mean[best]), "cost_ci95": float(ci[best]),
+                 "levels": [curve_pts[best][0]], "n_seeds": n_seeds})
+    rows.append({"grid": "RR", "K": 0, "cost": float(mean[n_curve]),
+                 "cost_ci95": float(ci[n_curve]), "levels": [],
+                 "n_seeds": n_seeds})
+    for j, k in enumerate((2, 4, 6)):
+        kn, un = grids_k[k]
+        i_kn = n_curve + 1 + 2 * j
+        rows.append({"grid": "knapsack", "K": k, "cost": float(mean[i_kn]),
+                     "cost_ci95": float(ci[i_kn]),
+                     "levels": [round(a, 3) for a, _ in kn],
+                     "n_seeds": n_seeds})
+        rows.append({"grid": "uniform", "K": k, "cost": float(mean[i_kn + 1]),
+                     "cost_ci95": float(ci[i_kn + 1]),
+                     "levels": [round(a, 3) for a, _ in un],
+                     "n_seeds": n_seeds})
     return rows
 
 

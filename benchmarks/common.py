@@ -1,23 +1,27 @@
 """Shared helpers for the paper-figure benchmarks.
 
-Sweep-style figures run on the batched/fleet engine: every (parameter-grid
-point x Monte-Carlo seed) pair becomes one instance of a stacked
-``HostingGrid`` and the whole sweep is a handful of compiled calls instead
-of a Python loop of per-instance simulations.  ``mc_aggregate`` then
-collapses the seed axis into mean / 95%-CI columns.
+Every paper figure is a Monte-Carlo estimate over sample paths of the
+arrival/rent processes, evaluated for a handful of policy families on a
+grid of cost parameters.  Both axes now live in the *engine*, not here:
 
-Two suite entry points:
+* **MC axis** — figure modules declare one instance per *grid point* and
+  pass ``n_seeds=S``; ``run_fleet`` / ``offline_opt_fleet`` fold the seed
+  into every stream key server-side (``scenarios.replicate_seeds``) and
+  return seed-replicated results with a ``[B, S]`` ``seed_view``.  No
+  benchmark-layer per-seed stacking or key plumbing remains.
+* **Policy-family axis** — ``fused_policy_families`` stacks the classic
+  {full grid, endpoint restriction} families into ONE mixed-K fleet (the
+  AlphaRR step serves both: RR *is* AlphaRR on a 2-level grid), so a whole
+  figure is one fused ``run_fleet`` for the online curves plus one
+  ``offline_opt_fleet`` for both OPT curves.  Generation fuses into the
+  scan — no observation array is ever materialized, on host or device.
 
-* ``batch_policy_suite`` — classic: the figure module materializes [B, T]
-  observation arrays and the suite runs ``run_policy_batch`` /
-  ``offline_opt_batch`` on them.
-* ``scenario_policy_suite`` — declarative: the figure module passes a
-  ``scenario_fn(grid) -> Scenario`` and generation fuses into the fleet
-  scan (``run_fleet(scenario=...)`` / ``offline_opt_fleet(scenario=...)``)
-  — no observation array is ever materialized, on host or device.  The
-  factory is called once per level grid (the full grid and its endpoint
-  restriction) so Model-2 service streams bind the right ``g`` columns and
-  RR prices the exact endpoint gather of the same coupled uniforms.
+``scenario_policy_suite`` builds the classic six-curve rows on top of
+these (per grid point, seed-means with Student-t 95% CI columns);
+``mc_aggregate`` collapses explicit per-seed dict rows the same way and
+also accepts ``FleetResult`` / ``FleetOfflineResult`` objects directly
+(expanding their seed axis internally — ``mc_summary`` in the engine is
+the array-level equivalent, on the same t-quantiles).
 
 The LB curves need arrival/rent *means*; the scenario suite takes them as
 arguments (analytic means of the declared processes) since no realized
@@ -26,16 +30,20 @@ reference curves.
 """
 from __future__ import annotations
 
-import math
 import time
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+from repro.core.fleet import (FleetBatch, FleetOfflineResult, FleetResult,
+                              mc_stats, offline_opt_fleet, run_fleet,
+                              student_t975)
 from repro.core.policies import AlphaRR, RetroRenting, offline_opt_batch
+from repro.core.scenarios.base import Scenario
 from repro.core.simulator import run_policy_batch
 from repro.core import bounds
 
@@ -95,42 +103,128 @@ def batch_policy_suite(costs_list: Sequence[HostingCosts], x, c, svc=None,
     return rows
 
 
+# ----------------------------------------------------------------------
+# The fused figure driver: one run_fleet for every online family of a
+# figure, one offline_opt_fleet for both OPT curves, MC axis in the engine.
+# ----------------------------------------------------------------------
+
+def _grid_rows(grid: HostingGrid, lo: int, hi: int) -> HostingGrid:
+    return HostingGrid(M=grid.M[lo:hi], levels=grid.levels[lo:hi],
+                       g=grid.g[lo:hi], mask=grid.mask[lo:hi])
+
+
+class FamilyResults:
+    """Results of one fused {full-grid, endpoint} family run.
+
+    ``online`` / ``offline`` rows are laid out family-major then
+    instance-major then seed-minor: row ``(fam * B + b) * S + s``.
+    ``split(arr)`` returns one ``[B, S, ...]`` view per family.
+    """
+
+    def __init__(self, online: FleetResult,
+                 offline: Optional[FleetOfflineResult],
+                 B: int, us_per_slot: float):
+        self.online = online
+        self.offline = offline
+        self.B = B
+        self.us_per_slot = us_per_slot
+
+    def split(self, a):
+        S = self.online.n_seeds
+        a = np.asarray(a)
+        a = a.reshape((-1, self.B, S) + a.shape[1:])
+        return a[0], a[1]
+
+
+def fused_policy_families(costs_list: Sequence[HostingCosts],
+                          scenario_fn: Callable, T, *,
+                          n_seeds: Optional[int] = None,
+                          chunk_size: Optional[int] = None,
+                          run_opt: bool = True) -> FamilyResults:
+    """Run a figure's {alpha-RR, RR[, alpha-OPT, OPT]} curves as ONE fused
+    ``run_fleet`` (+ one ``offline_opt_fleet``).
+
+    The policy-family axis is stacked into the fleet itself: rows ``0..B``
+    carry the figure's grids, rows ``B..2B`` their 2-level endpoint
+    restrictions (padded + masked per the mixed-K convention, so each
+    family's valid rows are bit-identical to a standalone run).  The same
+    AlphaRR step serves both — RR is AlphaRR on a 2-level grid — and the
+    DP prices both in one call.  ``scenario_fn(grid) -> Scenario`` is
+    called once per family view so Model-2 service streams bind each
+    family's own ``g`` columns (RR prices the exact endpoint gather of the
+    same coupled uniforms); both calls must therefore build the same
+    stream family.  ``n_seeds`` rides through to the engine's MC axis.
+    """
+    B = len(costs_list)
+    endpoints = [HostingCosts.two_level(cc.M, cc.c_min, cc.c_max)
+                 for cc in costs_list]
+    grid_all = HostingGrid.from_costs(list(costs_list) + endpoints)
+    sc_lo = scenario_fn(_grid_rows(grid_all, 0, B))
+    sc_hi = scenario_fn(_grid_rows(grid_all, B, 2 * B))
+    if (sc_lo.init_fn, sc_lo.chunk_fn) != (sc_hi.init_fn, sc_hi.chunk_fn):
+        raise ValueError("scenario_fn must declare the same stream family "
+                         "for the full and endpoint grids")
+    sc = Scenario(sc_lo.name, sc_lo.init_fn, sc_lo.chunk_fn,
+                  jax.tree_util.tree_map(
+                      lambda a, b: jnp.concatenate([a, b], axis=0),
+                      sc_lo.params, sc_hi.params),
+                  has_svc=sc_lo.has_svc, has_side=sc_lo.has_side)
+    Ts = np.tile(np.broadcast_to(np.asarray(T, np.int32), (B,)), 2)
+    fleet = FleetBatch.for_scenario(grid_all, Ts)
+    fns = AlphaRR.fleet(fleet)
+    kw = dict(scenario=sc, chunk_size=chunk_size, n_seeds=n_seeds)
+    run_fleet(fns, fleet, **kw)                    # warm the jit cache
+    t0 = time.time()
+    online = run_fleet(fns, fleet, **kw)
+    us = (time.time() - t0) / (float(np.sum(Ts)) * online.n_seeds) * 1e6
+    offline = offline_opt_fleet(fleet, **kw) if run_opt else None
+    return FamilyResults(online, offline, B, us)
+
+
 def scenario_policy_suite(costs_list: Sequence[HostingCosts],
                           scenario_fn: Callable, T: int, *,
+                          n_seeds: Optional[int] = None,
                           x_means=None, c_means=None,
                           include_bounds: bool = True,
+                          include_opt: bool = True,
                           chunk_size: Optional[int] = None):
-    """The classic six-curve suite with *fused on-device generation*.
+    """The classic six-curve suite, one fused run per figure.
 
     Args:
-      costs_list: B per-instance costs (mixed K allowed).
+      costs_list: B per-instance costs (mixed K allowed) — one per grid
+        point; the Monte-Carlo axis is declared with ``n_seeds``, never by
+        stacking replica rows here.
       scenario_fn: ``(grid: HostingGrid) -> Scenario`` factory; called for
-        the stacked grid and again for its endpoint restriction (RR/OPT).
+        each family view of the stacked grid (full and endpoint) so
+        Model-2 service streams bind the right ``g`` columns.
       T: horizon (scalar or [B]).
+      n_seeds: Monte-Carlo sample paths per grid point (engine-side seed
+        fold).  When set, every numeric column gains a Student-t
+        ``<col>_ci95`` sibling and rows carry ``n_seeds``.
       x_means / c_means: analytic per-instance arrival/rent means for the
         Lemma-14 LB curves (scalar or [B]); bounds are skipped if omitted.
+      include_opt: False skips the offline DP (figures that only plot
+        online curves), dropping the 'alpha-OPT'/'OPT' columns.
       chunk_size: forwarded to the engine (None = single chunk).
 
-    Returns the same row dicts as ``batch_policy_suite``.
+    Returns one row dict per *grid point* (seed axis already collapsed),
+    with the same keys as ``batch_policy_suite`` plus the CI columns.
     """
-    grid = HostingGrid.from_costs(costs_list)
-    B = grid.B
-    fleet = FleetBatch.for_scenario(grid, T)
-    sc = scenario_fn(grid)
+    B = len(costs_list)
+    fam = fused_policy_families(costs_list, scenario_fn, T,
+                                n_seeds=n_seeds, chunk_size=chunk_size,
+                                run_opt=include_opt)
+    Ts = np.broadcast_to(np.asarray(T, np.float64), (B,))
 
-    fns = AlphaRR.fleet(fleet)
-    run_fleet(fns, fleet, scenario=sc, chunk_size=chunk_size)  # warm jit
-    t0 = time.time()
-    ar = run_fleet(fns, fleet, scenario=sc, chunk_size=chunk_size)
-    us_per_slot = (time.time() - t0) / float(np.sum(fleet.T)) * 1e6
-
-    g2 = grid.restrict_to_endpoints()
-    fleet2 = FleetBatch.for_scenario(g2, T)
-    sc2 = scenario_fn(g2)
-    rr = run_fleet(RetroRenting.fleet(fleet), fleet2, scenario=sc2,
-                   chunk_size=chunk_size)
-    aopt = offline_opt_fleet(fleet, scenario=sc, chunk_size=chunk_size)
-    opt = offline_opt_fleet(fleet2, scenario=sc2, chunk_size=chunk_size)
+    cols = OrderedDict()
+    ar_bs, rr_bs = fam.split(fam.online.total)
+    cols["alpha-RR"] = ar_bs / Ts[:, None]
+    cols["RR"] = rr_bs / Ts[:, None]
+    if include_opt:
+        aopt_bs, opt_bs = fam.split(fam.offline.cost)
+        cols["alpha-OPT"] = aopt_bs / Ts[:, None]
+        cols["OPT"] = opt_bs / Ts[:, None]
+    hist_bs, _ = fam.split(fam.online.level_slots)     # [B, S, K]
 
     if include_bounds and (x_means is None or c_means is None):
         include_bounds = False
@@ -138,17 +232,16 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
         x_means = np.broadcast_to(np.asarray(x_means, np.float64), (B,))
         c_means = np.broadcast_to(np.asarray(c_means, np.float64), (B,))
 
-    Ts = np.asarray(fleet.T, np.float64)
+    stats = {k: mc_stats(v, axis=1) for k, v in cols.items()}
     rows = []
     for i, costs in enumerate(costs_list):
-        row = {
-            "alpha-RR": ar.total[i] / Ts[i],
-            "RR": rr.total[i] / Ts[i],
-            "alpha-OPT": aopt.cost[i] / Ts[i],
-            "OPT": opt.cost[i] / Ts[i],
-            "_us_per_slot": us_per_slot,
-            "hist": ar.level_slots[i][:costs.K].tolist(),
-        }
+        row = {k: float(mean[i]) for k, (mean, _) in stats.items()}
+        if n_seeds is not None:
+            row.update({f"{k}_ci95": float(ci[i])
+                        for k, (_, ci) in stats.items()})
+            row["n_seeds"] = int(n_seeds)
+        row["_us_per_slot"] = fam.us_per_slot
+        row["hist"] = hist_bs[i].mean(axis=0)[:costs.K].tolist()
         if include_bounds:
             row["alpha-LB"] = bounds.lemma14_opt_on_per_slot(
                 costs, float(x_means[i]), float(c_means[i]))
@@ -168,26 +261,41 @@ def policy_suite(costs: HostingCosts, x, c, svc=None, include_bounds=True):
 
 
 # ----------------------------------------------------------------------
-# Monte-Carlo aggregation (the n_seeds axis of the sweep benchmarks).
+# Monte-Carlo aggregation (explicit dict rows, or FleetResults directly).
 # ----------------------------------------------------------------------
 
-# two-sided 97.5% Student-t quantiles by degrees of freedom (n_seeds - 1);
-# the normal 1.96 badly undercovers at the small n_seeds these sweeps use
-_T975 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
-         7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228}
+def fleet_result_rows(result):
+    """Expand a seed-replicated ``FleetResult`` / ``FleetOfflineResult``
+    into per-(instance, seed) dict rows — the bridge between the engine's
+    array-shaped MC axis and the dict-row aggregation below."""
+    if isinstance(result, FleetOfflineResult):
+        fields = {"total": result.seed_view(result.cost)}
+        S = result.n_seeds
+    else:
+        fields = {f: result.seed_view(getattr(result, f))
+                  for f in ("total", "rent", "service", "fetch")}
+        S = result.n_seeds
+    B = next(iter(fields.values())).shape[0]
+    return [{"instance": b, "seed": s,
+             **{f: float(v[b, s]) for f, v in fields.items()}}
+            for b in range(B) for s in range(S)]
 
 
-def _t975(df: int) -> float:
-    if df in _T975:
-        return _T975[df]
-    return 2.04 if df <= 30 else 1.96
-
-
-def mc_aggregate(rows, group_keys: Sequence[str], drop=("seed", "hist")):
+def mc_aggregate(rows, group_keys: Sequence[str] = ("instance",),
+                 drop=("seed", "hist")):
     """Collapse the seed axis: group ``rows`` by ``group_keys`` and replace
     every numeric value column v with its mean plus a ``v_ci95`` column
     (t_{.975, n-1} * sem).  Non-numeric / dropped columns keep the first
-    row's value.  'hist' columns (lists) are averaged elementwise."""
+    row's value.  'hist' columns (lists) are averaged elementwise.
+
+    ``rows`` may also be a ``FleetResult`` / ``FleetOfflineResult`` from a
+    ``n_seeds=S`` engine run: its seed axis is expanded to per-seed rows
+    (``fleet_result_rows``) and aggregated per instance — numerically
+    identical to ``core.fleet.mc_summary`` on the same result (both use
+    ``student_t975``)."""
+    if isinstance(rows, (FleetResult, FleetOfflineResult)):
+        rows = fleet_result_rows(rows)
+        group_keys = ["instance"]
     groups: "OrderedDict[tuple, list]" = OrderedDict()
     for r in rows:
         groups.setdefault(tuple(r[k] for k in group_keys), []).append(r)
@@ -207,9 +315,8 @@ def mc_aggregate(rows, group_keys: Sequence[str], drop=("seed", "hist")):
             vals = np.asarray([float(g[col]) for g in grp])
             agg[col] = float(vals.mean())
             if col not in drop and not col.startswith("_") and len(vals) > 1:
-                agg[f"{col}_ci95"] = float(
-                    _t975(len(vals) - 1) * vals.std(ddof=1)
-                    / math.sqrt(len(vals)))
+                mean, ci = mc_stats(vals, axis=0)
+                agg[f"{col}_ci95"] = float(ci)
         out.append(agg)
     return out
 

@@ -2,12 +2,13 @@
 function of alpha + g(alpha).  M=10, c=0.35, p=0.35, alpha=0.4 (paper values),
 Bernoulli arrivals, ARMA(4,2) rent.
 
-Declarative scenario spec: the (10 alpha-grid points) x (n_seeds sample
-paths) sweep is ONE fused-generation fleet per policy — each grid point of
-a seed replays that seed's sample path by *sharing its keys* (the classic
-reuse-one-trace idiom, now a key-sharing declaration instead of a
-broadcast obs array); nothing is materialized on host or device.  Rows
-report seed-means with 95% CIs.
+Fused MC driver: one instance per alpha-grid point; the Monte-Carlo axis is
+``n_seeds`` folded into the stream keys by the engine (every grid point
+shares ONE base key, so all points of a seed-replica score the same sample
+path — the classic reuse-one-trace idiom, now a key-sharing declaration
+with the seed fold server-side).  The whole figure is one fused
+``run_fleet`` (alpha-RR + RR families stacked) plus one
+``offline_opt_fleet``; rows report seed-means with 95% CIs.
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ import numpy as np
 
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts
-from benchmarks.common import scenario_policy_suite, mc_aggregate
+from benchmarks.common import scenario_policy_suite
 
 M, C_MEAN, P, ALPHA = 10.0, 0.35, 0.35, 0.4
 T = 10000
@@ -25,30 +26,27 @@ AGS = np.linspace(0.5, 1.4, 10)
 
 def run(T=T, seed=0, n_seeds=4):
     c_lo, c_hi = S.spot_bounds(C_MEAN)
-    costs_list, meta, kxs, kcs = [], [], [], []
-    for s in range(n_seeds):
-        kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        for ag in AGS:
-            g_alpha = float(np.clip(ag - ALPHA, 0.0, 1.0))
-            costs_list.append(HostingCosts.three_level(
-                M, ALPHA, g_alpha, c_min=c_lo, c_max=c_hi))
-            kxs.append(kx)
-            kcs.append(kc)
-            meta.append({"alpha_plus_g": round(float(ag), 3), "seed": s})
-    kxs, kcs = np.stack(kxs), np.stack(kcs)
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    costs_list, meta = [], []
+    for ag in AGS:
+        g_alpha = float(np.clip(ag - ALPHA, 0.0, 1.0))
+        costs_list.append(HostingCosts.three_level(
+            M, ALPHA, g_alpha, c_min=c_lo, c_max=c_hi))
+        meta.append({"alpha_plus_g": round(float(ag), 3)})
 
     def scenario_fn(grid):
-        return S.combine(S.bernoulli_arrivals(kxs, P, grid.B),
-                         S.spot_rents(kcs, C_MEAN, grid.B))
+        return S.combine(
+            S.bernoulli_arrivals(S.shared_keys(kx, grid.B), P, grid.B),
+            S.spot_rents(S.shared_keys(kc, grid.B), C_MEAN, grid.B))
 
     suite = scenario_policy_suite(costs_list, scenario_fn, T,
-                                  x_means=P, c_means=C_MEAN)
+                                  n_seeds=n_seeds, x_means=P, c_means=C_MEAN)
     rows = []
     for m, r in zip(meta, suite):
         hist = r.pop("hist")
         rows.append({**m, **r, "slots_r0": hist[0], "slots_alpha": hist[1],
                      "slots_r1": hist[2]})
-    return mc_aggregate(rows, ["alpha_plus_g"])
+    return rows
 
 
 def check(rows):

@@ -2,11 +2,11 @@
 probability p (Figs 5/6), in the alpha+g(alpha)<1 and >=1 regimes.
 Paper values: c=0.35; (alpha, g) = (0.239, 0.380) / (0.5, 0.7).
 
-Declarative scenario spec: per-instance Bernoulli-p and rent params ride in
-the stream params, so the whole (regime x M) + (regime x p) x n_seeds sweep
-is one fused-generation fleet per policy — the M-sweep instances of a seed
-share one sample path (shared keys), each p gets its own path (per-p keys),
-exactly the legacy trace-reuse pattern without materializing anything.
+Fused MC driver: one instance per (regime x M) and (regime x p) grid point
+— the M-sweep points share one base sample path (shared keys), each p gets
+its own (per-p keys) — and the Monte-Carlo axis is ``n_seeds`` folded into
+those keys by the engine.  The whole figure is one fused ``run_fleet``
+(alpha-RR + RR stacked) plus one ``offline_opt_fleet``.
 """
 from __future__ import annotations
 
@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts
-from benchmarks.common import scenario_policy_suite, mc_aggregate
+from benchmarks.common import scenario_policy_suite
 
 C_MEAN = 0.35
 REGIMES = {"lt1": (0.239, 0.380), "ge1": (0.5, 0.7)}
@@ -25,28 +25,25 @@ PS = [0.15, 0.25, 0.35, 0.45, 0.6, 0.8]
 
 def run(T=8000, seed=0, n_seeds=4):
     c_lo, c_hi = S.spot_bounds(C_MEAN)
+    km = jax.random.split(jax.random.PRNGKey(seed))
+    kp = {p: jax.random.split(jax.random.PRNGKey(seed + 1 + i))
+          for i, p in enumerate(PS)}
     costs_list, meta, kxs, kcs, ps = [], [], [], [], []
-    for s in range(n_seeds):
-        km = jax.random.split(jax.random.PRNGKey(seed + 101 * s))
-        kp = {p: jax.random.split(jax.random.PRNGKey(seed + 101 * s + 1 + i))
-              for i, p in enumerate(PS)}
-        for regime, (alpha, g_alpha) in REGIMES.items():
-            for M in MS:
-                costs_list.append(HostingCosts.three_level(
-                    M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
-                kxs.append(km[0])
-                kcs.append(km[1])
-                ps.append(0.42)
-                meta.append({"fig": "3_4", "regime": regime, "M": M,
-                             "p": 0.42, "seed": s})
-            for p in PS:
-                costs_list.append(HostingCosts.three_level(
-                    10.0, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
-                kxs.append(kp[p][0])
-                kcs.append(kp[p][1])
-                ps.append(p)
-                meta.append({"fig": "5_6", "regime": regime, "M": 10.0,
-                             "p": p, "seed": s})
+    for regime, (alpha, g_alpha) in REGIMES.items():
+        for M in MS:
+            costs_list.append(HostingCosts.three_level(
+                M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+            kxs.append(km[0])
+            kcs.append(km[1])
+            ps.append(0.42)
+            meta.append({"fig": "3_4", "regime": regime, "M": M, "p": 0.42})
+        for p in PS:
+            costs_list.append(HostingCosts.three_level(
+                10.0, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+            kxs.append(kp[p][0])
+            kcs.append(kp[p][1])
+            ps.append(p)
+            meta.append({"fig": "5_6", "regime": regime, "M": 10.0, "p": p})
     kxs, kcs = np.stack(kxs), np.stack(kcs)
     ps = np.asarray(ps, np.float32)
 
@@ -55,10 +52,9 @@ def run(T=8000, seed=0, n_seeds=4):
                          S.spot_rents(kcs, C_MEAN, grid.B))
 
     suite = scenario_policy_suite(costs_list, scenario_fn, T,
-                                  x_means=ps, c_means=C_MEAN)
-    rows = [{**m, **{k: v for k, v in r.items() if k != "hist"}}
+                                  n_seeds=n_seeds, x_means=ps, c_means=C_MEAN)
+    return [{**m, **{k: v for k, v in r.items() if k != "hist"}}
             for m, r in zip(meta, suite)]
-    return mc_aggregate(rows, ["fig", "regime", "M", "p"])
 
 
 def check(rows):

@@ -2,23 +2,21 @@
 alpha-RR vs RR, Gilbert-Elliot arrivals (Bern(0.9) in H, Bern(0.1) in L).
 Paper values: alpha=.3 g=.4 | a1=.4 g=.3 | a2=.5 g=.15, c=0.5.
 
-Declarative scenario spec: the K=5 (multiple-RR) and K=3 (alpha-RR)
-instances for every (M, seed) pair live in ONE mixed-K ``HostingGrid``
-(padded + masked) driven by a fused Gilbert-Elliot + spot-rent scenario
-(per-seed shared keys), so a single fleet scan serves both level-grid
-families with zero materialized observations; RR runs on the endpoint
-restriction of the same grid/scenario.
+Fused MC driver: ALL THREE level-grid families — K=5 multiple-RR, K=3
+alpha-RR and the K=2 endpoint RR — of every M live in ONE mixed-K
+``HostingGrid`` (padded + masked) so the whole figure is a single
+``run_fleet`` call; the Monte-Carlo axis is ``n_seeds`` folded into the
+shared GE/spot stream keys by the engine (every instance replays the same
+per-seed sample path).  Zero per-seed or per-policy loops remain.
 """
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.fleet import FleetBatch, run_fleet
-from repro.core.policies import AlphaRR, RetroRenting
-from benchmarks.common import mc_aggregate
+from repro.core.fleet import FleetBatch, mc_stats, run_fleet
+from repro.core.policies import AlphaRR
 
 LEVELS = (0.0, 0.3, 0.4, 0.5, 1.0)
 GS = (1.0, 0.4, 0.3, 0.15, 0.0)
@@ -29,45 +27,38 @@ MS = [2.0, 5.0, 10.0, 20.0, 40.0]
 
 def run(T=8000, seed=0, n_seeds=4):
     c_lo, c_hi = S.spot_bounds(C_MEAN)
-    costs_list, meta, kxs, kcs = [], [], [], []
-    for s in range(n_seeds):
-        kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        for M in MS:
-            for fam, costs in (
-                    ("multiple-RR", HostingCosts(M=M, levels=LEVELS, g=GS,
-                                                 c_min=c_lo, c_max=c_hi)),
-                    ("alpha-RR", HostingCosts.three_level(M, 0.3, 0.4,
-                                                          c_min=c_lo,
-                                                          c_max=c_hi))):
-                costs_list.append(costs)
-                kxs.append(kx)
-                kcs.append(kc)
-                meta.append({"M": M, "family": fam, "seed": s})
-    grid = HostingGrid.from_costs(costs_list)       # mixed K: 5 and 3
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    costs_list, meta = [], []
+    for M in MS:
+        for fam, costs in (
+                ("multiple-RR", HostingCosts(M=M, levels=LEVELS, g=GS,
+                                             c_min=c_lo, c_max=c_hi)),
+                ("alpha-RR", HostingCosts.three_level(M, 0.3, 0.4,
+                                                      c_min=c_lo,
+                                                      c_max=c_hi)),
+                ("RR", HostingCosts.two_level(M, c_lo, c_hi))):
+            costs_list.append(costs)
+            meta.append({"M": M, "family": fam})
+    grid = HostingGrid.from_costs(costs_list)       # mixed K: 5, 3 and 2
     B = grid.B
-    kxs, kcs = np.stack(kxs), np.stack(kcs)
     sc = S.combine(
-        S.ge_arrivals(kxs, GE["p_hl"], GE["p_lh"], GE["rate_h"], GE["rate_l"],
-                      B, emission="bernoulli"),
-        S.spot_rents(kcs, C_MEAN, B))
+        S.ge_arrivals(S.shared_keys(kx, B), GE["p_hl"], GE["p_lh"],
+                      GE["rate_h"], GE["rate_l"], B, emission="bernoulli"),
+        S.spot_rents(S.shared_keys(kc, B), C_MEAN, B))
     fleet = FleetBatch.for_scenario(grid, T)
-    multi = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc)
-    rr = run_fleet(RetroRenting.fleet(fleet), fleet.restrict_to_endpoints(),
-                   scenario=sc)
+    res = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
+                    n_seeds=n_seeds)
 
-    per_seed = {}
+    mean, ci = mc_stats(res.seed_view(res.total) / T, axis=1)   # [B]
+    hist_bs = res.seed_view(res.level_slots)                    # [B, S, K]
+    by_M = {M: {"M": M, "n_seeds": n_seeds} for M in MS}
     for i, m in enumerate(meta):
-        row = per_seed.setdefault((m["M"], m["seed"]),
-                                  {"M": m["M"], "seed": m["seed"]})
-        row[m["family"]] = multi.total[i] / T
+        row = by_M[m["M"]]
+        row[m["family"]] = float(mean[i])
+        row[f"{m['family']}_ci95"] = float(ci[i])
         if m["family"] == "multiple-RR":
-            row["RR"] = rr.total[i] / T             # RR only depends on M
-            row["multi_hist"] = multi.level_slots[i][:len(LEVELS)].tolist()
-    rows = [dict(r, hist=r.pop("multi_hist")) for r in per_seed.values()]
-    agg = mc_aggregate(rows, ["M"])
-    for r in agg:
-        r["multi_hist"] = r.pop("hist")
-    return agg
+            row["multi_hist"] = hist_bs[i].mean(axis=0)[:len(LEVELS)].tolist()
+    return list(by_M.values())
 
 
 def check(rows):

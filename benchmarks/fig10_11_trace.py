@@ -2,22 +2,21 @@
 for the Google cluster trace; see DESIGN.md) + AWS-spot-like ARMA rents,
 c=0.135, regimes (0.239, 0.38) and (0.5, 0.7), cost vs M.
 
-Declarative scenario spec: the (regime x M grid) x (n_seeds sample paths)
-sweep runs as ONE fused-generation fleet per policy (bursty + spot streams,
-per-seed shared keys so every grid point of a seed scores the same sample
-path); rows report seed-means with 95% CIs, keyed by (regime, M) like the
-paper's curves.
+Fused MC driver: one instance per (regime x M) grid point, all sharing one
+base sample path (shared bursty + spot keys); the Monte-Carlo axis is
+``n_seeds`` folded into those keys by the engine, so the whole figure is
+one fused ``run_fleet`` (alpha-RR + RR stacked) plus one
+``offline_opt_fleet``.  Rows report seed-means with 95% CIs per (regime, M).
 """
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.core import scenarios as S
 from repro.core.arrivals import GilbertElliot
 from repro.core.costs import HostingCosts
 from repro.core.scenarios.streams import BURSTY_EXIT_P
-from benchmarks.common import scenario_policy_suite, mc_aggregate
+from benchmarks.common import scenario_policy_suite
 
 C_MEAN = 0.135
 BURST = dict(base_rate=0.15, burst_rate=1.2, burst_p=0.08)
@@ -32,29 +31,27 @@ X_MEAN = GilbertElliot(p_hl=BURSTY_EXIT_P, p_lh=BURST["burst_p"],
 
 def run(T=8000, seed=0, n_seeds=4):
     c_lo, c_hi = S.spot_bounds(C_MEAN)
-    costs_list, meta, kxs, kcs = [], [], [], []
-    for s in range(n_seeds):
-        kx, kc = jax.random.split(jax.random.PRNGKey(seed + s))
-        for regime, (alpha, g_alpha) in REGIMES.items():
-            for M in MS:
-                costs_list.append(HostingCosts.three_level(
-                    M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
-                kxs.append(kx)
-                kcs.append(kc)
-                meta.append({"regime": regime, "M": M, "seed": s})
-    kxs, kcs = np.stack(kxs), np.stack(kcs)
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    costs_list, meta = [], []
+    for regime, (alpha, g_alpha) in REGIMES.items():
+        for M in MS:
+            costs_list.append(HostingCosts.three_level(
+                M, alpha, g_alpha, c_min=c_lo, c_max=c_hi))
+            meta.append({"regime": regime, "M": M})
 
     def scenario_fn(grid):
-        return S.combine(S.bursty_arrivals(kxs, grid.B, **BURST),
-                         S.spot_rents(kcs, C_MEAN, grid.B))
+        return S.combine(
+            S.bursty_arrivals(S.shared_keys(kx, grid.B), grid.B, **BURST),
+            S.spot_rents(S.shared_keys(kc, grid.B), C_MEAN, grid.B))
 
     suite = scenario_policy_suite(costs_list, scenario_fn, T,
-                                  x_means=X_MEAN, c_means=C_MEAN)
+                                  n_seeds=n_seeds, x_means=X_MEAN,
+                                  c_means=C_MEAN)
     rows = []
     for m, r in zip(meta, suite):
         r.pop("hist")
         rows.append({**m, **r})
-    return mc_aggregate(rows, ["regime", "M"])
+    return rows
 
 
 def check(rows):

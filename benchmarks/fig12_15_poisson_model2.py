@@ -2,14 +2,16 @@
 cost/slot vs fetch cost M for lambda in {2,4,8} (c=4.5, alpha=.3, g=.5), and
 vs rent c for lambda=4, M=40.
 
-Declarative scenario spec: all (lambda, M) and (c,) grid points x n_seeds
-sample paths run as one fused-generation fleet per policy — arrivals AND
-the coupled Model-2 service uniforms are drawn on device inside the scan.
-Key sharing reproduces the paper's common-sample-path scoring: the M-sweep
-instances of a (lambda, seed) cell share arrival AND service keys (the
-service uniforms do not depend on M), so the same realized requests score
-every M; RR prices the endpoint gather of the same uniforms by binding the
-service stream to the restricted grid's g columns.
+Fused MC driver: one instance per (lambda, M) / (c,) grid point — arrivals
+AND the coupled Model-2 service uniforms are drawn on device inside the
+scan, with the Monte-Carlo axis ``n_seeds`` folded into every stream key
+by the engine.  Key sharing reproduces the paper's common-sample-path
+scoring: the M-sweep instances of a lambda cell share arrival AND service
+keys (the service uniforms do not depend on M), so the same realized
+requests score every M; RR prices the endpoint gather of the same uniforms
+because the fused family driver binds the service stream to the endpoint
+rows' own ``g`` columns.  One ``run_fleet`` serves both families (no DP:
+the figure plots online curves against the analytic LBs).
 """
 from __future__ import annotations
 
@@ -18,11 +20,7 @@ import numpy as np
 
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts
-from repro.core import bounds
-from repro.core.fleet import FleetBatch, run_fleet
-from repro.core.policies import AlphaRR, RetroRenting
-from repro.core.costs import HostingGrid
-from benchmarks.common import mc_aggregate
+from benchmarks.common import scenario_policy_suite
 
 ALPHA, G_ALPHA = 0.30, 0.50
 LAMS = [2.0, 4.0, 8.0]
@@ -43,28 +41,23 @@ def run(T=6000, seed=0, n_seeds=4):
         lams.append(m["lam"])
         meta.append(m)
 
-    for s in range(n_seeds):
-        ks = jax.random.fold_in(key, 7919 * s)
-        for lam in LAMS:
-            kx, kc, ksvc = jax.random.split(jax.random.fold_in(ks, int(lam)), 3)
-            c_lo, c_hi = S.spot_bounds(4.5)
-            for M in M_GRID:
-                costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
-                                                 c_min=c_lo, c_max=c_hi)
-                add(costs, kx, kc, ksvc, fig="12_14", lam=lam, M=M,
-                    c_mean=4.5, seed=s)
-        # Fig 15: vs rent c at lam=4, M=40
-        kx, ksvc = jax.random.split(jax.random.fold_in(ks, 99))
-        for cc in C_GRID:
-            kc2 = jax.random.fold_in(ks, int(cc * 10))
-            c_lo, c_hi = S.spot_bounds(cc)
-            costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
+    for lam in LAMS:
+        kx, kc, ksvc = jax.random.split(jax.random.fold_in(key, int(lam)), 3)
+        c_lo, c_hi = S.spot_bounds(4.5)
+        for M in M_GRID:
+            costs = HostingCosts.three_level(M, ALPHA, G_ALPHA,
                                              c_min=c_lo, c_max=c_hi)
-            add(costs, kx, kc2, ksvc, fig="15", lam=4.0, M=40.0,
-                c_mean=cc, seed=s)
+            add(costs, kx, kc, ksvc, fig="12_14", lam=lam, M=M, c_mean=4.5)
+    # Fig 15: vs rent c at lam=4, M=40
+    kx, ksvc = jax.random.split(jax.random.fold_in(key, 99))
+    for cc in C_GRID:
+        kc2 = jax.random.fold_in(key, int(cc * 10))
+        c_lo, c_hi = S.spot_bounds(cc)
+        costs = HostingCosts.three_level(40.0, ALPHA, G_ALPHA,
+                                         c_min=c_lo, c_max=c_hi)
+        add(costs, kx, kc2, ksvc, fig="15", lam=4.0, M=40.0, c_mean=cc)
 
-    grid = HostingGrid.from_costs(costs_list)
-    B = grid.B
+    B = len(costs_list)
     kxs, kcs, ksvcs = np.stack(kxs), np.stack(kcs), np.stack(ksvcs)
     lams_a = np.asarray(lams, np.float32)
     c_means = np.asarray([m["c_mean"] for m in meta], np.float32)
@@ -74,21 +67,10 @@ def run(T=6000, seed=0, n_seeds=4):
                          S.spot_rents(kcs, c_means, B),
                          svc=S.model2_service(ksvcs, g.g, B, MAX_PER_SLOT))
 
-    fleet = FleetBatch.for_scenario(grid, T)
-    ar = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=scenario_fn(grid))
-    g2 = grid.restrict_to_endpoints()
-    rr = run_fleet(RetroRenting.fleet(fleet), fleet.restrict_to_endpoints(),
-                   scenario=scenario_fn(g2))
-    rows = []
-    for i, m in enumerate(meta):
-        costs = costs_list[i]
-        rows.append({**m,
-                     "alpha-RR": ar.total[i] / T, "RR": rr.total[i] / T,
-                     "alpha-LB": bounds.lemma14_opt_on_per_slot(
-                         costs, m["lam"], m["c_mean"]),
-                     "LB": min(m["c_mean"], m["lam"]),
-                     "hist": ar.level_slots[i][:costs.K].tolist()})
-    return mc_aggregate(rows, ["fig", "lam", "M", "c_mean"])
+    suite = scenario_policy_suite(costs_list, scenario_fn, T,
+                                  n_seeds=n_seeds, x_means=lams_a,
+                                  c_means=c_means, include_opt=False)
+    return [{**m, **r} for m, r in zip(meta, suite)]
 
 
 def check(rows):

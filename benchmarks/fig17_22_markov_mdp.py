@@ -2,13 +2,14 @@
 the statistics-aware MDP and ABC baselines; three transition regimes;
 alpha=0.16, g(alpha)=0.76 (the Fig-23 operating point), M=50 / c sweeps.
 
-Fleet-engine port: the (3 regimes x 8 sweep points x n_seeds) grid runs as
-ONE fused-generation fleet per policy — no per-instance ``run_policy``
-loop.  The GE scenario emits the chain state as side-state, which is
-exactly what the batched MDP/ABC policies observe (``side=states``
-surviving batching); the Model-2 service uniforms are drawn on device,
-key-shared across the sweep points of a (regime, seed) cell like the
-paper's common sample path.  Rows are seed-means with 95% CIs.
+Fused MC driver: one instance per (regime x sweep point) grid point; the
+(regime) cell shares one base sample path (shared keys) and the engine
+folds the ``n_seeds`` Monte-Carlo axis into every stream key.  alpha-RR
+and RR run as ONE fused ``run_fleet`` (family stacking — same step
+function); MDP and ABC keep their own ``run_fleet`` each (different step
+shapes), still seed-fused.  The GE scenario emits the chain state as
+side-state, which is exactly what the batched MDP/ABC policies observe.
+Rows are seed-means with 95% CIs.
 """
 from __future__ import annotations
 
@@ -18,8 +19,9 @@ import numpy as np
 from repro.core import scenarios as S
 from repro.core.arrivals import GilbertElliot
 from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.fleet import FleetBatch, run_fleet
-from repro.core.policies import ABCPolicy, AlphaRR, MDPPolicy, RetroRenting
+from repro.core.fleet import FleetBatch, mc_stats, run_fleet
+from repro.core.policies import ABCPolicy, MDPPolicy
+from benchmarks.common import fused_policy_families
 
 ALPHA, G_ALPHA = 0.16, 0.76
 REGIMES = {
@@ -30,35 +32,31 @@ REGIMES = {
 MAX_PER_SLOT = 260
 C_SWEEP = [5.0, 20.0, 80.0, 160.0, 320.0]
 M_SWEEP = [10.0, 50.0, 150.0]
+CHUNK = 512    # bound the fused [chunk, R, K] service draws
 
 
 def run(T=3000, seed=0, n_seeds=4):
-    from benchmarks.common import mc_aggregate
-    costs_list, ges, c_means, meta = [], [], [], []
-    kxs, kcs, ksvcs = [], [], []
+    costs_list, ges, c_means, meta, kxs, kcs, ksvcs = [], [], [], [], [], [], []
+    # dict.fromkeys dedups the (M=50, c=20) point the two sweeps share — a
+    # duplicate instance would double-count nothing now (seeds live in the
+    # engine) but would still plot twice
+    sweep = list(dict.fromkeys([(50.0, cm) for cm in C_SWEEP]
+                               + [(M, 20.0) for M in M_SWEEP]))
     for ri, (regime, kw) in enumerate(REGIMES.items()):
         ge = GilbertElliot(emission="poisson", **kw)
-        for s in range(n_seeds):
-            kx, kc, ksvc = jax.random.split(
-                jax.random.PRNGKey(seed + 7919 * s + 101 * ri), 3)
-            # dict.fromkeys dedups the (M=50, c=20) point the two sweeps
-            # share — a duplicate instance would double-count its seeds
-            # in mc_aggregate's (regime, M, c) cell
-            sweep = list(dict.fromkeys(
-                [(50.0, cm) for cm in C_SWEEP]
-                + [(M, 20.0) for M in M_SWEEP]))
-            for M, c_mean in sweep:
-                c_lo, c_hi = S.spot_bounds(c_mean)
-                costs_list.append(HostingCosts.three_level(
-                    M, ALPHA, G_ALPHA, c_min=c_lo, c_max=c_hi))
-                ges.append(ge)
-                c_means.append(c_mean)
-                # the whole (regime, seed) cell shares one sample path
-                kxs.append(kx)
-                kcs.append(kc)
-                ksvcs.append(ksvc)
-                meta.append({"regime": regime, "M": M, "c": c_mean,
-                             "seed": s})
+        kx, kc, ksvc = jax.random.split(jax.random.PRNGKey(seed + 101 * ri), 3)
+        for M, c_mean in sweep:
+            c_lo, c_hi = S.spot_bounds(c_mean)
+            costs_list.append(HostingCosts.three_level(
+                M, ALPHA, G_ALPHA, c_min=c_lo, c_max=c_hi))
+            ges.append(ge)
+            c_means.append(c_mean)
+            # the whole regime cell shares one base sample path; the MC
+            # axis comes from the engine's per-replica key fold
+            kxs.append(kx)
+            kcs.append(kc)
+            ksvcs.append(ksvc)
+            meta.append({"regime": regime, "M": M, "c": c_mean})
 
     grid = HostingGrid.from_costs(costs_list)
     B = grid.B
@@ -75,28 +73,32 @@ def run(T=3000, seed=0, n_seeds=4):
             S.spot_rents(kcs, cm_arr, B),
             svc=S.model2_service(ksvcs, g.g, B, MAX_PER_SLOT))
 
+    # alpha-RR + RR: one fused family run; MDP/ABC: own step shapes
+    fam = fused_policy_families(costs_list, scenario_fn, T, n_seeds=n_seeds,
+                                chunk_size=CHUNK, run_opt=False)
     fleet = FleetBatch.for_scenario(grid, T)
     sc = scenario_fn(grid)
-    # chunk the scan: the fused [chunk, R, K] service draws stay bounded
-    kw = dict(scenario=sc, chunk_size=512)
-    res = {
-        "alpha-RR": run_fleet(AlphaRR.fleet(fleet), fleet, **kw),
-        "MDP": run_fleet(MDPPolicy.fleet(fleet, costs_list, ges, c_means),
-                         fleet, **kw),
-        "ABC": run_fleet(ABCPolicy.fleet(fleet, costs_list, ges, c_means),
-                         fleet, **kw),
-        "RR": run_fleet(RetroRenting.fleet(fleet),
-                        fleet.restrict_to_endpoints(),
-                        scenario=scenario_fn(grid.restrict_to_endpoints()),
-                        chunk_size=512),
-    }
+    kw = dict(scenario=sc, chunk_size=CHUNK, n_seeds=n_seeds)
+    mdp = run_fleet(MDPPolicy.fleet(fleet, costs_list, ges, c_means),
+                    fleet, **kw)
+    abc = run_fleet(ABCPolicy.fleet(fleet, costs_list, ges, c_means),
+                    fleet, **kw)
+
+    ar_bs, rr_bs = fam.split(fam.online.total)
+    cols = {"alpha-RR": ar_bs / T, "RR": rr_bs / T,
+            "MDP": mdp.seed_view(mdp.total) / T,
+            "ABC": abc.seed_view(abc.total) / T}
+    stats = {k: mc_stats(v, axis=1) for k, v in cols.items()}
+    hist_bs, _ = fam.split(fam.online.level_slots)
     rows = []
     for i, m in enumerate(meta):
-        rows.append({**m,
-                     **{k: v.total[i] / T for k, v in res.items()},
-                     "hist": res["alpha-RR"].level_slots[i]
-                             [:costs_list[i].K].tolist()})
-    return mc_aggregate(rows, ["regime", "M", "c"])
+        row = {**m, "n_seeds": n_seeds}
+        for k, (mean, ci) in stats.items():
+            row[k] = float(mean[i])
+            row[f"{k}_ci95"] = float(ci[i])
+        row["hist"] = hist_bs[i].mean(axis=0)[:costs_list[i].K].tolist()
+        rows.append(row)
+    return rows
 
 
 def check(rows):

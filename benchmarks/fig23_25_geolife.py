@@ -3,13 +3,15 @@
 knapsack; then cost vs cache fraction (Fig 24) and cost vs M at the best
 alpha (Fig 25).
 
-Batched-engine port: the g-curve stays a host pipeline (Dijkstra /
-knapsack), but the cost sweeps run as fleets on trace-playback scenarios —
-ONE recorded (arrivals, rents) sample path replayed for every grid point
-(``scenarios.trace_arrivals`` / ``trace_rents``), with the Model-2 service
-uniforms drawn on device from a shared key so every alpha / M scores the
-same realized requests (per-instance ``g`` columns bind each grid point's
-knapsack operating point).  No per-instance ``run_policy`` loop remains.
+Fused MC driver: the g-curve stays a host pipeline (Dijkstra / knapsack),
+but the cost sweeps run as seed-fused fleets on trace-playback scenarios —
+ONE recorded (arrivals, rents) sample path replayed for every grid point,
+with the Model-2 service uniforms drawn on device from a shared key.  The
+``n_seeds`` axis folds ONLY into the service-stream key (trace streams are
+keyless and replicate identically), so the CIs quantify Model-2 service
+randomness on a fixed workload; every alpha / M still scores the same
+realized requests within a seed.  Fig 25 is one fused ``run_fleet``
+(alpha-RR + RR stacked) plus one ``offline_opt_fleet``.
 """
 from __future__ import annotations
 
@@ -19,22 +21,25 @@ import numpy as np
 from repro.core import arrivals, rentcosts, geolife
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
-from repro.core.policies import AlphaRR, RetroRenting
+from repro.core.fleet import FleetBatch, mc_stats, run_fleet
+from repro.core.policies import AlphaRR
+from benchmarks.common import scenario_policy_suite
 
 C_MEAN = 0.55   # operating point where the knapsack curve makes partial pay
 
 
-def _sweep_scenario(grid, x, c, ksvc):
+def _sweep_scenario_fn(x, c, ksvc):
     """Trace playback of one shared sample path + fused coupled service
     draws at each instance's own g columns (Bernoulli arrivals: R=1)."""
-    return S.combine(S.trace_arrivals(x, B=grid.B),
-                     S.trace_rents(c, B=grid.B),
-                     svc=S.model2_service(S.shared_keys(ksvc, grid.B),
-                                          grid.g, grid.B, max_per_slot=1))
+    def scenario_fn(grid):
+        return S.combine(S.trace_arrivals(x, B=grid.B),
+                         S.trace_rents(c, B=grid.B),
+                         svc=S.model2_service(S.shared_keys(ksvc, grid.B),
+                                              grid.g, grid.B, max_per_slot=1))
+    return scenario_fn
 
 
-def run(T=4000, seed=0):
+def run(T=4000, seed=0, n_seeds=4):
     alphas, gs, _ = geolife.gcurve_from_city(n_side=12, n_train=1200,
                                              n_test=400, seed=seed)
     rows = [{"fig": "23", "alpha": float(a), "g": float(g),
@@ -44,9 +49,10 @@ def run(T=4000, seed=0):
     x = np.asarray(arrivals.bernoulli(kx, 0.5, T))
     c = np.asarray(rentcosts.aws_spot_like(kc, C_MEAN, T))
     cmin, cmax = float(c.min()), float(c.max())
+    scenario_fn = _sweep_scenario_fn(x, c, ks)
 
-    # Fig 24: total cost vs cache fraction alpha (M = 10) — one fleet over
-    # the whole knapsack curve
+    # Fig 24: total cost vs cache fraction alpha (M = 10) — one seed-fused
+    # fleet over the whole knapsack curve
     points = [(float(a), float(g)) for a, g in zip(alphas, gs)
               if 0.0 < a < 1.0 and 0.0 < g < 1.0]
     costs24 = [HostingCosts.three_level(10.0, a, g, cmin, cmax)
@@ -54,32 +60,23 @@ def run(T=4000, seed=0):
     grid24 = HostingGrid.from_costs(costs24)
     fleet24 = FleetBatch.for_scenario(grid24, T)
     ar24 = run_fleet(AlphaRR.fleet(fleet24), fleet24,
-                     scenario=_sweep_scenario(grid24, x, c, ks))
-    tots = ar24.total / T
-    for (a, g), tot in zip(points, tots):
-        rows.append({"fig": "24", "alpha": a, "alpha-RR": float(tot)})
-    best = int(np.argmin(tots))
+                     scenario=scenario_fn(grid24), n_seeds=n_seeds)
+    mean24, ci24 = mc_stats(ar24.seed_view(ar24.total) / T, axis=1)
+    for (a, g), tot, ci in zip(points, mean24, ci24):
+        rows.append({"fig": "24", "alpha": a, "alpha-RR": float(tot),
+                     "alpha-RR_ci95": float(ci), "n_seeds": n_seeds})
+    best = int(np.argmin(mean24))
     a_star, g_star = points[best]
 
-    # Fig 25: cost vs M at the best alpha — alpha-RR, RR and the
-    # no-partial offline OPT as one fleet each
+    # Fig 25: cost vs M at the best alpha — one fused family run (alpha-RR
+    # + RR) and one DP call for both OPT curves
     Ms = [2.0, 5.0, 10.0, 20.0, 40.0]
     costs25 = [HostingCosts.three_level(M, a_star, g_star, cmin, cmax)
                for M in Ms]
-    grid25 = HostingGrid.from_costs(costs25)
-    fleet25 = FleetBatch.for_scenario(grid25, T)
-    sc25 = _sweep_scenario(grid25, x, c, ks)
-    g2 = grid25.restrict_to_endpoints()
-    sc25_2 = _sweep_scenario(g2, x, c, ks)
-    ar = run_fleet(AlphaRR.fleet(fleet25), fleet25, scenario=sc25)
-    rr = run_fleet(RetroRenting.fleet(fleet25),
-                   fleet25.restrict_to_endpoints(), scenario=sc25_2)
-    opt = offline_opt_fleet(FleetBatch.for_scenario(g2, T), scenario=sc25_2)
-    for i, M in enumerate(Ms):
-        rows.append({"fig": "25", "alpha": a_star, "M": M,
-                     "alpha-RR": ar.total[i] / T, "RR": rr.total[i] / T,
-                     "OPT": opt.cost[i] / T,
-                     "hist": ar.level_slots[i][:costs25[i].K].tolist()})
+    suite = scenario_policy_suite(costs25, scenario_fn, T, n_seeds=n_seeds,
+                                  include_bounds=False)
+    for M, r in zip(Ms, suite):
+        rows.append({"fig": "25", "alpha": a_star, "M": M, **r})
     return rows
 
 

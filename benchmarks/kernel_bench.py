@@ -22,6 +22,12 @@ engine's throughput axes:
   streams slabs.  ``fused_vs_stream`` isolates the sim-only phase (obs
   already materialized): on CPU the "transfer" is a memcpy, so that ratio
   is the floor of the accelerator-side story, not the win.
+* ``mc_driver_throughput`` — the Monte-Carlo seed axis
+  (``run_fleet(..., n_seeds=S)``, one compiled program over [B*S] replicas)
+  vs the per-seed stacking path it replaced (S separate ``run_fleet``
+  dispatches on seed-folded scenarios — the old benchmark-layer loop).
+  Identical bits, so the row first *asserts* the seed-fold law on this
+  workload, then reports slots x instances x seeds per second both ways.
 """
 from __future__ import annotations
 
@@ -263,6 +269,58 @@ def scenario_fused_throughput(B=32, T=65536, chunk=4096, reps=3, seed=0):
     }
 
 
+def mc_driver_throughput(B=64, S=4, T=2048, chunk=None, reps=3, seed=0):
+    """Fused seed axis (one run_fleet over [B*S] replicas) vs the old
+    per-seed stacking path (S sequential run_fleet dispatches, one per
+    seed-folded scenario).  Both paths produce bit-identical totals —
+    asserted here — so the ratio is pure driver overhead + vectorization
+    width."""
+    from repro.core import scenarios as S_
+    from repro.core.costs import HostingGrid
+    from repro.core.fleet import FleetBatch, run_fleet
+    from repro.core.policies import AlphaRR
+
+    grid = HostingGrid.from_costs(_workload_costs(B))
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    sc = S_.combine(S_.bernoulli_arrivals(S_.split_keys(kx, B), 0.35, B),
+                    S_.spot_rents(S_.split_keys(kc, B), 0.35, B))
+    fleet = FleetBatch.for_scenario(grid, T)
+    fns = AlphaRR.fleet(fleet)
+    kw = dict(chunk_size=chunk, collect_trace=False)
+
+    def fused():
+        return run_fleet(fns, fleet, scenario=sc, n_seeds=S, **kw)
+
+    def per_seed():
+        return [run_fleet(fns, fleet, scenario=S_.with_seed(sc, s), **kw)
+                for s in range(S)]
+
+    f = fused()                                    # warm the jit caches
+    rs = per_seed()
+    # the seed-fold law on this exact workload: fused row (b, s) == the
+    # standalone seed-s run's row b, bit for bit
+    fv = f.seed_view(f.total)
+    assert all(np.array_equal(fv[:, s], rs[s].total) for s in range(S))
+
+    t0 = time.time()
+    for _ in range(reps):
+        fused()
+    fused_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        per_seed()
+    stacked_s = (time.time() - t0) / reps
+
+    work = B * S * T
+    return {
+        "name": "mc_driver_throughput",
+        "B": B, "S": S, "T": T,
+        "fused_slots_instances_seeds_per_sec": work / fused_s,
+        "per_seed_slots_instances_seeds_per_sec": work / stacked_s,
+        "fused_vs_per_seed": stacked_s / fused_s,
+    }
+
+
 def run(T=4096):
     # run.py --fast passes a small T, shrinking the in-process throughput
     # rows; the scaling subprocess keeps its fixed wide-B workload (device
@@ -272,6 +330,7 @@ def run(T=4096):
     rows.append(fleet_throughput(T=T))
     # long-T axis: 16x the in-process T, chunked; --fast shrinks with T
     rows.append(scenario_fused_throughput(T=16 * T, chunk=min(4096, 4 * T)))
+    rows.append(mc_driver_throughput(T=T // 2))
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
     k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
@@ -314,6 +373,13 @@ def check(rows):
         if scaling is not None and cores >= 2:
             bar = 1.5 if cores >= r.get("scale_devices", 4) else 1.1
             ok = ok and scaling > bar
+    mc = [r for r in rows if r["name"] == "mc_driver_throughput"]
+    # acceptance: folding the seed axis into one compiled program must not
+    # lose to S sequential per-seed dispatches (it deletes S-1 dispatches
+    # and widens the vmap; measured well above 1x on CPU — 0.95 is the
+    # shared-suite wall-clock noise margin)
+    ok = ok and len(mc) == 1
+    ok = ok and all(r["fused_vs_per_seed"] >= 0.95 for r in mc)
     sf = [r for r in rows if r["name"] == "scenario_fused_throughput"]
     # acceptance: going keys -> totals, fusing generation into the scan is
     # in the same league as materialize-then-stream end-to-end (measured

@@ -23,9 +23,11 @@ across PRs (BENCH_*.json):
 so the schema version stays 1 and existing consumers keep working;
 ``scenario_fused_throughput`` rows likewise add ``fused_vs_stream`` and
 ``materialize_seconds`` (fused on-device generation vs host-materialized
-streaming).
+streaming), and ``mc_driver_throughput`` adds ``fused_vs_per_seed`` and
+``S`` (one fused seed-axis program vs S per-seed dispatches).
 
-Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point);
+Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point),
+folded into the stream keys by the fleet engine (``run_fleet(n_seeds=)``);
 ``--fast`` shrinks both the horizon T and n_seeds for smoke runs.
 """
 from __future__ import annotations
@@ -106,6 +108,13 @@ def main() -> None:
                     "scaling_vs_1dev": r.get("scaling_vs_1dev"),
                     "devices": r.get("scale_devices"),
                     "B": r.get("B"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "fused_vs_per_seed" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("fused_slots_instances_seeds_per_sec"),
+                    "fused_vs_per_seed": r["fused_vs_per_seed"],
+                    "B": r.get("B"), "S": r.get("S"), "T": r.get("T"),
                 }
             if isinstance(r, dict) and "fused_vs_stream" in r:
                 report["throughput"][r.get("name", name)] = {

@@ -3,13 +3,14 @@ edge, alpha-RetroRenting and its analysis) as composable JAX modules."""
 from repro.core.costs import HostingCosts
 from repro.core.simulator import (run_policy, evaluate_schedule, SimResult,
                                   model2_service_matrix)
-from repro.core.fleet import (FleetBatch, FleetResult, run_fleet,
-                              offline_opt_fleet, evaluate_schedule_fleet)
+from repro.core.fleet import (FleetBatch, FleetResult, mc_stats, mc_summary,
+                              run_fleet, offline_opt_fleet,
+                              evaluate_schedule_fleet)
 from repro.core import arrivals, rentcosts, bounds, gcurve
 
 __all__ = [
     "HostingCosts", "run_policy", "evaluate_schedule", "SimResult",
     "model2_service_matrix", "FleetBatch", "FleetResult", "run_fleet",
-    "offline_opt_fleet", "evaluate_schedule_fleet",
+    "offline_opt_fleet", "evaluate_schedule_fleet", "mc_stats", "mc_summary",
     "arrivals", "rentcosts", "bounds", "gcurve",
 ]

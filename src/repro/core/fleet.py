@@ -51,6 +51,19 @@ policy, the offline DP, and schedule evaluation, under every
 mesh x chunking x driver configuration (tests/test_scenarios.py).  Pass
 ``collect_trace=False`` to drop the [B, T] ``r_hist`` output, the one
 remaining O(T) device buffer, for T >= 10^6 fleets.
+
+**Monte-Carlo seed axis** — every scenario-driven entry point accepts
+``n_seeds=S``: the engine replicates the fleet to [B*S] rows
+(instance-major, seed-minor) with seed ``s`` folded into every stream key
+via ``scenarios.combinators.replicate_seeds`` — ``fold_in(key, s)``
+*before* the per-slot ``fold_in(key, t)`` — so replica row ``(b, s)`` is
+bit-identical to running instance ``b`` standalone under
+``with_seed(scenario, s)``.  Replication, padding to the device multiple
+and result unflattening all happen inside (composing with
+shard_map/chunking/streaming); results carry ``n_seeds`` and a
+``seed_view`` reshaping any [B*S]-leading array to [B, S], and
+``mc_summary`` collapses the seed axis into per-instance means and
+Student-t 95% CI half-widths (tests/test_mc_driver.py).
 """
 from __future__ import annotations
 
@@ -68,6 +81,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.policies.base import PolicyFns
 from repro.core.scenarios.base import Scenario, chunk_geometry
+from repro.core.scenarios.combinators import replicate_seeds
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
                                   schedule_chunk_core)
 from repro.sharding.context import shard_ctx
@@ -296,7 +310,13 @@ def _prepare_fleet(fleet: FleetBatch, mesh: Optional[Mesh],
 @dataclasses.dataclass
 class FleetResult:
     """[B]-structured results of one fleet simulation (padded instances and
-    padded time already sliced away)."""
+    padded time already sliced away).
+
+    With a Monte-Carlo axis (``n_seeds=S``) the row axis is the flattened
+    [B_instances * S] replication, instance-major and seed-minor: row
+    ``b * S + s`` is instance ``b`` under seed ``s``.  ``seed_view``
+    reshapes any such array to [B_instances, S, ...].
+    """
 
     total: np.ndarray         # [B]
     fetch: np.ndarray         # [B]
@@ -306,10 +326,21 @@ class FleetResult:
                                   # when run with collect_trace=False
     level_slots: np.ndarray   # [B, K] slots spent at each level
     T: np.ndarray             # [B] per-instance horizons
+    n_seeds: int = 1          # MC replicas per instance (B = B_instances * S)
 
     @property
     def B(self) -> int:
         return self.total.shape[0]
+
+    @property
+    def B_instances(self) -> int:
+        """Distinct instances (the pre-replication B)."""
+        return self.B // self.n_seeds
+
+    def seed_view(self, a) -> np.ndarray:
+        """Reshape a [B*S]-leading result array to [B_instances, S, ...]."""
+        a = np.asarray(a)
+        return a.reshape((self.B_instances, self.n_seeds) + a.shape[1:])
 
     @property
     def per_slot(self) -> np.ndarray:
@@ -329,9 +360,17 @@ class FleetOfflineResult:
     cost: np.ndarray          # [B]
     r_hist: np.ndarray        # [B, T_max]
     sim: FleetResult
+    n_seeds: int = 1
+
+    def seed_view(self, a) -> np.ndarray:
+        """Reshape a [B*S]-leading result array to [B_instances, S, ...]."""
+        a = np.asarray(a)
+        B = self.cost.shape[0] // self.n_seeds
+        return a.reshape((B, self.n_seeds) + a.shape[1:])
 
 
-def _fleet_result(r_hist, sums, counts, B, T_max, T) -> FleetResult:
+def _fleet_result(r_hist, sums, counts, B, T_max, T,
+                  n_seeds: int = 1) -> FleetResult:
     # float64 host accumulation, matching run_policy_batch
     sums = np.asarray(sums)[:B].astype(np.float64)
     return FleetResult(
@@ -339,7 +378,59 @@ def _fleet_result(r_hist, sums, counts, B, T_max, T) -> FleetResult:
         rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
         r_hist=None if r_hist is None else np.asarray(r_hist)[:B, :T_max],
         level_slots=np.asarray(counts)[:B].astype(np.int64),
-        T=np.asarray(T).astype(np.int64))
+        T=np.asarray(T).astype(np.int64), n_seeds=n_seeds)
+
+
+# ----------------------------------------------------------------------
+# Monte-Carlo summary over the seed axis.
+# ----------------------------------------------------------------------
+
+# two-sided 97.5% Student-t quantiles by degrees of freedom (n_seeds - 1);
+# the normal 1.96 badly undercovers at the small n_seeds the sweeps use
+_T975 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+         7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228}
+
+
+def student_t975(df: int) -> float:
+    """Two-sided 97.5% Student-t quantile (95% CI width) for ``df`` degrees
+    of freedom — the ONE table every MC aggregation path shares
+    (``mc_summary`` here, ``benchmarks.common.mc_aggregate``)."""
+    if df in _T975:
+        return _T975[df]
+    return 2.04 if df <= 30 else 1.96
+
+
+def mc_stats(v, axis: int = -1):
+    """(mean, ci95 half-width) over the seed axis of ``v`` (Student-t, same
+    quantiles as ``mc_summary``); ci95 is zeros when that axis has one
+    sample."""
+    v = np.asarray(v, np.float64)
+    S = v.shape[axis]
+    mean = v.mean(axis=axis)
+    if S <= 1:
+        return mean, np.zeros_like(mean)
+    ci = student_t975(S - 1) * v.std(axis=axis, ddof=1) / math.sqrt(S)
+    return mean, ci
+
+
+def mc_summary(result, fields=("total", "rent", "service", "fetch")):
+    """Collapse a seed-replicated result's MC axis into arrays.
+
+    Accepts a ``FleetResult`` (or ``FleetOfflineResult``, whose summarised
+    field is ``cost``) produced with ``n_seeds=S``.  Returns a dict with
+    ``n_seeds`` plus, per field, ``<f>_mean`` and ``<f>_ci95`` arrays of
+    shape [B_instances] — the per-instance seed-mean and the two-sided 95%
+    Student-t CI half-width (zeros at S == 1).
+    """
+    if isinstance(result, FleetOfflineResult):
+        fields = tuple(f if f != "total" else "cost" for f in fields
+                       if f in ("total", "cost"))
+    out = {"n_seeds": result.n_seeds}
+    for f in fields:
+        mean, ci = mc_stats(result.seed_view(getattr(result, f)), axis=1)
+        out[f"{f}_mean"] = mean
+        out[f"{f}_ci95"] = ci
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -559,11 +650,40 @@ def _check_scenario(scenario: Scenario, fleet: FleetBatch):
         raise ValueError(f"scenario B={scenario.B} != fleet B={fleet.B}")
 
 
+def _replicate_mc(fleet: FleetBatch, scenario: Optional[Scenario],
+                  n_seeds: Optional[int]):
+    """Expand a [B] fleet + scenario to the [B*S] Monte-Carlo replication
+    (instance-major, seed-minor; seed folded into every stream key by
+    ``replicate_seeds``).  Returns them unchanged when ``n_seeds`` is None.
+    """
+    if n_seeds is None:
+        return fleet, scenario, 1
+    if scenario is None:
+        raise ValueError(
+            "n_seeds= needs scenario=: materialized observations carry no "
+            "seed axis to fold (stack replica rows yourself instead)")
+    S = int(n_seeds)
+    rep = lambda a: jnp.repeat(jnp.asarray(a), S, axis=0)
+    grid = HostingGrid(M=rep(fleet.grid.M), levels=rep(fleet.grid.levels),
+                       g=rep(fleet.grid.g), mask=rep(fleet.grid.mask))
+    rfleet = FleetBatch(grid=grid, x=None, c=None,
+                        T=np.repeat(np.asarray(fleet.T, np.int32), S))
+    return rfleet, replicate_seeds(scenario, S), S
+
+
+def _replicate_policy(policy: PolicyFns, S: int) -> PolicyFns:
+    if S == 1:
+        return policy
+    return policy._replace(params=jax.tree_util.tree_map(
+        lambda a: jnp.repeat(jnp.asarray(a), S, axis=0), policy.params))
+
+
 def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               scenario: Optional[Scenario] = None,
               mesh: Optional[Mesh] = None, chunk_size: Optional[int] = None,
               include_final_fetch: bool = True,
-              stream: bool = False, collect_trace: bool = True) -> FleetResult:
+              stream: bool = False, collect_trace: bool = True,
+              n_seeds: Optional[int] = None) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -586,13 +706,24 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
       collect_trace: False drops the [B, T_max] ``r_hist`` output (the one
         O(T) device buffer) — totals/histograms are unchanged; use for
         T >= 10^6 horizons.
+      n_seeds: run S Monte-Carlo replicas of every instance in the same
+        compiled program (requires ``scenario=``): the seed is folded into
+        every stream key *before* the per-slot counter fold
+        (``scenarios.replicate_seeds``), so result row ``b * S + s`` is
+        bit-identical to a standalone run of instance ``b`` under
+        ``scenarios.with_seed(scenario, s)``.  The result carries
+        ``n_seeds`` and a [B, S] ``seed_view``; collapse with
+        ``mc_summary``.
 
     Every configuration (any mesh size x any chunking x any driver x fused
     or materialized generation) returns bit-identical results; see
-    tests/test_fleet_engine.py and tests/test_scenarios.py.
+    tests/test_fleet_engine.py, tests/test_scenarios.py and
+    tests/test_mc_driver.py.
     """
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
+    policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     params, lv, g, M = _policy_arrays(policy, padded, padded.B)
@@ -604,7 +735,7 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
             return _run_fleet_scenario_streamed(
                 policy, scenario, padded, params, sparams, lv, g, M, mesh,
                 n_chunks, T_pad, include_final_fetch, collect_trace,
-                B, T_max, fleet.T)
+                B, T_max, fleet.T, S)
         core = _compiled_scenario_core(policy.init_fn, policy.step_fn,
                                        scenario.init_fn, scenario.chunk_fn,
                                        include_final_fetch, n_chunks,
@@ -613,7 +744,7 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
             out = core(params, sparams, lv, g, M, padded.T, tids_all)
         r_hist, sums, counts = out if collect_trace else (None,) + out
-        return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
+        return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T, S)
 
     has_svc, has_side = fleet.svc is not None, fleet.side is not None
     if stream:
@@ -678,7 +809,7 @@ def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
 def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
                                  lv, g, M, mesh, n_chunks, T_pad,
                                  include_final_fetch, collect_trace,
-                                 B, T_max, T_orig):
+                                 B, T_max, T_orig, n_seeds=1):
     """Host-driven streaming with fused generation: per chunk the host
     ships ONE scalar (the chunk offset); obs never exist on the host."""
     chunk = T_pad // n_chunks
@@ -700,7 +831,8 @@ def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
                 carry = out
     (_, (_, acc)) = carry
     r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
-    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig)
+    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig,
+                         n_seeds)
 
 
 # ----------------------------------------------------------------------
@@ -820,13 +952,16 @@ def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh):
 def offline_opt_fleet(fleet: FleetBatch, *,
                       scenario: Optional[Scenario] = None,
                       mesh: Optional[Mesh] = None,
-                      chunk_size: Optional[int] = None) -> FleetOfflineResult:
+                      chunk_size: Optional[int] = None,
+                      n_seeds: Optional[int] = None) -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
     time, each instance solved at its own horizon.  With ``scenario=...``
     the observations are generated on device inside the forward recursion
     (and again inside the schedule evaluation) — bit-identical to the
-    materialized run."""
+    materialized run.  ``n_seeds=S`` solves S seed-replicas of every
+    instance (same key-fold convention as ``run_fleet``)."""
     dt = default_float_dtype()
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     if scenario is not None:
@@ -850,9 +985,12 @@ def offline_opt_fleet(fleet: FleetBatch, *,
         cost, r_hist = core(*args)
     cost = np.asarray(cost)[:B].astype(np.float64)
     r_hist = np.asarray(r_hist)[:B, :T_max].astype(np.int64)
+    # fleet/scenario are already seed-replicated here, so the evaluation
+    # runs plain and only the result is re-tagged with the MC axis
     sim = evaluate_schedule_fleet(fleet, r_hist, scenario=scenario, mesh=mesh,
                                   chunk_size=chunk_size)
-    return FleetOfflineResult(cost=cost, r_hist=r_hist, sim=sim)
+    sim = dataclasses.replace(sim, n_seeds=S)
+    return FleetOfflineResult(cost=cost, r_hist=r_hist, sim=sim, n_seeds=S)
 
 
 # ----------------------------------------------------------------------
@@ -926,14 +1064,22 @@ def _compiled_schedule_scenario_core(sc_init, sc_chunk, n_chunks: int,
 def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
                             scenario: Optional[Scenario] = None,
                             mesh: Optional[Mesh] = None,
-                            chunk_size: Optional[int] = None) -> FleetResult:
+                            chunk_size: Optional[int] = None,
+                            n_seeds: Optional[int] = None) -> FleetResult:
     """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
     instance's T contribute nothing (and charge no fetch).  With
-    ``scenario=...`` the priced observations are generated on device."""
+    ``scenario=...`` the priced observations are generated on device;
+    ``n_seeds=S`` prices the schedules on S seed-replicas of the scenario
+    (``r_hist`` rows may be [B] — repeated per replica — or the full
+    [B*S] replication)."""
     dt = default_float_dtype()
+    B_orig = fleet.B
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     r = np.asarray(r_hist, np.int32)
+    if S > 1 and r.shape[0] == B_orig:
+        r = np.repeat(r, S, axis=0)
     if T_pad > T_max:
         r = np.pad(r, ((0, 0), (0, T_pad - T_max)))
     r = _pad_rows(r, padded.B, np)
@@ -955,6 +1101,8 @@ def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
             args += (padded.svc,)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         sums, counts = core(*args)
-    res = _fleet_result(np.asarray(r_hist, np.int64), sums, counts,
-                        B, T_max, fleet.T)
+    # r (replicated + padded above) rather than the raw r_hist input, so the
+    # returned trace matches the [B*S] row layout of the totals
+    res = _fleet_result(r.astype(np.int64), sums, counts,
+                        B, T_max, fleet.T, S)
     return res

@@ -18,7 +18,8 @@ from repro.core.scenarios.base import (ObsSlab, Scenario, Stream, as_keys,
                                        split_keys)
 from repro.core.scenarios.combinators import (antithetic_pairing, combine,
                                               mixture, mixture_from_weights,
-                                              regime_switch, trace_scenario)
+                                              regime_switch, replicate_seeds,
+                                              trace_scenario, with_seed)
 from repro.core.scenarios.streams import (adversarial_evict_bait,
                                           adversarial_fetch_bait, arma_rents,
                                           bernoulli_arrivals, bursty_arrivals,
@@ -33,7 +34,7 @@ __all__ = [
     "materialize_stream", "shared_keys", "slot_keys", "slot_uniform",
     "split_keys",
     "antithetic_pairing", "combine", "mixture", "mixture_from_weights",
-    "regime_switch", "trace_scenario",
+    "regime_switch", "replicate_seeds", "trace_scenario", "with_seed",
     "adversarial_evict_bait", "adversarial_fetch_bait", "arma_rents",
     "bernoulli_arrivals", "bursty_arrivals", "constant_rents", "ge_arrivals",
     "model2_service", "na_rents", "poisson_arrivals", "spot_bounds",

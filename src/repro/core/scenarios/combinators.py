@@ -9,6 +9,10 @@ observation arrays.
 * ``antithetic_pairing``  — negatively-associated instance pairs: (2m, 2m+1)
                             share a key, the odd member flips its uniforms.
 * ``trace_scenario``      — deterministic playback of recorded [B, T] obs.
+* ``with_seed``           — fold one Monte-Carlo seed into every stream key
+                            (before the per-slot counter fold).
+* ``replicate_seeds``     — the MC axis: S seed-replicas of a B-instance
+                            scenario as one [B*S] scenario.
 
 Composition happens at the *stream* level, so combinator outputs are
 ordinary streams: mixtures of regime-switched antithetic pairs are
@@ -203,6 +207,66 @@ def antithetic_pairing(stream: Stream) -> Stream:
     params["flip"] = jnp.asarray(np.arange(B) % 2 == 1)
     return Stream(f"antithetic({stream.name})", stream.kind, stream.init_fn,
                   stream.chunk_fn, params, has_side=stream.has_side)
+
+
+# ----------------------------------------------------------------------
+# Monte-Carlo seed replication (the fleet engine's ``n_seeds=`` axis).
+# ----------------------------------------------------------------------
+
+def _map_key_leaves(params, leaf_fn, key_fn):
+    """Structurally walk a params pytree, applying ``key_fn`` to every
+    ``"key"`` dict entry (the stream-constructor convention: counter-based
+    PRNG keys live under that name on every random stream) and ``leaf_fn``
+    to every other array leaf.  Dict-name-aware on purpose — ``tree_map``
+    cannot tell a key leaf from a coefficient leaf."""
+    if isinstance(params, dict):
+        return {k: (key_fn(v) if k == "key"
+                    else _map_key_leaves(v, leaf_fn, key_fn))
+                for k, v in params.items()}
+    if isinstance(params, (tuple, list)):
+        return type(params)(_map_key_leaves(v, leaf_fn, key_fn)
+                            for v in params)
+    return leaf_fn(params)
+
+
+def with_seed(obj, seed: int):
+    """Fold one Monte-Carlo seed into every stream key of a ``Scenario`` or
+    ``Stream``: ``key -> fold_in(key, seed)``.
+
+    The fold happens *before* any per-slot ``fold_in(key, t)`` (and before
+    the init-salt draws), so the result is an ordinary, legal standalone
+    scenario — exactly the replica ``replicate_seeds`` packs at rows
+    ``(b, seed)``.  Keyless streams (traces, constants, adversarial baits)
+    are untouched: deterministic channels do not vary with the seed.
+    """
+    fold = jax.vmap(lambda k: jax.random.fold_in(k, seed))
+    params = _map_key_leaves(obj.params, lambda a: a,
+                             lambda k: fold(jnp.asarray(k)))
+    return obj._replace(params=params, name=f"seed{seed}({obj.name})")
+
+
+def replicate_seeds(obj, n_seeds: int):
+    """S seed-replicas of a B-instance ``Scenario`` (or ``Stream``) as one
+    [B*S] scenario — the Monte-Carlo axis folded into the stream keys.
+
+    Row ``b * S + s`` (instance-major, seed-minor) carries instance ``b``'s
+    params with ``fold_in(key, s)`` applied to every stream key, so it is
+    **bit-identical** to running instance ``b`` standalone under
+    ``with_seed(obj, s)``: no obs materialization, no benchmark-side key
+    plumbing, and every downstream engine guarantee (chunk invariance,
+    mesh transparency) holds per replica because a replica *is* a legal
+    standalone instance.  Non-key param leaves are replicated row-wise.
+    """
+    S = int(n_seeds)
+    if S < 1:
+        raise ValueError(f"n_seeds must be >= 1, got {n_seeds}")
+    B = jax.tree_util.tree_leaves(obj.params)[0].shape[0]
+    seeds = jnp.tile(jnp.arange(S, dtype=jnp.int32), B)       # [B*S]
+    rep = lambda a: jnp.repeat(jnp.asarray(a), S, axis=0)
+    fold = jax.vmap(jax.random.fold_in)
+    params = _map_key_leaves(obj.params, rep,
+                             lambda k: fold(rep(k), seeds))
+    return obj._replace(params=params, name=f"mc{S}({obj.name})")
 
 
 def _trace_svc_chunk(params, state, tids, x):

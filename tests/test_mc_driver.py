@@ -1,0 +1,306 @@
+"""Monte-Carlo driver correctness: the seed axis as a first-class fleet
+dimension (``run_fleet(..., n_seeds=S)`` et al.), per the PR-4 acceptance
+bar:
+
+* **Seed-fold law** — ``n_seeds=S`` is bit-identical to S independently
+  seed-keyed stacked runs (``scenarios.with_seed``) for every policy
+  family, the offline DP and schedule evaluation, under chunked / streamed
+  drivers, mixed horizons, and a forced-4-CPU-device mesh (subprocess);
+* **Replica legality** — ``replicate_seeds`` packs at row ``(b, s)``
+  exactly the params ``with_seed`` builds for a standalone run (the seed
+  fold happens before the per-slot counter fold, so every replica is a
+  legal standalone scenario);
+* **Summary consistency** — ``mc_summary`` means/CI bounds equal classic
+  dict-row ``mc_aggregate`` on the same per-seed rows (hypothesis property
+  test; both sides share ``student_t975``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+# the summary-consistency test crosses into the benchmark layer
+# (benchmarks/ is a repo-root namespace package, like `python -m
+# benchmarks.run` uses it)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scenarios as S
+from repro.core.arrivals import GilbertElliot
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (FleetBatch, FleetResult,
+                              evaluate_schedule_fleet, mc_summary,
+                              offline_opt_fleet, run_fleet)
+from repro.core.policies import (ABCPolicy, AlphaRR, MDPPolicy, RetroRenting,
+                                 StaticPolicy)
+
+T = 40
+KEY = jax.random.PRNGKey(7)
+CHUNKS = [16, 20]      # 20 does not divide 40+pad: exercises the padded tail
+NSEEDS = 3
+
+
+def mixed_costs():
+    return [HostingCosts.two_level(4.0),
+            HostingCosts.three_level(6.0, 0.25, 0.5),
+            HostingCosts.three_level(3.0, 0.5, 0.25),
+            HostingCosts(M=5.0, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                         g=(1.0, 0.4, 0.3, 0.15, 0.0)),
+            HostingCosts.three_level(8.0, 0.375, 0.375)]
+
+
+@pytest.fixture(scope="module")
+def stacked():
+    costs_list = mixed_costs()
+    grid = HostingGrid.from_costs(costs_list)
+    B = grid.B
+    ges = [GilbertElliot(p_hl=0.3, p_lh=0.2 + 0.1 * (i % 3),
+                         rate_h=2.0 + i % 2, rate_l=0.2) for i in range(B)]
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(KEY, B), np.array([g.p_hl for g in ges]),
+                      np.array([g.p_lh for g in ges]),
+                      np.array([g.rate_h for g in ges]),
+                      np.array([g.rate_l for g in ges]), B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B))
+    c_means = [0.5] * B
+    fleet = FleetBatch.for_scenario(grid, T)
+    return costs_list, grid, ges, c_means, sc, fleet
+
+
+def policy_cases(fleet, costs_list, ges, c_means):
+    return [
+        ("alpha-RR", AlphaRR.fleet(fleet), False),
+        ("RR", RetroRenting.fleet(fleet), True),
+        ("static", StaticPolicy.fleet(fleet, fleet.grid.top_index()), False),
+        ("MDP", MDPPolicy.fleet(fleet, costs_list, ges, c_means), False),
+        ("ABC", ABCPolicy.fleet(fleet, costs_list, ges, c_means), False),
+    ]
+
+
+def interleave(arrays):
+    """[S] list of [B, ...] arrays -> the fused row layout [B*S, ...]
+    (instance-major, seed-minor)."""
+    a = np.stack([np.asarray(x) for x in arrays], axis=1)
+    return a.reshape((-1,) + a.shape[2:])
+
+
+# ----------------------------------------------------------------------
+# (a) replica legality: replicate_seeds rows ARE with_seed's params.
+# ----------------------------------------------------------------------
+
+def test_replicate_seeds_rows_are_standalone_replicas(stacked):
+    *_, sc, fleet = stacked
+    rep = S.replicate_seeds(sc, NSEEDS)
+    assert (rep.init_fn, rep.chunk_fn) == (sc.init_fn, sc.chunk_fn)
+    assert rep.B == sc.B * NSEEDS
+    rep_leaves = jax.tree_util.tree_leaves(rep.params)
+    for s in range(NSEEDS):
+        ws = S.with_seed(sc, s)
+        for rl, wl in zip(rep_leaves, jax.tree_util.tree_leaves(ws.params)):
+            assert np.array_equal(np.asarray(rl)[s::NSEEDS], np.asarray(wl))
+
+
+def test_keyless_streams_replicate_identically():
+    tr = S.trace_arrivals(np.arange(2 * T, dtype=np.int32).reshape(2, T))
+    rep = S.replicate_seeds(tr, NSEEDS)
+    x, _ = S.materialize_stream(rep, T)
+    x = np.asarray(x).reshape(2, NSEEDS, T)
+    for s in range(1, NSEEDS):
+        assert np.array_equal(x[:, s], x[:, 0])
+
+
+# ----------------------------------------------------------------------
+# (b) the seed-fold law, every policy x driver config.
+# ----------------------------------------------------------------------
+
+def test_seed_fold_law_every_policy(stacked):
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    for name, fns, endpoints in policy_cases(fleet, costs_list, ges, c_means):
+        fl = fleet.restrict_to_endpoints() if endpoints else fleet
+        refs = [run_fleet(fns, fl, scenario=S.with_seed(sc, s))
+                for s in range(NSEEDS)]
+        for kw in ({}, {"chunk_size": CHUNKS[0]},
+                   {"chunk_size": CHUNKS[1], "stream": True}):
+            fused = run_fleet(fns, fl, scenario=sc, n_seeds=NSEEDS, **kw)
+            assert fused.n_seeds == NSEEDS and fused.B == fl.B * NSEEDS
+            for f in ("total", "rent", "service", "fetch", "r_hist",
+                      "level_slots", "T"):
+                want = interleave([getattr(r, f) for r in refs])
+                assert np.array_equal(getattr(fused, f), want), (name, kw, f)
+
+
+def test_seed_fold_law_offline_dp(stacked):
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    refs = [offline_opt_fleet(fleet, scenario=S.with_seed(sc, s))
+            for s in range(NSEEDS)]
+    for kw in ({}, {"chunk_size": CHUNKS[1]}):
+        fo = offline_opt_fleet(fleet, scenario=sc, n_seeds=NSEEDS, **kw)
+        assert fo.n_seeds == NSEEDS
+        assert np.array_equal(fo.cost, interleave([r.cost for r in refs]))
+        assert np.array_equal(fo.r_hist,
+                              interleave([r.r_hist for r in refs]))
+        assert np.array_equal(fo.sim.total,
+                              interleave([r.sim.total for r in refs]))
+
+
+def test_seed_fold_law_schedule_eval(stacked):
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    rng = np.random.default_rng(3)
+    r = np.stack([rng.integers(0, cc.K, T) for cc in costs_list])
+    refs = [evaluate_schedule_fleet(fleet, r, scenario=S.with_seed(sc, s))
+            for s in range(NSEEDS)]
+    for kw in ({}, {"chunk_size": CHUNKS[0]}):
+        ev = evaluate_schedule_fleet(fleet, r, scenario=sc, n_seeds=NSEEDS,
+                                     **kw)
+        assert np.array_equal(ev.total, interleave([x.total for x in refs]))
+        assert np.array_equal(ev.r_hist, np.repeat(r, NSEEDS, axis=0))
+        # already-replicated [B*S] schedules are accepted as-is
+        ev2 = evaluate_schedule_fleet(fleet, np.repeat(r, NSEEDS, axis=0),
+                                      scenario=sc, n_seeds=NSEEDS, **kw)
+        assert np.array_equal(ev2.total, ev.total)
+
+
+def test_seed_fold_law_mixed_horizons(stacked):
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    Ts = [40, 23, 11, 40, 7]
+    fl = FleetBatch.for_scenario(grid, Ts)
+    fns = AlphaRR.fleet(fl)
+    refs = [run_fleet(fns, fl, scenario=S.with_seed(sc, s))
+            for s in range(NSEEDS)]
+    for kw in ({}, {"chunk_size": CHUNKS[1]},
+               {"chunk_size": CHUNKS[1], "stream": True}):
+        fused = run_fleet(fns, fl, scenario=sc, n_seeds=NSEEDS, **kw)
+        assert np.array_equal(fused.T, interleave([r.T for r in refs]))
+        for f in ("total", "r_hist", "level_slots"):
+            want = interleave([getattr(r, f) for r in refs])
+            assert np.array_equal(getattr(fused, f), want), (kw, f)
+    bo = offline_opt_fleet(fl, scenario=sc, n_seeds=NSEEDS,
+                           chunk_size=CHUNKS[0])
+    per = [offline_opt_fleet(fl, scenario=S.with_seed(sc, s))
+           for s in range(NSEEDS)]
+    assert np.array_equal(bo.cost, interleave([r.cost for r in per]))
+
+
+def test_n_seeds_requires_scenario(stacked):
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    fleet_m = FleetBatch.from_scenario(grid, sc, T)
+    with pytest.raises(ValueError, match="n_seeds"):
+        run_fleet(AlphaRR.fleet(fleet_m), fleet_m, n_seeds=2)
+    with pytest.raises(ValueError, match="n_seeds"):
+        offline_opt_fleet(fleet_m, n_seeds=2)
+
+
+def test_seed_view_layout(stacked):
+    *_, sc, fleet = stacked
+    fused = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
+                      n_seeds=NSEEDS)
+    assert fused.B_instances == fleet.B
+    v = fused.seed_view(fused.total)
+    assert v.shape == (fleet.B, NSEEDS)
+    assert np.array_equal(v.reshape(-1), fused.total)
+    vh = fused.seed_view(fused.r_hist)
+    assert vh.shape == (fleet.B, NSEEDS, T)
+
+
+# ----------------------------------------------------------------------
+# (c) mc_summary == mc_aggregate on the same rows (property test).
+# ----------------------------------------------------------------------
+
+@st.composite
+def seed_tables(draw):
+    B = draw(st.integers(1, 5))
+    Sn = draw(st.integers(1, 6))
+    cells = draw(st.lists(st.integers(-4000, 4000).map(lambda k: k / 8.0),
+                          min_size=B * Sn, max_size=B * Sn))
+    return B, Sn, np.asarray(cells, np.float64).reshape(B, Sn)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed_tables())
+def test_mc_summary_matches_mc_aggregate(table):
+    from benchmarks.common import mc_aggregate
+    B, Sn, totals = table
+    flat = totals.reshape(-1)
+    res = FleetResult(total=flat, fetch=np.zeros_like(flat),
+                      rent=np.zeros_like(flat), service=np.zeros_like(flat),
+                      r_hist=None, level_slots=np.zeros((B * Sn, 2), np.int64),
+                      T=np.full((B * Sn,), T, np.int64), n_seeds=Sn)
+    summ = mc_summary(res)
+    rows = [{"instance": b, "seed": s, "total": float(totals[b, s])}
+            for b in range(B) for s in range(Sn)]
+    agg = mc_aggregate(rows, ["instance"], drop=("seed",))
+    assert len(agg) == B
+    for b, r in enumerate(agg):
+        assert r["total"] == pytest.approx(summ["total_mean"][b],
+                                           rel=1e-12, abs=1e-12)
+        ci = r.get("total_ci95", 0.0)
+        assert ci == pytest.approx(summ["total_ci95"][b],
+                                   rel=1e-12, abs=1e-12)
+    # the FleetResult branch of mc_aggregate reports the same numbers
+    direct = mc_aggregate(res)
+    for b, r in enumerate(direct):
+        assert r["total"] == pytest.approx(summ["total_mean"][b],
+                                           rel=1e-12, abs=1e-12)
+        assert r.get("total_ci95", 0.0) == pytest.approx(
+            summ["total_ci95"][b], rel=1e-12, abs=1e-12)
+
+
+# ----------------------------------------------------------------------
+# (d) forced multi-device mesh (subprocess: this process is pinned to one
+# device by conftest).  B * S = 9 is not a multiple of 4, exercising the
+# dummy-instance padding of replicated scenario params.
+# ----------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import scenarios as S
+    from repro.core.costs import HostingCosts, HostingGrid
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR
+    from repro.sharding.specs import fleet_mesh
+
+    costs_list = [HostingCosts.three_level(4.0 + i, 0.3, 0.4) for i in range(2)]
+    costs_list.append(HostingCosts.two_level(4.0))
+    grid = HostingGrid.from_costs(costs_list)
+    B, T, NS = grid.B, 40, 3
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(jax.random.PRNGKey(0), B), 0.3, 0.2,
+                      2.0, 0.2, B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B))
+    fleet = FleetBatch.for_scenario(grid, T)
+    fns = AlphaRR.fleet(fleet)
+    one = fleet_mesh(jax.devices()[:1])
+    refs = [run_fleet(fns, fleet, scenario=S.with_seed(sc, s), mesh=one)
+            for s in range(NS)]
+    want = np.stack([r.total for r in refs], axis=1).reshape(-1)
+    want_hist = np.stack([r.r_hist for r in refs], axis=1).reshape(-1, T)
+    for mesh in (one, fleet_mesh()):
+        for kw in ({}, {"chunk_size": 20}, {"chunk_size": 20, "stream": True}):
+            fr = run_fleet(fns, fleet, scenario=sc, mesh=mesh, n_seeds=NS, **kw)
+            assert np.array_equal(fr.total, want), (mesh, kw)
+            assert np.array_equal(fr.r_hist, want_hist), (mesh, kw)
+    dp = [offline_opt_fleet(fleet, scenario=S.with_seed(sc, s), mesh=one)
+          for s in range(NS)]
+    fo = offline_opt_fleet(fleet, scenario=sc, mesh=fleet_mesh(),
+                           n_seeds=NS, chunk_size=20)
+    assert np.array_equal(fo.cost,
+                          np.stack([d.cost for d in dp], axis=1).reshape(-1))
+    print("MULTI-DEVICE-MC-OK")
+""")
+
+
+def test_mc_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MULTI-DEVICE-MC-OK" in out.stdout
