@@ -140,7 +140,8 @@ def fused_policy_families(costs_list: Sequence[HostingCosts],
                           scenario_fn: Callable, T, *,
                           n_seeds: Optional[int] = None,
                           chunk_size: Optional[int] = None,
-                          run_opt: bool = True) -> FamilyResults:
+                          run_opt: bool = True,
+                          dp_checkpointed: bool = False) -> FamilyResults:
     """Run a figure's {alpha-RR, RR[, alpha-OPT, OPT]} curves as ONE fused
     ``run_fleet`` (+ one ``offline_opt_fleet``).
 
@@ -154,6 +155,9 @@ def fused_policy_families(costs_list: Sequence[HostingCosts],
     family's own ``g`` columns (RR prices the exact endpoint gather of the
     same coupled uniforms); both calls must therefore build the same
     stream family.  ``n_seeds`` rides through to the engine's MC axis.
+    ``dp_checkpointed=True`` prices the OPT curves with the checkpointed
+    two-pass DP (bit-identical; O(B * chunk) DP memory) — the right default
+    for long-horizon figures.
     """
     B = len(costs_list)
     endpoints = [HostingCosts.two_level(cc.M, cc.c_min, cc.c_max)
@@ -177,7 +181,8 @@ def fused_policy_families(costs_list: Sequence[HostingCosts],
     t0 = time.time()
     online = run_fleet(fns, fleet, **kw)
     us = (time.time() - t0) / (float(np.sum(Ts)) * online.n_seeds) * 1e6
-    offline = offline_opt_fleet(fleet, **kw) if run_opt else None
+    offline = (offline_opt_fleet(fleet, checkpointed=dp_checkpointed, **kw)
+               if run_opt else None)
     return FamilyResults(online, offline, B, us)
 
 
@@ -187,7 +192,8 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
                           x_means=None, c_means=None,
                           include_bounds: bool = True,
                           include_opt: bool = True,
-                          chunk_size: Optional[int] = None):
+                          chunk_size: Optional[int] = None,
+                          dp_checkpointed: bool = False):
     """The classic six-curve suite, one fused run per figure.
 
     Args:
@@ -206,6 +212,9 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
       include_opt: False skips the offline DP (figures that only plot
         online curves), dropping the 'alpha-OPT'/'OPT' columns.
       chunk_size: forwarded to the engine (None = single chunk).
+      dp_checkpointed: price OPT with the checkpointed two-pass DP
+        (bit-identical to the materialized table; no [B, T, K] buffer) —
+        set it on long-horizon figures.
 
     Returns one row dict per *grid point* (seed axis already collapsed),
     with the same keys as ``batch_policy_suite`` plus the CI columns.
@@ -213,7 +222,8 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
     B = len(costs_list)
     fam = fused_policy_families(costs_list, scenario_fn, T,
                                 n_seeds=n_seeds, chunk_size=chunk_size,
-                                run_opt=include_opt)
+                                run_opt=include_opt,
+                                dp_checkpointed=dp_checkpointed)
     Ts = np.broadcast_to(np.asarray(T, np.float64), (B,))
 
     cols = OrderedDict()

@@ -74,7 +74,9 @@ def run(T=4000, seed=0, n_seeds=4):
     costs25 = [HostingCosts.three_level(M, a_star, g_star, cmin, cmax)
                for M in Ms]
     suite = scenario_policy_suite(costs25, scenario_fn, T, n_seeds=n_seeds,
-                                  include_bounds=False)
+                                  include_bounds=False,
+                                  chunk_size=min(1000, T),
+                                  dp_checkpointed=True)
     for M, r in zip(Ms, suite):
         rows.append({"fig": "25", "alpha": a_star, "M": M, **r})
     return rows

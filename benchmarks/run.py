@@ -23,8 +23,16 @@ across PRs (BENCH_*.json):
 so the schema version stays 1 and existing consumers keep working;
 ``scenario_fused_throughput`` rows likewise add ``fused_vs_stream`` and
 ``materialize_seconds`` (fused on-device generation vs host-materialized
-streaming), and ``mc_driver_throughput`` adds ``fused_vs_per_seed`` and
-``S`` (one fused seed-axis program vs S per-seed dispatches).
+streaming), ``mc_driver_throughput`` adds ``fused_vs_per_seed``,
+``antithetic_ci_ratio`` and ``S`` (one fused seed-axis program vs S
+per-seed dispatches), and ``offline_dp_streaming`` adds
+``ckpt_vs_materialized`` and ``peak_mem_ratio`` (checkpointed two-pass DP
+backtracking vs the materialized [B, T, K] table).
+
+``benchmarks/check_regression.py`` compares a report's ``throughput``
+section against the committed ``BENCH_baseline.json`` (the perf-regression
+CI gate); regenerate the baseline with this command whenever a PR
+intentionally shifts a gated number.
 
 Sweep modules accept ``n_seeds`` (Monte-Carlo sample paths per grid point),
 folded into the stream keys by the fleet engine (``run_fleet(n_seeds=)``);
@@ -114,7 +122,16 @@ def main() -> None:
                     "slots_instances_per_sec":
                         r.get("fused_slots_instances_seeds_per_sec"),
                     "fused_vs_per_seed": r["fused_vs_per_seed"],
+                    "antithetic_ci_ratio": r.get("antithetic_ci_ratio"),
                     "B": r.get("B"), "S": r.get("S"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "ckpt_vs_materialized" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("ckpt_slots_instances_per_sec"),
+                    "ckpt_vs_materialized": r["ckpt_vs_materialized"],
+                    "peak_mem_ratio": r.get("peak_mem_ratio"),
+                    "B": r.get("B"), "T": r.get("T"),
                 }
             if isinstance(r, dict) and "fused_vs_stream" in r:
                 report["throughput"][r.get("name", name)] = {

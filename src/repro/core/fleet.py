@@ -33,7 +33,25 @@ drivers share the same chunk kernel:
 
 ``offline_opt_fleet`` applies the same three mechanisms to the offline DP
 (forward recursion chunked and frozen past T_i with identity backpointers;
-padded K levels priced ``+inf`` as in ``offline_opt_batch``).
+padded K levels priced ``+inf`` as in ``offline_opt_batch``), and adds a
+fourth of its own:
+
+**Checkpointed backtracking** — ``checkpointed=True`` replaces the
+materialized [B, T, K] backpointer table with a two-pass recursion: the
+forward value pass stores one [B, K] frontier checkpoint per chunk (plus
+the generator state for scenario-fused runs), and the backtrack pass
+replays the chunks in reverse, recomputing each chunk's argmin table on
+the fly from its checkpoint — the same counter-keyed regeneration the
+fused simulator relies on.  Bit-identical to the materialized path
+wherever both fit (the recomputed tables come from the identical
+``offline_opt.dp_fwd_chunk`` at the identical frontier), with device
+memory O(B * chunk * K): exact OPT now reaches the same T = 10^6-10^7
+horizons as ``run_fleet(collect_trace=False)``.  ``stream=True`` drives
+both passes from the host one slab at a time; ``collect_schedule=False``
+skips the backtrack for cost-only pricing with no O(T) output at all;
+``offline_dp_memory_stats`` exposes the XLA-reported memory of the
+compiled core for either path (the regression-gated
+``kernel_bench.offline_dp_streaming`` row asserts the ratio).
 
 **Scenario fusion** — every entry point alternatively accepts
 ``scenario=...`` (a ``core.scenarios.Scenario``) in place of materialized
@@ -63,7 +81,9 @@ and result unflattening all happen inside (composing with
 shard_map/chunking/streaming); results carry ``n_seeds`` and a
 ``seed_view`` reshaping any [B*S]-leading array to [B, S], and
 ``mc_summary`` collapses the seed axis into per-instance means and
-Student-t 95% CI half-widths (tests/test_mc_driver.py).
+Student-t 95% CI half-widths (tests/test_mc_driver.py).  ``antithetic=True``
+pairs the replicas (2m, 2m+1) on flip-capable streams — shared pair fold,
+odd member flips every uniform — cutting CI width at the same S.
 """
 from __future__ import annotations
 
@@ -80,6 +100,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.policies.base import PolicyFns
+from repro.core.policies.offline_opt import (dp_backtrack, dp_backtrack_chunk,
+                                             dp_fetch_matrix, dp_frontier0,
+                                             dp_fwd_chunk)
 from repro.core.scenarios.base import Scenario, chunk_geometry
 from repro.core.scenarios.combinators import replicate_seeds
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
@@ -357,9 +380,10 @@ class FleetResult:
 
 @dataclasses.dataclass
 class FleetOfflineResult:
-    cost: np.ndarray          # [B]
-    r_hist: np.ndarray        # [B, T_max]
-    sim: FleetResult
+    cost: np.ndarray                    # [B]
+    r_hist: Optional[np.ndarray]        # [B, T_max]; None when the DP ran
+                                        # with collect_schedule=False
+    sim: Optional[FleetResult]          # None with collect_schedule=False
     n_seeds: int = 1
 
     def seed_view(self, a) -> np.ndarray:
@@ -413,7 +437,8 @@ def mc_stats(v, axis: int = -1):
     return mean, ci
 
 
-def mc_summary(result, fields=("total", "rent", "service", "fetch")):
+def mc_summary(result, fields=("total", "rent", "service", "fetch"),
+               antithetic: bool = False):
     """Collapse a seed-replicated result's MC axis into arrays.
 
     Accepts a ``FleetResult`` (or ``FleetOfflineResult``, whose summarised
@@ -421,13 +446,26 @@ def mc_summary(result, fields=("total", "rent", "service", "fetch")):
     ``n_seeds`` plus, per field, ``<f>_mean`` and ``<f>_ci95`` arrays of
     shape [B_instances] — the per-instance seed-mean and the two-sided 95%
     Student-t CI half-width (zeros at S == 1).
+
+    ``antithetic=True`` (for results of ``run_fleet(...,
+    antithetic=True)``) averages each replica pair (2m, 2m+1) into one
+    pair-mean before the CI — the pairs are negatively correlated by
+    construction, so the naive S-sample formula badly overstates the
+    estimator's width; the S/2 pair-means are independent and give the
+    valid (and much tighter) interval.  The reported mean is unchanged.
     """
     if isinstance(result, FleetOfflineResult):
         fields = tuple(f if f != "total" else "cost" for f in fields
                        if f in ("total", "cost"))
+    if antithetic and result.n_seeds % 2:
+        raise ValueError("antithetic summary needs an even n_seeds")
     out = {"n_seeds": result.n_seeds}
     for f in fields:
-        mean, ci = mc_stats(result.seed_view(getattr(result, f)), axis=1)
+        v = result.seed_view(getattr(result, f))
+        if antithetic:
+            v = np.asarray(v, np.float64)
+            v = (v[:, 0::2] + v[:, 1::2]) / 2.0
+        mean, ci = mc_stats(v, axis=1)
         out[f"{f}_mean"] = mean
         out[f"{f}_ci95"] = ci
     return out
@@ -651,12 +689,15 @@ def _check_scenario(scenario: Scenario, fleet: FleetBatch):
 
 
 def _replicate_mc(fleet: FleetBatch, scenario: Optional[Scenario],
-                  n_seeds: Optional[int]):
+                  n_seeds: Optional[int], antithetic: bool = False):
     """Expand a [B] fleet + scenario to the [B*S] Monte-Carlo replication
     (instance-major, seed-minor; seed folded into every stream key by
-    ``replicate_seeds``).  Returns them unchanged when ``n_seeds`` is None.
+    ``replicate_seeds`` — ``antithetic=True`` pairs replicas (2m, 2m+1) on
+    flip-capable streams).  Returns them unchanged when ``n_seeds`` is None.
     """
     if n_seeds is None:
+        if antithetic:
+            raise ValueError("antithetic=True needs n_seeds=")
         return fleet, scenario, 1
     if scenario is None:
         raise ValueError(
@@ -668,7 +709,7 @@ def _replicate_mc(fleet: FleetBatch, scenario: Optional[Scenario],
                        g=rep(fleet.grid.g), mask=rep(fleet.grid.mask))
     rfleet = FleetBatch(grid=grid, x=None, c=None,
                         T=np.repeat(np.asarray(fleet.T, np.int32), S))
-    return rfleet, replicate_seeds(scenario, S), S
+    return rfleet, replicate_seeds(scenario, S, antithetic=antithetic), S
 
 
 def _replicate_policy(policy: PolicyFns, S: int) -> PolicyFns:
@@ -683,7 +724,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               mesh: Optional[Mesh] = None, chunk_size: Optional[int] = None,
               include_final_fetch: bool = True,
               stream: bool = False, collect_trace: bool = True,
-              n_seeds: Optional[int] = None) -> FleetResult:
+              n_seeds: Optional[int] = None,
+              antithetic: bool = False) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -714,6 +756,10 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         ``scenarios.with_seed(scenario, s)``.  The result carries
         ``n_seeds`` and a [B, S] ``seed_view``; collapse with
         ``mc_summary``.
+      antithetic: pair the seed replicas (2m, 2m+1) antithetically on
+        flip-capable streams (``scenarios.replicate_seeds(...,
+        antithetic=True)``) — same estimator mean, tighter ``mc_summary``
+        CIs on monotone statistics.  Requires an even ``n_seeds``.
 
     Every configuration (any mesh size x any chunking x any driver x fused
     or materialized generation) returns bit-identical results; see
@@ -722,7 +768,7 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     """
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
-    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
@@ -837,6 +883,8 @@ def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
 
 # ----------------------------------------------------------------------
 # Offline DP on a fleet: chunked forward recursion, frozen past T_i.
+# The chunk-level recursion itself (``dp_fwd_chunk`` / ``dp_backtrack*``)
+# lives in ``policies.offline_opt`` — ONE copy shared by every driver here.
 # ----------------------------------------------------------------------
 
 def _make_dp_instance_core(n_chunks: int, has_svc: bool):
@@ -846,85 +894,163 @@ def _make_dp_instance_core(n_chunks: int, has_svc: bool):
     (t >= T_len) keep ``J`` frozen and write identity backpointers, so the
     backtracked schedule is constant past T_len and the cost is exactly the
     instance's own-horizon optimum.  Padded K levels are priced ``+inf``
-    exactly as in ``offline_opt_batch``.
+    exactly as in ``offline_opt_batch``.  This is the *materialized* path:
+    the whole [T_pad, K] argmin table is kept for the backtrack (see
+    ``_make_dp_ckpt_instance_core`` for the O(chunk * K) alternative).
     """
 
     def core(M, lv, g, kmask, T_len, x, c, *opt):
         K = lv.shape[-1]
         svc = opt[0] if has_svc else None
         lv32 = lv.astype(jnp.float32)
-        M32 = M.astype(jnp.float32)
-        fetch_mat = M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
 
         def fwd_chunk(J, t0, xck, cck, sck):
             if sck is None:
                 sck = _model1_svc(xck, g)
             tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
-            return _dp_fwd_scan(J, tids, cck, sck, lv32, kmask, fetch_mat,
-                                T_len, K)
+            return dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat,
+                                T_len)
 
-        J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
-        J_T, args = _chunked_drive(fwd_chunk, J0, n_chunks, (x, c, svc))
-        return _dp_backtrack(J_T, args)
+        J_T, args = _chunked_drive(fwd_chunk, dp_frontier0(K), n_chunks,
+                                   (x, c, svc))
+        return dp_backtrack(J_T, args)
 
     return core
-
-
-def _dp_fwd_scan(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len, K):
-    """One chunk of the forward value recursion (shared verbatim by the
-    obs-backed and the scenario-fused DP cores, so fused == materialized is
-    op-for-op).  Invalid slots keep J frozen and write identity args."""
-    # the same float32 w as offline_opt_batch: rent + svc, +inf pads
-    wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
-           + sck.astype(jnp.float32))
-    wck = jnp.where(kmask[None, :], wck, jnp.inf)
-
-    def fwd(J_prev, inp):
-        t, w_t = inp
-        valid_t = t < T_len
-        trans = J_prev[:, None] + fetch_mat
-        arg = jnp.argmin(trans, axis=0)
-        J = jnp.min(trans, axis=0) + w_t
-        J = jnp.where(valid_t, J, J_prev)
-        arg = jnp.where(valid_t, arg, jnp.arange(K))
-        return J, arg
-
-    return jax.lax.scan(fwd, J, (tids, wck))
-
-
-def _dp_backtrack(J_T, args):
-    def back(k, arg_t):
-        return arg_t[k], k
-
-    k_T = jnp.argmin(J_T)
-    _, r_hist = jax.lax.scan(back, k_T, args, reverse=True)
-    return jnp.min(J_T), r_hist.astype(jnp.int32)
 
 
 def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int):
     """Scenario-fused forward DP for ONE instance: slabs are generated
     inside the chunk scan (generator state in the carry next to J); the
-    recursion itself is ``_dp_fwd_scan``, shared with the obs-backed core."""
+    recursion itself is ``dp_fwd_chunk``, shared with the obs-backed core."""
 
     def core(sparams, M, lv, g, kmask, T_len, tids_all):
         K = lv.shape[-1]
         lv32 = lv.astype(jnp.float32)
-        M32 = M.astype(jnp.float32)
-        fetch_mat = M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
 
         def fwd_chunk(carry, t0, tids):
             gen_state, J = carry
             gen_state, slab = sc_chunk(sparams, gen_state, tids)
             sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
-            J, args = _dp_fwd_scan(J, tids, slab.c, sck, lv32, kmask,
-                                   fetch_mat, T_len, K)
+            J, args = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask,
+                                   fetch_mat, T_len)
             return (gen_state, J), args
 
-        J0 = jnp.full((K,), jnp.inf, jnp.float32).at[0].set(0.0)
-        carry0 = (sc_init(sparams), J0)
+        carry0 = (sc_init(sparams), dp_frontier0(K))
         (_, J_T), args = _chunked_drive(fwd_chunk, carry0, n_chunks,
                                         (tids_all,))
-        return _dp_backtrack(J_T, args)
+        return dp_backtrack(J_T, args)
+
+    return core
+
+
+# ----------------------------------------------------------------------
+# Checkpointed two-pass DP: forward stores one [K] frontier per chunk,
+# backtrack replays chunks in reverse, recomputing argmins on the fly —
+# no [T, K] (so no [B, T, K]) backpointer table ever exists.
+# ----------------------------------------------------------------------
+
+def _make_dp_ckpt_instance_core(n_chunks: int, has_svc: bool,
+                                collect_schedule: bool):
+    """Checkpointed DP for ONE instance, obs-backed.
+
+    Pass 1 runs ``dp_fwd_chunk`` over the chunks, emitting each chunk's
+    *entry* frontier (a [K] row) instead of its [chunk, K] argmin table;
+    pass 2 scans the chunks in reverse, recomputing each table from its
+    checkpoint with the *same* ``dp_fwd_chunk`` and backtracking through it
+    (``dp_backtrack_chunk``), chaining ``k`` right-to-left.  The (k, arg)
+    op sequence is identical to the materialized backtrack, so the result
+    is bit-identical; peak memory drops from O(T * K) to
+    O((chunk + n_chunks) * K) per instance.  ``collect_schedule=False``
+    skips pass 2 entirely (cost only — nothing O(T) remains at all).
+    """
+
+    def core(M, lv, g, kmask, T_len, x, c, *opt):
+        K = lv.shape[-1]
+        svc = opt[0] if has_svc else None
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        T_pad = x.shape[0]
+        chunk = T_pad // n_chunks
+        cut = lambda a: (None if a is None
+                         else a.reshape((n_chunks, chunk) + a.shape[1:]))
+        xs, cs, ss = cut(x), cut(c), cut(svc)
+        t0s = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+        def chunk_pass(J, t0, xck, cck, sck):
+            if sck is None:
+                sck = _model1_svc(xck, g)
+            tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+            return dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat,
+                                T_len)
+
+        def fwd(J, inp):
+            t0, xck, cck, sck = inp
+            J2, _ = chunk_pass(J, t0, xck, cck, sck)
+            return J2, J                    # checkpoint = chunk-ENTRY frontier
+
+        J_T, ckpts = jax.lax.scan(fwd, dp_frontier0(K), (t0s, xs, cs, ss))
+        cost = jnp.min(J_T)
+        if not collect_schedule:
+            return cost
+        k_T = jnp.argmin(J_T)
+
+        def bwd(k, inp):
+            Jck, t0, xck, cck, sck = inp
+            _, args = chunk_pass(Jck, t0, xck, cck, sck)
+            return dp_backtrack_chunk(k, args)
+
+        _, r = jax.lax.scan(bwd, k_T, (ckpts, t0s, xs, cs, ss), reverse=True)
+        return cost, r.reshape(T_pad).astype(jnp.int32)
+
+    return core
+
+
+def _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
+                                collect_schedule: bool):
+    """Checkpointed DP with fused generation: pass 1 additionally
+    checkpoints the generator state at each chunk entry (small — recursion
+    state only, the innovations are counter-keyed), so pass 2 regenerates
+    each chunk's slab from ``(gen checkpoint, tids)`` and recomputes its
+    argmin table — the same counter-keyed regeneration trick the fused
+    simulator uses, applied to the backtrack."""
+
+    def core(sparams, M, lv, g, kmask, T_len, tids_all):
+        K = lv.shape[-1]
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        T_pad = tids_all.shape[0]
+        chunk = T_pad // n_chunks
+        tcks = tids_all.reshape(n_chunks, chunk)
+
+        def chunk_pass(J, gen_state, tids):
+            gen2, slab = sc_chunk(sparams, gen_state, tids)
+            sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+            J2, args = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask,
+                                    fetch_mat, T_len)
+            return gen2, J2, args
+
+        def fwd(carry, tids):
+            gen_state, J = carry
+            gen2, J2, _ = chunk_pass(J, gen_state, tids)
+            return (gen2, J2), (gen_state, J)      # entry-state checkpoints
+
+        carry0 = (sc_init(sparams), dp_frontier0(K))
+        (_, J_T), (gen_ckpts, J_ckpts) = jax.lax.scan(fwd, carry0, tcks)
+        cost = jnp.min(J_T)
+        if not collect_schedule:
+            return cost
+        k_T = jnp.argmin(J_T)
+
+        def bwd(k, inp):
+            gen_ck, Jck, tids = inp
+            _, _, args = chunk_pass(Jck, gen_ck, tids)
+            return dp_backtrack_chunk(k, args)
+
+        _, r = jax.lax.scan(bwd, k_T, (gen_ckpts, J_ckpts, tcks),
+                            reverse=True)
+        return cost, r.reshape(T_pad).astype(jnp.int32)
 
     return core
 
@@ -949,41 +1075,317 @@ def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh):
     return jax.jit(sharded)
 
 
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_ckpt_core(n_chunks: int, has_svc: bool,
+                           collect_schedule: bool, mesh: Mesh):
+    core = _make_dp_ckpt_instance_core(n_chunks, has_svc, collect_schedule)
+    spec = P(FLEET_AXIS)
+    out_specs = (spec, spec) if collect_schedule else spec
+    sharded = shard_map(jax.vmap(core), mesh=mesh,
+                        in_specs=(spec,) * (7 + int(has_svc)),
+                        out_specs=out_specs)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
+                                    collect_schedule: bool, mesh: Mesh):
+    core = _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks,
+                                       collect_schedule)
+    spec = P(FLEET_AXIS)
+    out_specs = (spec, spec) if collect_schedule else spec
+    sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)),
+                        mesh=mesh, in_specs=(spec,) * 6 + (P(),),
+                        out_specs=out_specs, check_rep=False)
+    return jax.jit(sharded)
+
+
+# ---- streamed checkpointed drivers: the host drives the two passes one
+# chunk at a time, so neither obs nor r_hist is ever device-resident whole.
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh):
+    """One forward slab of the value recursion: ``J -> J'``."""
+
+    def step(M, lv, g, kmask, T_len, t0, J, xck, cck, *opt):
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        sck = opt[0] if has_svc else _model1_svc(xck, g)
+        tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
+        J2, _ = dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len)
+        return J2
+
+    n_opt = int(has_svc)
+    in_axes = (0, 0, 0, 0, 0, None, 0, 0, 0) + (0,) * n_opt
+    spec = P(FLEET_AXIS)
+    in_specs = (spec,) * 5 + (P(),) + (spec,) * (3 + n_opt)
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
+                        in_specs=in_specs, out_specs=spec)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh):
+    """One backward slab: recompute the chunk's argmins from its checkpoint
+    and backtrack through them — ``(J_ckpt, k) -> (k_entry, r_chunk)``."""
+
+    def step(M, lv, g, kmask, T_len, t0, Jck, k, xck, cck, *opt):
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        sck = opt[0] if has_svc else _model1_svc(xck, g)
+        tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
+        _, args = dp_fwd_chunk(Jck, tids, cck, sck, lv32, kmask, fetch_mat,
+                               T_len)
+        k0, rck = dp_backtrack_chunk(k, args)
+        return k0, rck.astype(jnp.int32)
+
+    n_opt = int(has_svc)
+    in_axes = (0, 0, 0, 0, 0, None, 0, 0, 0, 0) + (0,) * n_opt
+    spec = P(FLEET_AXIS)
+    in_specs = (spec,) * 5 + (P(),) + (spec,) * (4 + n_opt)
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
+                        in_specs=in_specs, out_specs=(spec, spec))
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
+                                     mesh: Mesh):
+    """One fused-generation forward slab: the host ships one scalar offset
+    per chunk; ``(gen_state, J) -> (gen', J')``."""
+
+    def step(sparams, M, lv, g, kmask, T_len, t0, carry):
+        gen_state, J = carry
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        gen2, slab = sc_chunk(sparams, gen_state, tids)
+        sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+        J2, _ = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask, fetch_mat,
+                             T_len)
+        return gen2, J2
+
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(
+        jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0, None, 0)), mesh=mesh,
+        in_specs=(spec,) * 6 + (P(), spec), out_specs=(spec, spec),
+        check_rep=False)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_dp_scenario_stream_bwd(sc_init, sc_chunk, chunk: int,
+                                     mesh: Mesh):
+    """One fused-generation backward slab: regenerate the chunk from its
+    generator-state checkpoint, recompute its argmins, backtrack."""
+
+    def step(sparams, M, lv, g, kmask, T_len, t0, gen_ck, Jck, k):
+        lv32 = lv.astype(jnp.float32)
+        fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
+        tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        _, slab = sc_chunk(sparams, gen_ck, tids)
+        sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
+        _, args = dp_fwd_chunk(Jck, tids, slab.c, sck, lv32, kmask, fetch_mat,
+                               T_len)
+        k0, rck = dp_backtrack_chunk(k, args)
+        return k0, rck.astype(jnp.int32)
+
+    spec = P(FLEET_AXIS)
+    sharded = shard_map(
+        jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0, None, 0, 0, 0)), mesh=mesh,
+        in_specs=(spec,) * 6 + (P(),) + (spec,) * 3, out_specs=(spec, spec),
+        check_rep=False)
+    return jax.jit(sharded)
+
+
+def _dp_grid_args(padded: FleetBatch):
+    dt = default_float_dtype()
+    return (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
+            padded.grid.g.astype(dt), padded.grid.mask, padded.T)
+
+
+def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
+                       checkpointed: bool, collect_schedule: bool):
+    """(compiled device-scan DP core, its args) for this config — shared by
+    ``offline_opt_fleet`` and ``offline_dp_memory_stats`` so the probed
+    program is exactly the executed one."""
+    grid_args = _dp_grid_args(padded)
+    if scenario is not None:
+        sparams = _pad_params(scenario.params, padded.B)
+        if checkpointed:
+            core = _compiled_dp_ckpt_scenario_core(
+                scenario.init_fn, scenario.chunk_fn, n_chunks,
+                collect_schedule, mesh)
+        else:
+            core = _compiled_dp_scenario_core(scenario.init_fn,
+                                              scenario.chunk_fn, n_chunks,
+                                              mesh)
+        args = (sparams,) + grid_args + (jnp.arange(T_pad, dtype=jnp.int32),)
+    else:
+        has_svc = padded.svc is not None
+        if checkpointed:
+            core = _compiled_dp_ckpt_core(n_chunks, has_svc, collect_schedule,
+                                          mesh)
+        else:
+            core = _compiled_dp_core(n_chunks, has_svc, mesh)
+        args = grid_args + (jnp.asarray(padded.x), jnp.asarray(padded.c))
+        if has_svc:
+            args += (jnp.asarray(padded.svc),)
+    return core, args
+
+
+def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
+                      collect_schedule: bool):
+    """Host-driven checkpointed DP: forward loop collecting per-chunk
+    frontier (+ generator-state) checkpoints in a device-resident list,
+    then a backward loop replaying the chunks in reverse.  With a scenario
+    the host ships one scalar offset per chunk each way; obs-backed fleets
+    slab-feed host-resident numpy arrays like ``_run_fleet_streamed``."""
+    chunk = T_pad // n_chunks
+    grid_args = _dp_grid_args(padded)
+    B_pad, K = padded.B, padded.K
+    if scenario is not None:
+        sparams = _pad_params(scenario.params, padded.B)
+        fwd = _compiled_dp_scenario_stream_fwd(scenario.init_fn,
+                                               scenario.chunk_fn, chunk, mesh)
+        bwd = _compiled_dp_scenario_stream_bwd(scenario.init_fn,
+                                               scenario.chunk_fn, chunk, mesh)
+        gen0 = jax.jit(jax.vmap(scenario.init_fn))(sparams)
+    else:
+        has_svc = padded.svc is not None
+        fwd = _compiled_dp_stream_fwd(has_svc, mesh)
+        bwd = _compiled_dp_stream_bwd(has_svc, mesh)
+        x_h, c_h = np.asarray(padded.x), np.asarray(padded.c)
+        svc_h = None if not has_svc else np.asarray(padded.svc)
+
+        def obs_slabs(i):
+            sl = slice(i * chunk, (i + 1) * chunk)
+            slabs = (jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
+            if has_svc:
+                slabs += (jnp.asarray(svc_h[:, sl]),)
+            return slabs
+
+    J = jnp.broadcast_to(dp_frontier0(K), (B_pad, K))
+    ckpts = []                 # device-resident [B, K] rows (+ gen states)
+    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+        for i in range(n_chunks):
+            t0 = jnp.asarray(i * chunk, jnp.int32)
+            if scenario is not None:
+                if collect_schedule:       # cost-only never backtracks —
+                    ckpts.append((gen0, J))  # don't retain dead device rows
+                gen0, J = fwd(sparams, *grid_args, t0, (gen0, J))
+            else:
+                if collect_schedule:
+                    ckpts.append(J)
+                J = fwd(*grid_args, t0, J, *obs_slabs(i))
+        J_T = np.asarray(J)
+        cost = J_T.min(axis=1)
+        if not collect_schedule:
+            return cost, None
+        k = jnp.asarray(J_T.argmin(axis=1).astype(np.int32))
+        r_parts = []
+        for i in reversed(range(n_chunks)):
+            t0 = jnp.asarray(i * chunk, jnp.int32)
+            if scenario is not None:
+                gen_ck, Jck = ckpts[i]
+                k, rck = bwd(sparams, *grid_args, t0, gen_ck, Jck, k)
+            else:
+                k, rck = bwd(*grid_args, t0, ckpts[i], k, *obs_slabs(i))
+            r_parts.append(np.asarray(rck))
+    r_hist = np.concatenate(r_parts[::-1], axis=1)
+    return cost, r_hist
+
+
+def offline_dp_memory_stats(fleet: FleetBatch, *,
+                            scenario: Optional[Scenario] = None,
+                            mesh: Optional[Mesh] = None,
+                            chunk_size: Optional[int] = None,
+                            checkpointed: bool = False,
+                            collect_schedule: bool = True,
+                            n_seeds: Optional[int] = None,
+                            antithetic: bool = False) -> dict:
+    """XLA-reported memory of the compiled device-scan DP core for this
+    config, WITHOUT running it: ``{"argument_bytes", "output_bytes",
+    "temp_bytes"}``.  The probed program is built by the same
+    ``_dp_scan_core_args`` (and the same MC replication) the solver uses,
+    so the numbers describe exactly the executed computation —
+    ``kernel_bench.offline_dp_streaming`` asserts its peak-memory ratio
+    (materialized vs checkpointed backpointers) on ``temp_bytes``, where
+    scan-carried intermediates such as the [B, T, K] argmin table live.
+    Note the stats are per *program*: on a multi-device mesh each device
+    runs one program over its B/n_devices shard."""
+    if not collect_schedule and not checkpointed:
+        # same contract as offline_opt_fleet — never report a program the
+        # solver would refuse to run
+        raise ValueError("collect_schedule=False requires checkpointed=True")
+    fleet, scenario, _ = _replicate_mc(fleet, scenario, n_seeds, antithetic)
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+    mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
+    core, args = _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
+                                    checkpointed, collect_schedule)
+    stats = core.lower(*args).compile().memory_analysis()
+    return {"argument_bytes": int(stats.argument_size_in_bytes),
+            "output_bytes": int(stats.output_size_in_bytes),
+            "temp_bytes": int(stats.temp_size_in_bytes)}
+
+
 def offline_opt_fleet(fleet: FleetBatch, *,
                       scenario: Optional[Scenario] = None,
                       mesh: Optional[Mesh] = None,
                       chunk_size: Optional[int] = None,
-                      n_seeds: Optional[int] = None) -> FleetOfflineResult:
+                      n_seeds: Optional[int] = None,
+                      antithetic: bool = False,
+                      checkpointed: bool = False,
+                      stream: bool = False,
+                      collect_schedule: bool = True) -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
     time, each instance solved at its own horizon.  With ``scenario=...``
     the observations are generated on device inside the forward recursion
     (and again inside the schedule evaluation) — bit-identical to the
     materialized run.  ``n_seeds=S`` solves S seed-replicas of every
-    instance (same key-fold convention as ``run_fleet``)."""
-    dt = default_float_dtype()
-    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
+    instance (same key-fold convention as ``run_fleet``; ``antithetic=True``
+    pairs them — see ``scenarios.replicate_seeds``).
+
+    ``checkpointed=True`` switches to the two-pass checkpointed recursion:
+    the forward pass keeps one [B, K] value-frontier checkpoint per chunk
+    and the backtrack replays each chunk in reverse from its checkpoint,
+    recomputing argmins on the fly — **bit-identical** to the materialized
+    path wherever both fit, but never materializing a [B, T, K] (or any
+    [B, T]-shaped backpointer) array, which is what extends exact OPT to
+    T = 10^6-10^7 horizons.  It composes with every other axis: mesh,
+    mixed horizons, ``n_seeds``, ``chunk_size`` (the checkpoint grain) and
+    ``stream=True`` (host-driven passes — requires ``chunk_size``; obs and
+    ``r_hist`` then cross the host boundary one [B, chunk] slab at a time).
+    ``collect_schedule=False`` (checkpointed only) skips the backtrack and
+    the schedule evaluation altogether and returns cost-only results
+    (``r_hist`` / ``sim`` are None) — the cheapest way to price OPT at
+    horizons where even the [B, T] schedule is unwelcome."""
+    if stream and not checkpointed:
+        raise ValueError("stream=True requires checkpointed=True (the "
+                         "materialized backtrack needs the whole table)")
+    if stream and chunk_size is None:
+        raise ValueError("stream=True requires chunk_size")
+    if not collect_schedule and not checkpointed:
+        raise ValueError("collect_schedule=False requires checkpointed=True")
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     if scenario is not None:
         _check_scenario(scenario, fleet)
-        sparams = _pad_params(scenario.params, padded.B)
-        core = _compiled_dp_scenario_core(scenario.init_fn, scenario.chunk_fn,
-                                          n_chunks, mesh)
-        args = (sparams, padded.grid.M.astype(dt),
-                padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
-                padded.grid.mask, padded.T,
-                jnp.arange(T_pad, dtype=jnp.int32))
+    if stream:
+        cost, r_hist = _dp_ckpt_streamed(scenario, padded, mesh, n_chunks,
+                                         T_pad, collect_schedule)
     else:
-        has_svc = fleet.svc is not None
-        core = _compiled_dp_core(n_chunks, has_svc, mesh)
-        args = (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
-                padded.grid.g.astype(dt), padded.grid.mask, padded.T,
-                padded.x, padded.c)
-        if has_svc:
-            args += (padded.svc,)
-    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-        cost, r_hist = core(*args)
+        core, args = _dp_scan_core_args(scenario, padded, mesh, n_chunks,
+                                        T_pad, checkpointed, collect_schedule)
+        with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+            out = core(*args)
+        cost, r_hist = out if collect_schedule else (out, None)
     cost = np.asarray(cost)[:B].astype(np.float64)
+    if not collect_schedule:
+        return FleetOfflineResult(cost=cost, r_hist=None, sim=None,
+                                  n_seeds=S)
     r_hist = np.asarray(r_hist)[:B, :T_max].astype(np.int64)
     # fleet/scenario are already seed-replicated here, so the evaluation
     # runs plain and only the result is re-tagged with the MC axis
@@ -1065,16 +1467,18 @@ def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
                             scenario: Optional[Scenario] = None,
                             mesh: Optional[Mesh] = None,
                             chunk_size: Optional[int] = None,
-                            n_seeds: Optional[int] = None) -> FleetResult:
+                            n_seeds: Optional[int] = None,
+                            antithetic: bool = False) -> FleetResult:
     """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
     instance's T contribute nothing (and charge no fetch).  With
     ``scenario=...`` the priced observations are generated on device;
     ``n_seeds=S`` prices the schedules on S seed-replicas of the scenario
     (``r_hist`` rows may be [B] — repeated per replica — or the full
-    [B*S] replication)."""
+    [B*S] replication; ``antithetic=True`` pairs the replicas as in
+    ``run_fleet``)."""
     dt = default_float_dtype()
     B_orig = fleet.B
-    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds)
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     r = np.asarray(r_hist, np.int32)

@@ -15,7 +15,22 @@ hosting-status histograms (Figs 2, 8, 12-22).
 forward recursion op-for-op, device-sharded over the instance axis, chunked
 over time, and frozen past each instance's own horizon (identity
 backpointers on padded slots) — bit-identical to ``offline_opt_batch`` on
-uniform-horizon fleets.
+uniform-horizon fleets.  The chunk-level kernel lives HERE
+(``dp_fwd_chunk`` / ``dp_backtrack_chunk``): one forward recursion shared
+verbatim by the materialized-backpointer cores and the checkpointed ones,
+so every driver is op-for-op the same recursion.
+
+**Checkpointed backtracking** (``offline_opt_fleet(checkpointed=True)``)
+removes the last O(T) DP buffer: the forward value pass stores only one
+[K] value-frontier checkpoint per chunk (plus the generator state for
+scenario-fused runs), and the backtrack pass replays each chunk *in
+reverse order* from its checkpoint, recomputing that chunk's argmin table
+on the fly — device memory is O(chunk * K + n_chunks * K) per instance
+instead of O(T * K), at the price of a second forward sweep.  Because the
+recomputed tables are produced by the identical ``dp_fwd_chunk`` from the
+identical frontier, the checkpointed schedule is **bit-identical** to the
+materialized one wherever both fit, which is what extends exact OPT to the
+same T = 10^6-10^7 horizons as ``run_fleet(collect_trace=False)``.
 
 ``OPT`` (no partial hosting, the benchmark of [22]) is the same DP on the
 2-level instance. Exhaustive-search cross-checks live in the tests.
@@ -51,6 +66,70 @@ class BatchOfflineResult:
     cost: np.ndarray          # [B]
     r_hist: np.ndarray        # [B, T]
     sim: object               # repro.core.simulator.BatchSimResult
+
+
+# ----------------------------------------------------------------------
+# The chunk-level DP kernel (shared by every fleet driver in core/fleet.py).
+# ----------------------------------------------------------------------
+
+def dp_frontier0(K: int, dtype=jnp.float32):
+    """The initial value frontier ``J_0 = [0, inf, ...]`` (service starts
+    off-edge, like every policy)."""
+    return jnp.full((K,), jnp.inf, dtype).at[0].set(0.0)
+
+
+def dp_fetch_matrix(M32, lv32):
+    """``fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+``."""
+    return M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
+
+
+def dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len):
+    """One chunk of the forward value recursion — THE one copy every fleet
+    DP driver shares (materialized backpointers, checkpointed two-pass,
+    obs-backed and scenario-fused, scan and streamed), so all of them are
+    op-for-op the same recursion.  Invalid slots (``t >= T_len``) keep the
+    frontier frozen and write identity argmins; padded K levels are priced
+    ``+inf`` via ``kmask`` exactly as in ``offline_opt_batch``.
+
+    Returns ``(J', args [chunk, K])``.
+    """
+    K = lv32.shape[-1]
+    # the same float32 w as offline_opt_batch: rent + svc, +inf pads
+    wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
+           + sck.astype(jnp.float32))
+    wck = jnp.where(kmask[None, :], wck, jnp.inf)
+
+    def fwd(J_prev, inp):
+        t, w_t = inp
+        valid_t = t < T_len
+        trans = J_prev[:, None] + fetch_mat
+        arg = jnp.argmin(trans, axis=0)
+        J = jnp.min(trans, axis=0) + w_t
+        J = jnp.where(valid_t, J, J_prev)
+        arg = jnp.where(valid_t, arg, jnp.arange(K))
+        return J, arg
+
+    return jax.lax.scan(fwd, J, (tids, wck))
+
+
+def dp_backtrack_chunk(k, args):
+    """Backtrack one ``[chunk, K]`` argmin table from terminal level ``k``:
+    returns ``(k at chunk entry, r_hist [chunk])``.  The checkpointed
+    drivers chain this right-to-left over recomputed per-chunk tables; the
+    materialized drivers call it once on the whole-horizon table — the
+    (k, arg) op sequence is identical either way."""
+
+    def back(k, arg_t):
+        return arg_t[k], k
+
+    return jax.lax.scan(back, k, args, reverse=True)
+
+
+def dp_backtrack(J_T, args):
+    """Terminal min + whole-table backtrack (the materialized path)."""
+    k_T = jnp.argmin(J_T)
+    _, r_hist = dp_backtrack_chunk(k_T, args)
+    return jnp.min(J_T), r_hist.astype(jnp.int32)
 
 
 def _dp_core(M, lv, w):

@@ -12,7 +12,9 @@ observation arrays.
 * ``with_seed``           — fold one Monte-Carlo seed into every stream key
                             (before the per-slot counter fold).
 * ``replicate_seeds``     — the MC axis: S seed-replicas of a B-instance
-                            scenario as one [B*S] scenario.
+                            scenario as one [B*S] scenario
+                            (``antithetic=True`` pairs replicas (2m, 2m+1)
+                            on flip-capable streams).
 
 Composition happens at the *stream* level, so combinator outputs are
 ordinary streams: mixtures of regime-switched antithetic pairs are
@@ -213,18 +215,29 @@ def antithetic_pairing(stream: Stream) -> Stream:
 # Monte-Carlo seed replication (the fleet engine's ``n_seeds=`` axis).
 # ----------------------------------------------------------------------
 
-def _map_key_leaves(params, leaf_fn, key_fn):
+def _map_key_leaves(params, leaf_fn, key_fn, pair_fn=None):
     """Structurally walk a params pytree, applying ``key_fn`` to every
     ``"key"`` dict entry (the stream-constructor convention: counter-based
     PRNG keys live under that name on every random stream) and ``leaf_fn``
     to every other array leaf.  Dict-name-aware on purpose — ``tree_map``
-    cannot tell a key leaf from a coefficient leaf."""
+    cannot tell a key leaf from a coefficient leaf.
+
+    ``pair_fn(key, flip) -> (key', flip')``, when given, takes over dicts
+    that carry BOTH ``"key"`` and ``"flip"`` — the flip-capable streams
+    (``bernoulli_arrivals``, ``uniform_rents``) that antithetic seed
+    replication pairs up; every other keyed dict still goes through
+    ``key_fn``."""
     if isinstance(params, dict):
+        if pair_fn is not None and "key" in params and "flip" in params:
+            key2, flip2 = pair_fn(params["key"], params["flip"])
+            return {k: (key2 if k == "key" else flip2 if k == "flip"
+                        else _map_key_leaves(v, leaf_fn, key_fn, pair_fn))
+                    for k, v in params.items()}
         return {k: (key_fn(v) if k == "key"
-                    else _map_key_leaves(v, leaf_fn, key_fn))
+                    else _map_key_leaves(v, leaf_fn, key_fn, pair_fn))
                 for k, v in params.items()}
     if isinstance(params, (tuple, list)):
-        return type(params)(_map_key_leaves(v, leaf_fn, key_fn)
+        return type(params)(_map_key_leaves(v, leaf_fn, key_fn, pair_fn)
                             for v in params)
     return leaf_fn(params)
 
@@ -245,7 +258,7 @@ def with_seed(obj, seed: int):
     return obj._replace(params=params, name=f"seed{seed}({obj.name})")
 
 
-def replicate_seeds(obj, n_seeds: int):
+def replicate_seeds(obj, n_seeds: int, antithetic: bool = False):
     """S seed-replicas of a B-instance ``Scenario`` (or ``Stream``) as one
     [B*S] scenario — the Monte-Carlo axis folded into the stream keys.
 
@@ -256,6 +269,19 @@ def replicate_seeds(obj, n_seeds: int):
     plumbing, and every downstream engine guarantee (chunk invariance,
     mesh transparency) holds per replica because a replica *is* a legal
     standalone instance.  Non-key param leaves are replicated row-wise.
+
+    ``antithetic=True`` (even S required) pairs consecutive replicas on
+    *flip-capable* streams (those carrying a ``flip`` next to their
+    ``key``, i.e. ``bernoulli_arrivals`` / ``uniform_rents``): replicas
+    ``(b, 2m)`` and ``(b, 2m + 1)`` share the pair fold ``fold_in(key, m)``
+    and the odd member flips every slot uniform ``u -> 1 - u`` — the
+    ``antithetic_pairing`` trick moved onto the seed axis, so pair sums of
+    uniforms are exactly ``lo + hi`` and seed-mean CIs tighten at the same
+    S for monotone statistics.  Even replicas are bitwise
+    ``with_seed(obj, m)``'s rows on those streams; streams WITHOUT a flip
+    param (GE chains, ARMA rents, Poisson, traces) keep the plain
+    independent per-replica fold — antithesis only ever replaces
+    independent replicas where the flip trick is exact.
     """
     S = int(n_seeds)
     if S < 1:
@@ -264,9 +290,19 @@ def replicate_seeds(obj, n_seeds: int):
     seeds = jnp.tile(jnp.arange(S, dtype=jnp.int32), B)       # [B*S]
     rep = lambda a: jnp.repeat(jnp.asarray(a), S, axis=0)
     fold = jax.vmap(jax.random.fold_in)
-    params = _map_key_leaves(obj.params, rep,
-                             lambda k: fold(rep(k), seeds))
-    return obj._replace(params=params, name=f"mc{S}({obj.name})")
+    if not antithetic:
+        params = _map_key_leaves(obj.params, rep,
+                                 lambda k: fold(rep(k), seeds))
+        return obj._replace(params=params, name=f"mc{S}({obj.name})")
+    if S % 2:
+        raise ValueError(f"antithetic replication needs an even n_seeds, "
+                         f"got {n_seeds}")
+    odd = (seeds % 2).astype(bool)
+    params = _map_key_leaves(
+        obj.params, rep, lambda k: fold(rep(k), seeds),
+        pair_fn=lambda k, f: (fold(rep(k), seeds // 2),
+                              jnp.logical_xor(rep(f), odd)))
+    return obj._replace(params=params, name=f"mc{S}a({obj.name})")
 
 
 def _trace_svc_chunk(params, state, tids, x):

@@ -1,9 +1,16 @@
 import os
 import sys
 
-# Tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in a
-# subprocess); make sure nothing leaked into the environment.
+# Tests see exactly ONE device by default (the dry-run sets its own
+# XLA_FLAGS in a subprocess); make sure nothing leaked into the environment.
+# REPRO_FORCE_DEVICES=N is the explicit opt-in the CI multi-device leg uses
+# to run the sharding/MC/DP bit-identity suites on a forced-N-CPU-device
+# platform directly (not just via their in-test subprocess spawns).
 os.environ.pop("XLA_FLAGS", None)
+_forced = os.environ.get("REPRO_FORCE_DEVICES")
+if _forced:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={int(_forced)}"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

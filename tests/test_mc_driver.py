@@ -25,6 +25,7 @@ import textwrap
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -250,7 +251,109 @@ def test_mc_summary_matches_mc_aggregate(table):
 
 
 # ----------------------------------------------------------------------
-# (d) forced multi-device mesh (subprocess: this process is pinned to one
+# (d) antithetic seed pairs: replicate_seeds(..., antithetic=True).
+# ----------------------------------------------------------------------
+
+def flip_scenario(B):
+    """Both channels flip-capable (bernoulli arrivals + uniform rents)."""
+    return S.combine(
+        S.bernoulli_arrivals(S.split_keys(KEY, B), 0.4, B),
+        S.uniform_rents(S.split_keys(jax.random.PRNGKey(2), B), 0.5, 0.3, B))
+
+
+def test_antithetic_pair_sum_law_on_seed_axis():
+    """Replica pairs (2m, 2m+1) of a flip-capable rent stream share the
+    pair fold and flip, so every slot's pair sum is exactly lo + hi; even
+    replicas are bitwise ``with_seed``'s standalone rows."""
+    B, NS_A = 3, 4
+    st_ = S.uniform_rents(S.split_keys(jax.random.PRNGKey(2), B), 0.5, 0.3, B)
+    rep = S.replicate_seeds(st_, NS_A, antithetic=True)
+    c = np.asarray(S.materialize_stream(rep, T)).reshape(B, NS_A, T)
+    # the pair-sum law (lo + hi = 2 * c_mean = 1.0), every pair, every slot
+    assert np.allclose(c[:, 0] + c[:, 1], 1.0, atol=1e-6)
+    assert np.allclose(c[:, 2] + c[:, 3], 1.0, atol=1e-6)
+    # even members ARE the plain seed-m replicas, bit for bit
+    for m in range(NS_A // 2):
+        ws = np.asarray(S.materialize_stream(S.with_seed(st_, m), T))
+        assert np.array_equal(c[:, 2 * m], ws)
+    # odd members are the flipped twins: bitwise equal to flipping the
+    # pair's stream by hand
+    flipped = st_._replace(params={**st_.params,
+                                   "flip": jnp.ones((B,), bool)})
+    for m in range(NS_A // 2):
+        wf = np.asarray(S.materialize_stream(S.with_seed(flipped, m), T))
+        assert np.array_equal(c[:, 2 * m + 1], wf)
+
+
+def test_antithetic_requires_even_seeds_and_scenario(stacked):
+    *_, sc, fleet = stacked
+    with pytest.raises(ValueError, match="even"):
+        S.replicate_seeds(sc, 3, antithetic=True)
+    with pytest.raises(ValueError, match="n_seeds"):
+        run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc, antithetic=True)
+
+
+def test_antithetic_keeps_non_flip_streams_independent(stacked):
+    """Streams without a flip param (GE arrivals, ARMA rents) keep the
+    plain per-replica fold under antithetic replication — their replicas
+    match the non-antithetic ones bitwise."""
+    *_, sc, fleet = stacked
+    plain = S.replicate_seeds(sc, 4)
+    anti = S.replicate_seeds(sc, 4, antithetic=True)
+    for pl, al in zip(jax.tree_util.tree_leaves(plain.params),
+                      jax.tree_util.tree_leaves(anti.params)):
+        assert np.array_equal(np.asarray(pl), np.asarray(al))
+
+
+def test_antithetic_ci_width_shrinks():
+    """The mc_stats comparison: same S, antithetic pairs summarised by
+    pair-means vs plain independent seeds — CI half-widths shrink on this
+    monotone (rent-dominated static-policy) workload.  Deterministic for
+    fixed keys, so the inequality is a stable assertion, not a flaky
+    sample."""
+    B, NS_A = 4, 8
+    costs_list = [HostingCosts.three_level(5.0 + i, 0.25, 0.4)
+                  for i in range(B)]
+    grid = HostingGrid.from_costs(costs_list)
+    fleet = FleetBatch.for_scenario(grid, 256)
+    sc = flip_scenario(B)
+    fns = StaticPolicy.fleet(fleet, fleet.grid.top_index())
+    plain = run_fleet(fns, fleet, scenario=sc, n_seeds=NS_A)
+    anti = run_fleet(fns, fleet, scenario=sc, n_seeds=NS_A, antithetic=True)
+    sp = mc_summary(plain)
+    sa = mc_summary(anti, antithetic=True)
+    # unchanged estimator target: seed-means agree between the designs
+    assert np.allclose(sp["total_mean"], sa["total_mean"], rtol=0.05)
+    # and the antithetic pair-mean CI is strictly tighter on every instance
+    assert np.all(sa["total_ci95"] < sp["total_ci95"])
+    # the naive S-sample formula must refuse odd pairings
+    with pytest.raises(ValueError, match="even"):
+        mc_summary(run_fleet(fns, fleet, scenario=sc, n_seeds=3),
+                   antithetic=True)
+
+
+def test_antithetic_seed_fold_law_engine(stacked):
+    """antithetic=True still satisfies the fold law: fused [B*S] rows ==
+    standalone runs of the antithetic-replicated scenario, sliced per
+    replica (a replica of an antithetic pair is itself a legal standalone
+    scenario row)."""
+    costs_list, grid, ges, c_means, sc, fleet = stacked
+    NS_A = 4
+    fns = AlphaRR.fleet(fleet)
+    fused = run_fleet(fns, fleet, scenario=sc, n_seeds=NS_A, antithetic=True)
+    rep = S.replicate_seeds(sc, NS_A, antithetic=True)
+    grid_rep = HostingGrid(
+        M=jnp.repeat(grid.M, NS_A, 0), levels=jnp.repeat(grid.levels, NS_A, 0),
+        g=jnp.repeat(grid.g, NS_A, 0), mask=jnp.repeat(grid.mask, NS_A, 0))
+    fleet_rep = FleetBatch.for_scenario(grid_rep,
+                                        np.repeat(np.asarray(fleet.T), NS_A))
+    ref = run_fleet(AlphaRR.fleet(fleet_rep), fleet_rep, scenario=rep)
+    assert np.array_equal(fused.total, ref.total)
+    assert np.array_equal(fused.r_hist, ref.r_hist)
+
+
+# ----------------------------------------------------------------------
+# (e) forced multi-device mesh (subprocess: this process is pinned to one
 # device by conftest).  B * S = 9 is not a multiple of 4, exercising the
 # dummy-instance padding of replicated scenario params.
 # ----------------------------------------------------------------------

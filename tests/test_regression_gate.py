@@ -1,0 +1,164 @@
+"""Unit tests for the CI perf-regression gate
+(``benchmarks/check_regression.py``): drop detection on ratio and rate
+keys, machine-speed normalization of rates, additive-key tolerance, and
+the disappeared-entry failure.  Pure python — no jax involved.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import compare, main
+
+
+def entry(rate, ratio, **extra):
+    row = {
+        "slots_instances_per_sec": rate,
+        "speedup_vs_loop": ratio,
+        "B": 64,
+        "T": 4096,
+    }
+    row.update(extra)
+    return row
+
+
+def baseline_tp():
+    return {
+        "a": entry(1000.0, 12.0),
+        "b": entry(2000.0, 1.5),
+        "c": entry(500.0, 4.0),
+    }
+
+
+def test_identical_reports_pass():
+    base = baseline_tp()
+    failures, _ = compare(json.loads(json.dumps(base)), base)
+    assert failures == []
+
+
+def test_ratio_drop_fails_and_metadata_is_ignored():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    new["a"]["speedup_vs_loop"] = 12.0 * 0.7  # 30% drop
+    new["a"]["B"] = 1  # metadata: never guarded
+    failures, _ = compare(new, base)
+    assert len(failures) == 1
+    assert "a.speedup_vs_loop" in failures[0]
+
+
+def test_small_ratio_drop_passes():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    new["a"]["speedup_vs_loop"] = 12.0 * 0.8  # 20% < threshold
+    failures, _ = compare(new, base)
+    assert failures == []
+
+
+def test_uniform_rate_shift_is_calibrated_away():
+    """Half-speed runner: every rate drops 50% together — the median
+    machine-speed factor absorbs it and the gate stays green."""
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    for row in new.values():
+        row["slots_instances_per_sec"] *= 0.5
+    failures, _ = compare(new, base)
+    assert failures == []
+
+
+def test_single_rate_regression_still_fails():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    new["b"]["slots_instances_per_sec"] *= 0.5  # alone among its peers
+    failures, _ = compare(new, base)
+    assert any("b.slots_instances_per_sec" in f for f in failures)
+
+
+def test_additive_keys_and_entries_pass():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    new["zz_new_row"] = entry(123.0, 9.9)
+    new["a"]["brand_new_ratio"] = 0.001
+    failures, notes = compare(new, base)
+    assert failures == []
+    assert any("zz_new_row" in n and "additive" in n for n in notes)
+
+
+def test_disappeared_entry_fails():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    del new["c"]
+    failures, _ = compare(new, base)
+    assert any("c:" in f and "disappeared" in f for f in failures)
+
+
+def test_none_values_skip_with_note():
+    base = baseline_tp()
+    base["a"]["fused_vs_host_e2e"] = 1.7
+    new = json.loads(json.dumps(base))
+    new["a"]["fused_vs_host_e2e"] = None  # recorded measurement failure
+    failures, notes = compare(new, base)
+    assert failures == []
+    assert any("fused_vs_host_e2e" in n and "skipped" in n for n in notes)
+
+
+def test_machine_dependent_scaling_key_is_not_guarded():
+    """scaling_vs_1dev tracks the runner's cores, not the code — a slow
+    runner must not fail the gate on it (kernel_bench.check owns it)."""
+    base = baseline_tp()
+    base["a"]["scaling_vs_1dev"] = 1.99
+    new = json.loads(json.dumps(base))
+    new["a"]["scaling_vs_1dev"] = 1.05  # 2-vCPU runner
+    failures, _ = compare(new, base)
+    assert failures == []
+
+
+def test_lower_is_better_ratio_guards_rises_not_drops():
+    base = baseline_tp()
+    base["a"]["antithetic_ci_ratio"] = 0.13
+    new = json.loads(json.dumps(base))
+    new["a"]["antithetic_ci_ratio"] = 0.05  # improvement: passes
+    failures, _ = compare(new, base)
+    assert failures == []
+    new["a"]["antithetic_ci_ratio"] = 0.50  # variance reduction lost
+    failures, _ = compare(new, base)
+    assert any("a.antithetic_ci_ratio" in f and "rose" in f for f in failures)
+
+
+def test_guarded_key_missing_from_surviving_entry_fails():
+    """A guarded key silently dropped from a still-present entry is a
+    schema regression, distinct from an explicit None measurement."""
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    del new["a"]["speedup_vs_loop"]
+    failures, _ = compare(new, base)
+    assert any(
+        "a.speedup_vs_loop" in f and "missing" in f for f in failures
+    )
+
+
+def test_threshold_is_respected():
+    base = baseline_tp()
+    new = json.loads(json.dumps(base))
+    new["a"]["speedup_vs_loop"] = 12.0 * 0.7
+    failures, _ = compare(new, base, threshold=0.5)
+    assert failures == []
+
+
+def test_main_end_to_end(tmp_path):
+    report = {"schema_version": 1, "throughput": baseline_tp()}
+    good = tmp_path / "bench.json"
+    basef = tmp_path / "BENCH_baseline.json"
+    good.write_text(json.dumps(report))
+    basef.write_text(json.dumps(report))
+    assert main([str(good), str(basef)]) == 0
+    bad = dict(report)
+    bad["throughput"] = json.loads(json.dumps(baseline_tp()))
+    bad["throughput"]["a"]["speedup_vs_loop"] = 1.0
+    badf = tmp_path / "bad.json"
+    badf.write_text(json.dumps(bad))
+    assert main([str(badf), str(basef)]) == 1
+    wrong = tmp_path / "wrong.json"
+    wrong.write_text(json.dumps({"schema_version": 2}))
+    assert main([str(wrong), str(basef)]) == 1
