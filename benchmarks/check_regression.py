@@ -58,6 +58,12 @@ RATIO_KEYS = {
 # would fail clean PRs on runner noise.  scaling_vs_1dev — real multi-core
 # speedup, so it tracks the runner's physical cores and contention, not
 # the code; kernel_bench.check already gates it with cores-aware bars.
+# dp_pallas_vs_xla / prng_pallas_vs_xla — the hosting-kernel backend
+# ratios depend on the Pallas execution mode (interpret on CPU, compiled
+# on accelerators; the report's top-level ``backend`` key records which)
+# so a baseline from one mode would wrongly gate runs in the other;
+# kernel_bench.check gates them >1 on compiled backends only, and the
+# rows' absolute ``*_per_sec`` keys still ride the rate guard below.
 
 # lower-is-better ratios: guarded against *rises* past the same threshold
 # (a pure function of the fixed PRNG keys, so runner-independent).

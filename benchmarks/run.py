@@ -27,7 +27,13 @@ streaming), ``mc_driver_throughput`` adds ``fused_vs_per_seed``,
 ``antithetic_ci_ratio`` and ``S`` (one fused seed-axis program vs S
 per-seed dispatches), and ``offline_dp_streaming`` adds
 ``ckpt_vs_materialized`` and ``peak_mem_ratio`` (checkpointed two-pass DP
-backtracking vs the materialized [B, T, K] table).
+backtracking vs the materialized [B, T, K] table).  The hosting-kernel
+backend rows (``dp_minplus_kernel`` / ``counter_prng_kernel``) add their
+``*_pallas_vs_xla`` ratios, and the report itself gains top-level
+``backend`` / ``device_kind`` keys (additive, still schema 1) recording
+which Pallas mode the hosting rows measured ("pallas-interpret" on CPU)
+and ``jax.devices()[0].device_kind`` — so baselines from different
+machines/modes are distinguishable.
 
 ``benchmarks/check_regression.py`` compares a report's ``throughput``
 section against the committed ``BENCH_baseline.json`` (the perf-regression
@@ -142,6 +148,31 @@ def main() -> None:
                     "materialize_seconds": r.get("materialize_seconds"),
                     "B": r.get("B"), "T": r.get("T"),
                 }
+            if isinstance(r, dict) and "dp_pallas_vs_xla" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "xla_dp_slots_instances_per_sec":
+                        r.get("xla_dp_slots_instances_per_sec"),
+                    "pallas_dp_slots_instances_per_sec":
+                        r.get("pallas_dp_slots_instances_per_sec"),
+                    "dp_pallas_vs_xla": r["dp_pallas_vs_xla"],
+                    "identical_bits": r.get("identical_bits"),
+                    "B": r.get("B"), "K": r.get("K"),
+                    "chunk": r.get("chunk"),
+                }
+                report["backend"] = r.get("backend")
+                report["device_kind"] = r.get("device_kind")
+            if isinstance(r, dict) and "prng_pallas_vs_xla" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "xla_prng_draws_per_sec":
+                        r.get("xla_prng_draws_per_sec"),
+                    "pallas_prng_draws_per_sec":
+                        r.get("pallas_prng_draws_per_sec"),
+                    "prng_pallas_vs_xla": r["prng_pallas_vs_xla"],
+                    "identical_bits": r.get("identical_bits"),
+                    "B": r.get("B"), "chunk": r.get("chunk"),
+                }
+                report["backend"] = r.get("backend")
+                report["device_kind"] = r.get("device_kind")
         report["modules"].append({"name": name, "status": status,
                                   "seconds": round(dt, 2),
                                   "n_rows": len(rows)})

@@ -100,11 +100,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.policies.base import PolicyFns
-from repro.core.policies.offline_opt import (dp_backtrack, dp_backtrack_chunk,
+from repro.core.policies.offline_opt import (DP_BACKENDS, dp_backtrack,
+                                             dp_backtrack_chunk,
                                              dp_fetch_matrix, dp_frontier0,
                                              dp_fwd_chunk)
-from repro.core.scenarios.base import Scenario, chunk_geometry
-from repro.core.scenarios.combinators import replicate_seeds
+from repro.core.scenarios.base import PRNG_BACKENDS, Scenario, chunk_geometry
+from repro.core.scenarios.combinators import (replicate_seeds,
+                                              with_prng_backend)
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
                                   schedule_chunk_core)
 from repro.sharding.context import shard_ctx
@@ -725,7 +727,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               include_final_fetch: bool = True,
               stream: bool = False, collect_trace: bool = True,
               n_seeds: Optional[int] = None,
-              antithetic: bool = False) -> FleetResult:
+              antithetic: bool = False,
+              prng_backend: str = "xla") -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -760,15 +763,23 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         flip-capable streams (``scenarios.replicate_seeds(...,
         antithetic=True)``) — same estimator mean, tighter ``mc_summary``
         CIs on monotone statistics.  Requires an even ``n_seeds``.
+      prng_backend: kernel backend for the scenario's counter-keyed
+        uniforms ("xla" default — the canonical reference; "pallas" fuses
+        the fold/salt/uniform chain via ``scenarios.with_prng_backend``).
+        Bit-identical observations either way (requires ``scenario=``).
 
     Every configuration (any mesh size x any chunking x any driver x fused
-    or materialized generation) returns bit-identical results; see
-    tests/test_fleet_engine.py, tests/test_scenarios.py and
-    tests/test_mc_driver.py.
+    or materialized generation — and any ``prng_backend``) returns
+    bit-identical results; see tests/test_fleet_engine.py,
+    tests/test_scenarios.py, tests/test_mc_driver.py and
+    tests/test_backend_dispatch.py.
     """
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
+    _check_backends("xla", prng_backend, scenario)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
+    if scenario is not None:
+        scenario = with_prng_backend(scenario, prng_backend)
     policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
@@ -885,9 +896,26 @@ def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
 # Offline DP on a fleet: chunked forward recursion, frozen past T_i.
 # The chunk-level recursion itself (``dp_fwd_chunk`` / ``dp_backtrack*``)
 # lives in ``policies.offline_opt`` — ONE copy shared by every driver here.
+# ``dp_backend`` threads through every core factory into that one call
+# site (and into the compile-cache keys, so backends never share a trace).
 # ----------------------------------------------------------------------
 
-def _make_dp_instance_core(n_chunks: int, has_svc: bool):
+def _check_backends(dp_backend: str, prng_backend: str,
+                    scenario=None) -> None:
+    """Validate the engine entry points' backend arguments up front."""
+    if dp_backend not in DP_BACKENDS:
+        raise ValueError(f"dp_backend must be one of {DP_BACKENDS}, "
+                         f"got {dp_backend!r}")
+    if prng_backend not in PRNG_BACKENDS:
+        raise ValueError(f"prng_backend must be one of {PRNG_BACKENDS}, "
+                         f"got {prng_backend!r}")
+    if prng_backend != "xla" and scenario is None:
+        raise ValueError("prng_backend= needs scenario=: materialized "
+                         "observations draw no slot uniforms to reroute")
+
+
+def _make_dp_instance_core(n_chunks: int, has_svc: bool,
+                           dp_backend: str = "xla"):
     """Forward DP + reverse backtrack for ONE instance, chunk-capable.
 
     Matches ``offline_opt._dp_core`` op-for-op on valid slots; invalid slots
@@ -910,7 +938,7 @@ def _make_dp_instance_core(n_chunks: int, has_svc: bool):
                 sck = _model1_svc(xck, g)
             tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
             return dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat,
-                                T_len)
+                                T_len, dp_backend)
 
         J_T, args = _chunked_drive(fwd_chunk, dp_frontier0(K), n_chunks,
                                    (x, c, svc))
@@ -919,7 +947,8 @@ def _make_dp_instance_core(n_chunks: int, has_svc: bool):
     return core
 
 
-def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int):
+def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int,
+                           dp_backend: str = "xla"):
     """Scenario-fused forward DP for ONE instance: slabs are generated
     inside the chunk scan (generator state in the carry next to J); the
     recursion itself is ``dp_fwd_chunk``, shared with the obs-backed core."""
@@ -934,7 +963,7 @@ def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int):
             gen_state, slab = sc_chunk(sparams, gen_state, tids)
             sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
             J, args = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask,
-                                   fetch_mat, T_len)
+                                   fetch_mat, T_len, dp_backend)
             return (gen_state, J), args
 
         carry0 = (sc_init(sparams), dp_frontier0(K))
@@ -952,7 +981,8 @@ def _make_dp_scenario_core(sc_init, sc_chunk, n_chunks: int):
 # ----------------------------------------------------------------------
 
 def _make_dp_ckpt_instance_core(n_chunks: int, has_svc: bool,
-                                collect_schedule: bool):
+                                collect_schedule: bool,
+                                dp_backend: str = "xla"):
     """Checkpointed DP for ONE instance, obs-backed.
 
     Pass 1 runs ``dp_fwd_chunk`` over the chunks, emitting each chunk's
@@ -983,7 +1013,7 @@ def _make_dp_ckpt_instance_core(n_chunks: int, has_svc: bool,
                 sck = _model1_svc(xck, g)
             tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
             return dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat,
-                                T_len)
+                                T_len, dp_backend)
 
         def fwd(J, inp):
             t0, xck, cck, sck = inp
@@ -1008,7 +1038,8 @@ def _make_dp_ckpt_instance_core(n_chunks: int, has_svc: bool,
 
 
 def _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
-                                collect_schedule: bool):
+                                collect_schedule: bool,
+                                dp_backend: str = "xla"):
     """Checkpointed DP with fused generation: pass 1 additionally
     checkpoints the generator state at each chunk entry (small — recursion
     state only, the innovations are counter-keyed), so pass 2 regenerates
@@ -1028,7 +1059,7 @@ def _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
             gen2, slab = sc_chunk(sparams, gen_state, tids)
             sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
             J2, args = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask,
-                                    fetch_mat, T_len)
+                                    fetch_mat, T_len, dp_backend)
             return gen2, J2, args
 
         def fwd(carry, tids):
@@ -1056,18 +1087,22 @@ def _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_dp_core(n_chunks: int, has_svc: bool, mesh: Mesh):
-    core = _make_dp_instance_core(n_chunks, has_svc)
+def _compiled_dp_core(n_chunks: int, has_svc: bool, mesh: Mesh,
+                      dp_backend: str = "xla"):
+    core = _make_dp_instance_core(n_chunks, has_svc, dp_backend)
     spec = P(FLEET_AXIS)
     sharded = shard_map(jax.vmap(core), mesh=mesh,
                         in_specs=(spec,) * (7 + int(has_svc)),
-                        out_specs=(spec, spec))
+                        out_specs=(spec, spec),
+                        # pallas_call has no replication rule
+                        check_rep=dp_backend == "xla")
     return jax.jit(sharded)
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh):
-    core = _make_dp_scenario_core(sc_init, sc_chunk, n_chunks)
+def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh,
+                               dp_backend: str = "xla"):
+    core = _make_dp_scenario_core(sc_init, sc_chunk, n_chunks, dp_backend)
     spec = P(FLEET_AXIS)
     sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)),
                         mesh=mesh, in_specs=(spec,) * 6 + (P(),),
@@ -1077,21 +1112,25 @@ def _compiled_dp_scenario_core(sc_init, sc_chunk, n_chunks: int, mesh: Mesh):
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_ckpt_core(n_chunks: int, has_svc: bool,
-                           collect_schedule: bool, mesh: Mesh):
-    core = _make_dp_ckpt_instance_core(n_chunks, has_svc, collect_schedule)
+                           collect_schedule: bool, mesh: Mesh,
+                           dp_backend: str = "xla"):
+    core = _make_dp_ckpt_instance_core(n_chunks, has_svc, collect_schedule,
+                                       dp_backend)
     spec = P(FLEET_AXIS)
     out_specs = (spec, spec) if collect_schedule else spec
     sharded = shard_map(jax.vmap(core), mesh=mesh,
                         in_specs=(spec,) * (7 + int(has_svc)),
-                        out_specs=out_specs)
+                        out_specs=out_specs,
+                        check_rep=dp_backend == "xla")
     return jax.jit(sharded)
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
-                                    collect_schedule: bool, mesh: Mesh):
+                                    collect_schedule: bool, mesh: Mesh,
+                                    dp_backend: str = "xla"):
     core = _make_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks,
-                                       collect_schedule)
+                                       collect_schedule, dp_backend)
     spec = P(FLEET_AXIS)
     out_specs = (spec, spec) if collect_schedule else spec
     sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, 0, 0, 0, None)),
@@ -1104,7 +1143,8 @@ def _compiled_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
 # chunk at a time, so neither obs nor r_hist is ever device-resident whole.
 
 @functools.lru_cache(maxsize=32)
-def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh):
+def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh,
+                            dp_backend: str = "xla"):
     """One forward slab of the value recursion: ``J -> J'``."""
 
     def step(M, lv, g, kmask, T_len, t0, J, xck, cck, *opt):
@@ -1112,7 +1152,8 @@ def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh):
         fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
         sck = opt[0] if has_svc else _model1_svc(xck, g)
         tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
-        J2, _ = dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len)
+        J2, _ = dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat,
+                             T_len, dp_backend)
         return J2
 
     n_opt = int(has_svc)
@@ -1120,12 +1161,14 @@ def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh):
     spec = P(FLEET_AXIS)
     in_specs = (spec,) * 5 + (P(),) + (spec,) * (3 + n_opt)
     sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
-                        in_specs=in_specs, out_specs=spec)
+                        in_specs=in_specs, out_specs=spec,
+                        check_rep=dp_backend == "xla")
     return jax.jit(sharded)
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh):
+def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh,
+                            dp_backend: str = "xla"):
     """One backward slab: recompute the chunk's argmins from its checkpoint
     and backtrack through them — ``(J_ckpt, k) -> (k_entry, r_chunk)``."""
 
@@ -1135,7 +1178,7 @@ def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh):
         sck = opt[0] if has_svc else _model1_svc(xck, g)
         tids = t0 + jnp.arange(xck.shape[-1], dtype=jnp.int32)
         _, args = dp_fwd_chunk(Jck, tids, cck, sck, lv32, kmask, fetch_mat,
-                               T_len)
+                               T_len, dp_backend)
         k0, rck = dp_backtrack_chunk(k, args)
         return k0, rck.astype(jnp.int32)
 
@@ -1144,13 +1187,14 @@ def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh):
     spec = P(FLEET_AXIS)
     in_specs = (spec,) * 5 + (P(),) + (spec,) * (4 + n_opt)
     sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
-                        in_specs=in_specs, out_specs=(spec, spec))
+                        in_specs=in_specs, out_specs=(spec, spec),
+                        check_rep=dp_backend == "xla")
     return jax.jit(sharded)
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
-                                     mesh: Mesh):
+                                     mesh: Mesh, dp_backend: str = "xla"):
     """One fused-generation forward slab: the host ships one scalar offset
     per chunk; ``(gen_state, J) -> (gen', J')``."""
 
@@ -1162,7 +1206,7 @@ def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
         gen2, slab = sc_chunk(sparams, gen_state, tids)
         sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
         J2, _ = dp_fwd_chunk(J, tids, slab.c, sck, lv32, kmask, fetch_mat,
-                             T_len)
+                             T_len, dp_backend)
         return gen2, J2
 
     spec = P(FLEET_AXIS)
@@ -1175,7 +1219,7 @@ def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_scenario_stream_bwd(sc_init, sc_chunk, chunk: int,
-                                     mesh: Mesh):
+                                     mesh: Mesh, dp_backend: str = "xla"):
     """One fused-generation backward slab: regenerate the chunk from its
     generator-state checkpoint, recompute its argmins, backtrack."""
 
@@ -1186,7 +1230,7 @@ def _compiled_dp_scenario_stream_bwd(sc_init, sc_chunk, chunk: int,
         _, slab = sc_chunk(sparams, gen_ck, tids)
         sck = slab.svc if slab.svc is not None else _model1_svc(slab.x, g)
         _, args = dp_fwd_chunk(Jck, tids, slab.c, sck, lv32, kmask, fetch_mat,
-                               T_len)
+                               T_len, dp_backend)
         k0, rck = dp_backtrack_chunk(k, args)
         return k0, rck.astype(jnp.int32)
 
@@ -1205,7 +1249,8 @@ def _dp_grid_args(padded: FleetBatch):
 
 
 def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
-                       checkpointed: bool, collect_schedule: bool):
+                       checkpointed: bool, collect_schedule: bool,
+                       dp_backend: str = "xla"):
     """(compiled device-scan DP core, its args) for this config — shared by
     ``offline_opt_fleet`` and ``offline_dp_memory_stats`` so the probed
     program is exactly the executed one."""
@@ -1215,19 +1260,19 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
         if checkpointed:
             core = _compiled_dp_ckpt_scenario_core(
                 scenario.init_fn, scenario.chunk_fn, n_chunks,
-                collect_schedule, mesh)
+                collect_schedule, mesh, dp_backend)
         else:
             core = _compiled_dp_scenario_core(scenario.init_fn,
                                               scenario.chunk_fn, n_chunks,
-                                              mesh)
+                                              mesh, dp_backend)
         args = (sparams,) + grid_args + (jnp.arange(T_pad, dtype=jnp.int32),)
     else:
         has_svc = padded.svc is not None
         if checkpointed:
             core = _compiled_dp_ckpt_core(n_chunks, has_svc, collect_schedule,
-                                          mesh)
+                                          mesh, dp_backend)
         else:
-            core = _compiled_dp_core(n_chunks, has_svc, mesh)
+            core = _compiled_dp_core(n_chunks, has_svc, mesh, dp_backend)
         args = grid_args + (jnp.asarray(padded.x), jnp.asarray(padded.c))
         if has_svc:
             args += (jnp.asarray(padded.svc),)
@@ -1235,7 +1280,7 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
 
 
 def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
-                      collect_schedule: bool):
+                      collect_schedule: bool, dp_backend: str = "xla"):
     """Host-driven checkpointed DP: forward loop collecting per-chunk
     frontier (+ generator-state) checkpoints in a device-resident list,
     then a backward loop replaying the chunks in reverse.  With a scenario
@@ -1247,14 +1292,16 @@ def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
     if scenario is not None:
         sparams = _pad_params(scenario.params, padded.B)
         fwd = _compiled_dp_scenario_stream_fwd(scenario.init_fn,
-                                               scenario.chunk_fn, chunk, mesh)
+                                               scenario.chunk_fn, chunk,
+                                               mesh, dp_backend)
         bwd = _compiled_dp_scenario_stream_bwd(scenario.init_fn,
-                                               scenario.chunk_fn, chunk, mesh)
+                                               scenario.chunk_fn, chunk,
+                                               mesh, dp_backend)
         gen0 = jax.jit(jax.vmap(scenario.init_fn))(sparams)
     else:
         has_svc = padded.svc is not None
-        fwd = _compiled_dp_stream_fwd(has_svc, mesh)
-        bwd = _compiled_dp_stream_bwd(has_svc, mesh)
+        fwd = _compiled_dp_stream_fwd(has_svc, mesh, dp_backend)
+        bwd = _compiled_dp_stream_bwd(has_svc, mesh, dp_backend)
         x_h, c_h = np.asarray(padded.x), np.asarray(padded.c)
         svc_h = None if not has_svc else np.asarray(padded.svc)
 
@@ -1303,7 +1350,9 @@ def offline_dp_memory_stats(fleet: FleetBatch, *,
                             checkpointed: bool = False,
                             collect_schedule: bool = True,
                             n_seeds: Optional[int] = None,
-                            antithetic: bool = False) -> dict:
+                            antithetic: bool = False,
+                            dp_backend: str = "xla",
+                            prng_backend: str = "xla") -> dict:
     """XLA-reported memory of the compiled device-scan DP core for this
     config, WITHOUT running it: ``{"argument_bytes", "output_bytes",
     "temp_bytes"}``.  The probed program is built by the same
@@ -1318,12 +1367,15 @@ def offline_dp_memory_stats(fleet: FleetBatch, *,
         # same contract as offline_opt_fleet — never report a program the
         # solver would refuse to run
         raise ValueError("collect_schedule=False requires checkpointed=True")
+    _check_backends(dp_backend, prng_backend, scenario)
     fleet, scenario, _ = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     if scenario is not None:
         _check_scenario(scenario, fleet)
+        scenario = with_prng_backend(scenario, prng_backend)
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     core, args = _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
-                                    checkpointed, collect_schedule)
+                                    checkpointed, collect_schedule,
+                                    dp_backend)
     stats = core.lower(*args).compile().memory_analysis()
     return {"argument_bytes": int(stats.argument_size_in_bytes),
             "output_bytes": int(stats.output_size_in_bytes),
@@ -1338,7 +1390,9 @@ def offline_opt_fleet(fleet: FleetBatch, *,
                       antithetic: bool = False,
                       checkpointed: bool = False,
                       stream: bool = False,
-                      collect_schedule: bool = True) -> FleetOfflineResult:
+                      collect_schedule: bool = True,
+                      dp_backend: str = "xla",
+                      prng_backend: str = "xla") -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
     time, each instance solved at its own horizon.  With ``scenario=...``
     the observations are generated on device inside the forward recursion
@@ -1360,7 +1414,14 @@ def offline_opt_fleet(fleet: FleetBatch, *,
     ``collect_schedule=False`` (checkpointed only) skips the backtrack and
     the schedule evaluation altogether and returns cost-only results
     (``r_hist`` / ``sim`` are None) — the cheapest way to price OPT at
-    horizons where even the [B, T] schedule is unwelcome."""
+    horizons where even the [B, T] schedule is unwelcome.
+
+    ``dp_backend`` selects the min-plus relaxation engine inside every
+    driver above ("xla" default / "pallas" — see ``dp_fwd_chunk``);
+    ``prng_backend`` the scenario's counter-keyed uniform engine (as in
+    ``run_fleet``).  Backends are a pure performance knob: costs,
+    schedules and sim results are bit-identical across every combination
+    (tests/test_backend_dispatch.py)."""
     if stream and not checkpointed:
         raise ValueError("stream=True requires checkpointed=True (the "
                          "materialized backtrack needs the whole table)")
@@ -1368,17 +1429,20 @@ def offline_opt_fleet(fleet: FleetBatch, *,
         raise ValueError("stream=True requires chunk_size")
     if not collect_schedule and not checkpointed:
         raise ValueError("collect_schedule=False requires checkpointed=True")
+    _check_backends(dp_backend, prng_backend, scenario)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     if scenario is not None:
         _check_scenario(scenario, fleet)
+        scenario = with_prng_backend(scenario, prng_backend)
     if stream:
         cost, r_hist = _dp_ckpt_streamed(scenario, padded, mesh, n_chunks,
-                                         T_pad, collect_schedule)
+                                         T_pad, collect_schedule, dp_backend)
     else:
         core, args = _dp_scan_core_args(scenario, padded, mesh, n_chunks,
-                                        T_pad, checkpointed, collect_schedule)
+                                        T_pad, checkpointed, collect_schedule,
+                                        dp_backend)
         with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
             out = core(*args)
         cost, r_hist = out if collect_schedule else (out, None)
@@ -1468,17 +1532,22 @@ def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
                             mesh: Optional[Mesh] = None,
                             chunk_size: Optional[int] = None,
                             n_seeds: Optional[int] = None,
-                            antithetic: bool = False) -> FleetResult:
+                            antithetic: bool = False,
+                            prng_backend: str = "xla") -> FleetResult:
     """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
     instance's T contribute nothing (and charge no fetch).  With
     ``scenario=...`` the priced observations are generated on device;
     ``n_seeds=S`` prices the schedules on S seed-replicas of the scenario
     (``r_hist`` rows may be [B] — repeated per replica — or the full
     [B*S] replication; ``antithetic=True`` pairs the replicas as in
-    ``run_fleet``)."""
+    ``run_fleet``).  ``prng_backend`` selects the counter-keyed uniform
+    engine as in ``run_fleet`` (bit-identical performance knob)."""
     dt = default_float_dtype()
     B_orig = fleet.B
+    _check_backends("xla", prng_backend, scenario)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
+    if scenario is not None:
+        scenario = with_prng_backend(scenario, prng_backend)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
     r = np.asarray(r_hist, np.int32)

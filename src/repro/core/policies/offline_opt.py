@@ -32,6 +32,17 @@ identical frontier, the checkpointed schedule is **bit-identical** to the
 materialized one wherever both fit, which is what extends exact OPT to the
 same T = 10^6-10^7 horizons as ``run_fleet(collect_trace=False)``.
 
+**Kernel/reference split** — ``dp_fwd_chunk`` is also the engine's
+backend-dispatch point: ``backend="xla"`` (the default everywhere) runs
+the ``lax.scan`` written below, which is the *canonical reference*
+semantics of the recursion; ``backend="pallas"`` routes the identical
+per-slot op sequence through the fused ``kernels.hosting.dp_minplus_kc``
+kernel (frontier held in VMEM across the chunk, interpret mode on CPU).
+The two are proven **bit-identical** — exact equality of ``(J', args)``,
+not allclose — in tests/test_kernels.py and tests/test_backend_dispatch.py
+for every driver configuration; any future backend must ship the same
+proof before the fleet layer will thread it (ROADMAP engine invariants).
+
 ``OPT`` (no partial hosting, the benchmark of [22]) is the same DP on the
 2-level instance. Exhaustive-search cross-checks live in the tests.
 """
@@ -83,13 +94,28 @@ def dp_fetch_matrix(M32, lv32):
     return M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
 
 
-def dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len):
+#: Valid ``backend=`` values for ``dp_fwd_chunk`` (and the ``dp_backend=``
+#: arguments threaded through ``core.fleet``): "xla" is the canonical
+#: ``lax.scan`` reference, "pallas" the fused ``kernels.hosting`` kernel —
+#: bit-identical by the engine's backend-dispatch invariant (ROADMAP.md).
+DP_BACKENDS = ("xla", "pallas")
+
+
+def dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len,
+                 backend: str = "xla"):
     """One chunk of the forward value recursion — THE one copy every fleet
     DP driver shares (materialized backpointers, checkpointed two-pass,
     obs-backed and scenario-fused, scan and streamed), so all of them are
     op-for-op the same recursion.  Invalid slots (``t >= T_len``) keep the
     frontier frozen and write identity argmins; padded K levels are priced
     ``+inf`` via ``kmask`` exactly as in ``offline_opt_batch``.
+
+    ``backend`` selects the relaxation engine *under* the shared cost
+    assembly: "xla" (default) is the ``lax.scan`` below — the canonical
+    reference — and "pallas" routes the identical per-slot op sequence
+    through ``kernels.hosting.dp_minplus_kc``, which keeps the [K]
+    frontier kernel-resident across the whole chunk.  Both emit
+    bit-identical ``(J', args)`` for every input.
 
     Returns ``(J', args [chunk, K])``.
     """
@@ -98,6 +124,15 @@ def dp_fwd_chunk(J, tids, cck, sck, lv32, kmask, fetch_mat, T_len):
     wck = (cck[:, None].astype(jnp.float32) * lv32[None, :]
            + sck.astype(jnp.float32))
     wck = jnp.where(kmask[None, :], wck, jnp.inf)
+
+    if backend == "pallas":
+        # lazy import: the kernels package (and Pallas) loads only when a
+        # non-default backend is actually requested
+        from repro.kernels.hosting import dp_minplus_kc
+        return dp_minplus_kc(J, wck, fetch_mat, tids < T_len)
+    if backend != "xla":
+        raise ValueError(f"backend must be one of {DP_BACKENDS}, "
+                         f"got {backend!r}")
 
     def fwd(J_prev, inp):
         t, w_t = inp

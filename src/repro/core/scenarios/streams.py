@@ -91,13 +91,15 @@ def poisson_arrivals(key, lam, B: int) -> Stream:
 
 def _ge_emit(key, tids, rates, emission: str, salt: int):
     """Per-slot emissions at per-slot rates (counter-keyed)."""
-    ks = slot_keys(key, tids)
-    ks = jax.vmap(lambda k: jax.random.fold_in(k, salt))(ks)
     if emission == "poisson":
+        ks = slot_keys(key, tids)
+        ks = jax.vmap(lambda k: jax.random.fold_in(k, salt))(ks)
         return jax.vmap(
             lambda k, r: jax.random.poisson(k, r, ()))(ks, rates).astype(jnp.int32)
     if emission == "bernoulli":
-        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(ks)
+        # the fold/salt/uniform chain IS slot_uniform's — draw through it
+        # so GE bernoulli emissions ride the PRNG backend dispatch too
+        u = slot_uniform(key, tids, salt=salt)
         return (u < rates).astype(jnp.int32)
     raise ValueError(emission)
 

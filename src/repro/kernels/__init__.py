@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the repo's compute hot-spots.
+
+Layout: one ``<name>.py`` per kernel family (``flash_attention``,
+``ssd_scan``, ``hosting`` — the DP min-plus recursion and the counter-keyed
+PRNG), jitted public wrappers in ``ops.py``, pure-jnp oracles in ``ref.py``,
+shared padding/block plumbing in ``utils.py``.
+
+The ``interpret=True``-on-CPU convention
+----------------------------------------
+Every wrapper takes an ``interpret`` flag.  On CPU (the test/CI platform)
+there is no Mosaic backend, so ``interpret=True`` is the only executable
+path: the kernel body runs through the Pallas interpreter as plain XLA
+ops — semantically (and for the hosting kernels *bitwise*) identical to
+the compiled lowering, but NOT a TPU performance proxy.  Wrappers called
+from the engine resolve ``interpret=None`` via ``utils.default_interpret``
+(True iff ``jax.default_backend() == "cpu"``); benchmarks record which leg
+they measured (``backend`` / ``device_kind`` keys in ``benchmarks/run.py
+--json``).  On real TPU pass ``interpret=False`` (or rely on the default
+resolution) to get the compiled kernel.
+"""

@@ -1,0 +1,184 @@
+"""Pallas kernels for the hosting engine's two per-slot hot paths.
+
+1. ``dp_minplus_kc`` — the offline-OPT forward recursion
+   (``offline_opt.dp_fwd_chunk``'s scan body) fused over a whole [chunk] of
+   slots: the [K] value frontier stays in registers/VMEM across the slot
+   loop instead of round-tripping through a ``lax.scan`` carry, and the
+   kernel emits the [chunk, K] argmin table for backtracking.  Frontier
+   freezing past ``T_len`` (identity argmins on invalid slots) and ``+inf``
+   pricing of padded K levels ride in unchanged: invalid slots carry ``J``
+   through and write ``iota`` rows, and ``+inf`` entries of ``w``/``fetch``
+   propagate through min/argmin exactly as in the XLA reference.
+
+2. ``slot_uniform_tc`` — the counter-keyed uniform draw of
+   ``scenarios.base.slot_uniform`` with the whole threefry2x32 chain
+   (``fold_in(key, t)`` -> optional salt fold -> uniform bits) fused into
+   one kernel pass per [chunk] of slots, instead of 2-3 vmapped
+   ``jax.random`` dispatches per chunk.
+
+Both kernels are **bit-identical** to their ``jax.random`` / ``lax.scan``
+references — same hash, same u->bits mapping, same float op order — which
+is what lets the engine treat backend choice as a pure performance knob
+(see the backend-dispatch invariant in ROADMAP.md).  The batched [B] form
+is ``jax.vmap`` of the per-instance kernel: Pallas lifts the vmap onto a
+leading grid axis, so the fleet engine's existing per-instance vmap is the
+blocking over [B].
+
+The threefry2x32 implementation below (rotation schedule, key schedule,
+counter layout) mirrors jax's; ``tests/test_kernels.py`` pins exact bit
+equality against ``jax.random.fold_in`` / ``uniform`` across random keys,
+salts and non-aligned chunk sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.utils import default_interpret, pad_to
+
+# Slot axis is padded to this multiple (f32 sublane count on TPU); padded
+# DP slots run as frozen (valid=False) slots, padded PRNG counters draw
+# dead uniforms — both sliced off by the wrappers.
+_SLOT_MULT = 8
+
+
+# ----------------------------------------------------------------------
+# threefry2x32 (the jax.random hash), as plain jnp ops: traceable inside a
+# Pallas kernel body and usable standalone as an XLA reference.
+# ----------------------------------------------------------------------
+
+_ROTS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """One threefry2x32 block: hash counter words ``(x0, x1)`` under key
+    ``(k0, k1)``; all args uint32 arrays (broadcastable).  Bit-identical to
+    jax's ``threefry2x32`` primitive — 20 rounds, 5 key injections."""
+    k2 = k0 ^ k1 ^ _PARITY
+    ks = (k0, k1, k2)
+    x0 = x0 + k0
+    x1 = x1 + k1
+    for r in range(5):
+        for rot in _ROTS[r % 2]:
+            x0 = x0 + x1
+            x1 = (x1 << rot) | (x1 >> (32 - rot))
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(r + 1) % 3]
+        x1 = x1 + ks[(r + 2) % 3] + np.uint32(r + 1)
+    return x0, x1
+
+
+def threefry_fold(k0, k1, d):
+    """``jax.random.fold_in((k0, k1), d)`` on raw uint32 words: hash the
+    fold data as a 1-word counter; the output pair is the folded key."""
+    return threefry2x32(k0, k1, jnp.zeros_like(d), d)
+
+
+def uniform_from_bits(bits):
+    """jax's uint32 -> U(0,1) float32 mapping: splice the top 23 random
+    bits into a [1, 2) float, subtract 1.  The trailing ``maximum`` mirrors
+    ``jax.random.uniform``'s clamp op-for-op (a bitwise no-op here since
+    the result is already >= 0)."""
+    fb = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
+    u = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    return jnp.maximum(np.float32(0.0), u)
+
+
+# ----------------------------------------------------------------------
+# Kernel 1: fused DP min-plus forward chunk.
+# ----------------------------------------------------------------------
+
+def _dp_minplus_kernel(j_ref, w_ref, f_ref, valid_ref, jout_ref, args_ref,
+                       *, chunk: int, K: int):
+    fetch = f_ref[...]                            # [K, K], VMEM-resident
+    iota = jax.lax.iota(jnp.int32, K)
+
+    def body(t, J):
+        # the exact op order of dp_fwd_chunk's scan body — argmin before
+        # min matters for nothing, but where/add order does for bits
+        trans = J[:, None] + fetch                # [K_prev, K_next]
+        arg = jnp.argmin(trans, axis=0)
+        Jn = jnp.min(trans, axis=0) + w_ref[t, :]
+        v = valid_ref[t]
+        Jn = jnp.where(v, Jn, J)
+        arg = jnp.where(v, arg, iota)
+        args_ref[t, :] = arg
+        return Jn
+
+    jout_ref[...] = jax.lax.fori_loop(0, chunk, body, j_ref[...])
+
+
+def dp_minplus_kc(J, wck, fetch_mat, valid, *, interpret=None):
+    """One instance, one chunk of the DP forward recursion.
+
+    Args: ``J`` [K] float32 entry frontier; ``wck`` [chunk, K] float32
+    per-slot holding costs (``+inf`` on masked levels); ``fetch_mat``
+    [K, K] float32; ``valid`` [chunk] bool (``tids < T_len``).
+    Returns ``(J' [K], args [chunk, K] int32)`` — bit-identical to the
+    ``lax.scan`` body in ``offline_opt.dp_fwd_chunk``.
+
+    Batched use is ``jax.vmap`` over a leading [B] axis (Pallas turns that
+    into the batch grid dimension).  The slot axis is padded to a sublane
+    multiple with *frozen* slots (valid=False carries J through and writes
+    identity argmins), so padding is exact by the same invariant that
+    freezes real slots past ``T_len``.
+    """
+    chunk, K = wck.shape
+    if interpret is None:
+        interpret = default_interpret()
+    wck, _ = pad_to(wck, 0, _SLOT_MULT)
+    valid, _ = pad_to(valid, 0, _SLOT_MULT)       # pads False -> frozen
+    chunk_p = wck.shape[0]
+    kernel = functools.partial(_dp_minplus_kernel, chunk=chunk_p, K=K)
+    Jout, args = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((K,), jnp.float32),
+                   jax.ShapeDtypeStruct((chunk_p, K), jnp.int32)],
+        interpret=interpret,
+    )(J.astype(jnp.float32), wck.astype(jnp.float32),
+      fetch_mat.astype(jnp.float32), valid)
+    return Jout, args[:chunk]
+
+
+# ----------------------------------------------------------------------
+# Kernel 2: fused counter-keyed uniform generation.
+# ----------------------------------------------------------------------
+
+def _slot_uniform_kernel(key_ref, t_ref, u_ref, *, salt):
+    k0 = key_ref[0]
+    k1 = key_ref[1]
+    t = t_ref[...].astype(jnp.uint32)
+    z = jnp.zeros_like(t)
+    a0, a1 = threefry2x32(k0, k1, z, t)           # fold_in(key, t)
+    if salt is not None:
+        a0, a1 = threefry2x32(a0, a1, z, jnp.full_like(t, np.uint32(salt)))
+    bits, _ = threefry2x32(a0, a1, z, z)          # random_bits(key, 32, ())
+    u_ref[...] = uniform_from_bits(bits)
+
+
+def slot_uniform_tc(key, tids, salt=None, *, interpret=None):
+    """One instance, one chunk of counter-keyed U(0,1) draws.
+
+    Args: ``key`` raw uint32 [2] PRNG key; ``tids`` [chunk] int32 global
+    slot counters; ``salt`` optional *static* int sub-stream fold.
+    Returns [chunk] float32 — bit-identical to
+    ``scenarios.base.slot_uniform``'s vmapped ``fold_in`` + ``uniform``
+    chain.  Batched use is ``jax.vmap`` over [B, 2] keys.
+    """
+    chunk = tids.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    tids, _ = pad_to(tids, 0, _SLOT_MULT)         # dead counters, sliced off
+    kernel = functools.partial(_slot_uniform_kernel,
+                               salt=None if salt is None else int(salt))
+    u = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(tids.shape, jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(key, jnp.uint32), tids)
+    return u[:chunk]

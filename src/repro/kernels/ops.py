@@ -1,6 +1,9 @@
 """Jitted public wrappers around the Pallas kernels: layout handling,
 padding to block multiples, and dtype plumbing.  ``interpret`` defaults to
 True (CPU validation); on real TPU pass interpret=False.
+
+Padding/block-fitting arithmetic lives in ``kernels.utils`` (one shared
+copy, also used by the hosting kernels' own wrappers).
 """
 from __future__ import annotations
 
@@ -11,16 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.hosting import dp_minplus_kc, slot_uniform_tc
 from repro.kernels.ssd_scan import ssd_scan_bhcqd
-
-
-def _pad_to(x, axis, mult):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x, 0
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), pad
+from repro.kernels.utils import fit_block, pad_to as _pad_to
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_offset", "bq", "bk",
@@ -32,8 +28,8 @@ def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
     qb = jnp.moveaxis(q, 2, 1)                    # [B,H,S,hd]
     kb = jnp.moveaxis(k, 2, 1)
     vb = jnp.moveaxis(v, 2, 1)
-    bq = min(bq, max(16, 1 << (sq - 1).bit_length()))
-    bk = min(bk, max(16, 1 << (k.shape[1] - 1).bit_length()))
+    bq = fit_block(bq, sq)
+    bk = fit_block(bk, k.shape[1])
     qb, pq = _pad_to(qb, 2, bq)
     kb, pk = _pad_to(kb, 2, bk)
     vb, _ = _pad_to(vb, 2, bk)
@@ -49,7 +45,7 @@ def ssd_scan(x, dt, A, B, C, h0=None, chunk: int = 128, interpret: bool = True):
     h0 [b,nh,dh,ds] or None.  Returns (y [b,s,nh,dh], hT)."""
     b, s, nh, dh = x.shape
     ng, ds = B.shape[2], B.shape[3]
-    q = min(chunk, max(16, 1 << (s - 1).bit_length()))
+    q = fit_block(chunk, s)
     xp, pad = _pad_to(x, 1, q)
     dtp, _ = _pad_to(dt, 1, q)         # padded dt=0 -> decay 1, input 0: no-op
     Bp, _ = _pad_to(B, 1, q)
@@ -65,3 +61,33 @@ def ssd_scan(x, dt, A, B, C, h0=None, chunk: int = 128, interpret: bool = True):
                            h0.astype(jnp.float32), interpret=interpret)
     y = jnp.moveaxis(y, 1, 3).reshape(b, nc * q, nh, dh)[:, :s]
     return y, hT
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dp_minplus(J, wck, fetch_mat, valid, interpret: bool = True):
+    """Fused DP min-plus forward chunk (``hosting.dp_minplus_kc``).
+
+    Per-instance: J [K], wck [chunk, K], fetch_mat [K, K], valid [chunk];
+    batched: a leading [B] axis on every arg.  Returns ``(J', args)`` —
+    bit-identical to ``offline_opt.dp_fwd_chunk``'s scan.
+    """
+    if J.ndim == 2:
+        return jax.vmap(lambda j, w, f, v: dp_minplus_kc(
+            j, w, f, v, interpret=interpret))(J, wck, fetch_mat, valid)
+    return dp_minplus_kc(J, wck, fetch_mat, valid, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("salt", "interpret"))
+def counter_uniforms(keys, tids, salt=None, interpret: bool = True):
+    """Fused counter-keyed uniforms (``hosting.slot_uniform_tc``).
+
+    ``keys`` raw uint32 [2] (one instance) or [B, 2]; ``tids`` [chunk]
+    int32 slot counters; ``salt`` optional static int.  Returns [chunk]
+    or [B, chunk] float32, bit-identical to
+    ``scenarios.base.slot_uniform``.
+    """
+    keys = jnp.asarray(keys)
+    if keys.ndim == 2:
+        return jax.vmap(lambda k: slot_uniform_tc(
+            k, tids, salt, interpret=interpret))(keys)
+    return slot_uniform_tc(keys, tids, salt, interpret=interpret)

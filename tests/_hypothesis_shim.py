@@ -3,8 +3,8 @@ test suite uses, installed by conftest.py only when the real package is
 missing (offline containers).  Deterministic: every test draws from an RNG
 seeded by its own name, so runs are reproducible; there is no shrinking.
 
-Covered: given, settings, strategies.{integers, sampled_from, lists,
-permutations, composite} and Strategy.map.  If a test starts using more of
+Covered: given, settings, strategies.{integers, sampled_from, lists, none,
+one_of, permutations, composite} and Strategy.map.  If a test starts using more of
 hypothesis, extend this shim or add the real dependency
 (requirements-dev.txt).
 """
@@ -42,6 +42,15 @@ def lists(elements, min_size=0, max_size=10):
         n = rng.randint(min_size, max_size)
         return [elements._draw(rng) for _ in range(n)]
     return Strategy(draw)
+
+
+def none():
+    return Strategy(lambda rng: None)
+
+
+def one_of(*strategies):
+    return Strategy(
+        lambda rng: strategies[rng.randrange(len(strategies))]._draw(rng))
 
 
 def permutations(seq):
@@ -97,8 +106,8 @@ def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
 def install():
     """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "sampled_from", "lists", "permutations",
-                 "composite"):
+    for name in ("integers", "sampled_from", "lists", "none", "one_of",
+                 "permutations", "composite"):
         setattr(st, name, globals()[name])
     st.Strategy = Strategy
     hyp = types.ModuleType("hypothesis")
