@@ -64,6 +64,13 @@ RATIO_KEYS = {
 # so a baseline from one mode would wrongly gate runs in the other;
 # kernel_bench.check gates them >1 on compiled backends only, and the
 # rows' absolute ``*_per_sec`` keys still ride the rate guard below.
+# async_vs_sync — the ingestion-overlap win needs a spare physical core
+# for the prefetch thread, so it tracks the runner's core count and load
+# like scaling_vs_1dev does; kernel_bench.check gates it >= 0.9 in-row
+# and the row's ``*_per_sec`` rates ride the machine-normalized guard.
+# ``*_latency_us`` keys (live_fleet_step p50/p99) are absolute wall times
+# with no per-key normalization story; the row's
+# ``live_slots_admitted_per_sec`` rate carries the gated trajectory.
 
 # lower-is-better ratios: guarded against *rises* past the same threshold
 # (a pure function of the fixed PRNG keys, so runner-independent).

@@ -27,7 +27,13 @@ streaming), ``mc_driver_throughput`` adds ``fused_vs_per_seed``,
 ``antithetic_ci_ratio`` and ``S`` (one fused seed-axis program vs S
 per-seed dispatches), and ``offline_dp_streaming`` adds
 ``ckpt_vs_materialized`` and ``peak_mem_ratio`` (checkpointed two-pass DP
-backtracking vs the materialized [B, T, K] table).  The hosting-kernel
+backtracking vs the materialized [B, T, K] table).  ``live_fleet_step``
+adds ``live_slots_admitted_per_sec`` plus ``p50_step_latency_us`` /
+``p99_step_latency_us`` (the persistent chunk=1 ``fleet_stepper`` at its
+widest measured fleet), and ``stream_overlap`` adds
+``async_stream_slots_instances_per_sec`` / ``async_vs_sync`` (double
+buffered prefetch vs the synchronous slab feed, bit-equality asserted
+in-row).  The hosting-kernel
 backend rows (``dp_minplus_kernel`` / ``counter_prng_kernel``) add their
 ``*_pallas_vs_xla`` ratios, and the report itself gains top-level
 ``backend`` / ``device_kind`` keys (additive, still schema 1) recording
@@ -138,6 +144,26 @@ def main() -> None:
                     "ckpt_vs_materialized": r["ckpt_vs_materialized"],
                     "peak_mem_ratio": r.get("peak_mem_ratio"),
                     "B": r.get("B"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "live_slots_admitted_per_sec" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "live_slots_admitted_per_sec":
+                        r["live_slots_admitted_per_sec"],
+                    "p50_step_latency_us": r.get("p50_step_latency_us"),
+                    "p99_step_latency_us": r.get("p99_step_latency_us"),
+                    "zero_retraces": r.get("zero_retraces"),
+                    "widths": r.get("widths"), "n_steps": r.get("n_steps"),
+                }
+            if isinstance(r, dict) and "async_vs_sync" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "sync_stream_slots_instances_per_sec":
+                        r.get("sync_stream_slots_instances_per_sec"),
+                    "async_stream_slots_instances_per_sec":
+                        r.get("async_stream_slots_instances_per_sec"),
+                    "async_vs_sync": r["async_vs_sync"],
+                    "identical_bits": r.get("identical_bits"),
+                    "B": r.get("B"), "T": r.get("T"),
+                    "chunk": r.get("chunk"),
                 }
             if isinstance(r, dict) and "fused_vs_stream" in r:
                 report["throughput"][r.get("name", name)] = {

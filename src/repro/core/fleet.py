@@ -84,12 +84,47 @@ shard_map/chunking/streaming); results carry ``n_seeds`` and a
 Student-t 95% CI half-widths (tests/test_mc_driver.py).  ``antithetic=True``
 pairs the replicas (2m, 2m+1) on flip-capable streams — shared pair fold,
 odd member flips every uniform — cutting CI width at the same S.
+
+**Persistent stepper & async ingestion** — the ``stream=True`` drivers
+(simulation and the checkpointed-DP forward pass) are thin loops over ONE
+persistent ``FleetStepper``: a pre-compiled slab step from the
+module-level ``functools.lru_cache`` factories, with the ``(state,
+accumulator)`` carry and the incoming slab buffers donated back to XLA
+every call (``jax.jit(donate_argnums=...)``), so advancing a fleet one
+chunk at a time triggers **zero retraces** after warmup and never copies
+the carry.  Conventions new code must preserve:
+
+  * every streamed step factory stays module-level and lru-cached with
+    ``donate`` in its key — a stepper LOOKS UP its compiled step, so
+    constructing steppers (or calling ``run_fleet(stream=True)``
+    repeatedly) never retraces a warm config;
+  * ``donate=True`` callers must never retain a reference to a carry or
+    slab after passing it in (the buffer is invalidated); paths that must
+    retain old carries — the ``collect_schedule=True`` DP forward, which
+    checkpoints them for the backtrack — pass ``donate=False``;
+  * the traced step bodies bump ``STREAM_TRACES``, keeping the
+    zero-retrace claim a tested invariant (tests/test_fleet_stepper.py),
+    and donation must never break the bit-identity suites.
+
+``async_ingest=True`` (streamed obs-backed paths) swaps the inline slab
+build for ``core.ingest.SlabPrefetcher``: a double-buffered daemon thread
+prepares slab n+1 (host slicing, dtype casts, the host->device put) while
+the device executes slab n — XLA execute releases the GIL, so host work
+overlaps device compute instead of serializing with it.  Bit-identical to
+the synchronous loop by construction (same slabs, same order; asserted in
+the ``stream_overlap`` bench row).  ``fleet_stepper`` exposes the same
+machinery as a public long-lived API for live serving
+(``serve.scheduler.LiveFleetScheduler``): admit per-instance telemetry
+one slab at a time, read back per-instance hosting levels/fractions, zero
+recompiles at any step count.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -99,6 +134,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
+from repro.core.ingest import slab_feed
 from repro.core.policies.base import PolicyFns
 from repro.core.policies.offline_opt import (DP_BACKENDS, dp_backtrack,
                                              dp_backtrack_chunk,
@@ -615,13 +651,31 @@ def _compiled_scenario_core(init_fn, step_fn, sc_init, sc_chunk,
     return jax.jit(sharded)
 
 
+# test hook: Python trace counts per streamed-step family.  The factories'
+# step bodies bump their entry when (and only when) jax traces them, so
+# ``sum(STREAM_TRACES.values())`` staying flat across N stepper steps IS
+# the zero-retrace proof (tests/test_fleet_stepper.py asserts it).
+# Donation is best-effort: on backends where a donated slab's shape can't
+# alias any output (e.g. CPU host buffers of [B, chunk] telemetry) XLA
+# simply skips the aliasing — correct, just not reusable.  Silence the
+# advisory warning that would otherwise fire at every trace.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+STREAM_TRACES = collections.Counter()
+
+
 @functools.lru_cache(maxsize=64)
 def _compiled_stream_step(init_fn, step_fn, include_final_fetch: bool,
-                          has_svc: bool, has_side: bool, mesh: Mesh):
+                          has_svc: bool, has_side: bool, mesh: Mesh,
+                          donate: bool = False):
     """One [B, chunk] slab: (carry, chunk obs) -> (carry', r_chunk).  The
-    host streaming loop drives this; device memory stays O(B * chunk)."""
+    host streaming loop drives this; device memory stays O(B * chunk).
+    ``donate=True`` donates the carry and the incoming slab buffers to XLA
+    (the caller must not reuse them — the stepper contract)."""
 
     def step(params, lv, g, M, T_len, t0, carry, xck, cck, *opt):
+        STREAM_TRACES["sim_obs"] += 1
         sck = opt[0] if has_svc else _model1_svc(xck, g)
         sdck = (opt[1 if has_svc else 0] if has_side
                 else jnp.zeros(xck.shape, jnp.int32))
@@ -634,18 +688,22 @@ def _compiled_stream_step(init_fn, step_fn, include_final_fetch: bool,
     in_specs = (spec,) * 5 + (P(),) + (spec,) * (3 + n_opt)
     sharded = shard_map(jax.vmap(step, in_axes=in_axes, out_axes=(0, 0)),
                         mesh=mesh, in_specs=in_specs, out_specs=(spec, spec))
-    return jax.jit(sharded)
+    donate_argnums = tuple(range(6, 9 + n_opt)) if donate else ()
+    return jax.jit(sharded, donate_argnums=donate_argnums)
 
 
 @functools.lru_cache(maxsize=64)
 def _compiled_scenario_stream_step(init_fn, step_fn, sc_init, sc_chunk,
                                    include_final_fetch: bool, chunk: int,
-                                   collect_trace: bool, mesh: Mesh):
+                                   collect_trace: bool, mesh: Mesh,
+                                   donate: bool = False):
     """One fused-generation slab step for the host-driven streaming loop:
     the host ships a scalar chunk offset per iteration — zero observation
-    bytes cross the host->device boundary."""
+    bytes cross the host->device boundary.  ``donate=True`` donates the
+    ``(gen_state, (policy state, acc))`` carry."""
 
     def step(pparams, sparams, lv, g, M, T_len, t0, carry):
+        STREAM_TRACES["sim_scenario"] += 1
         tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
         gen_state, sim = carry
         gen_state, slab = sc_chunk(sparams, gen_state, tids)
@@ -662,7 +720,7 @@ def _compiled_scenario_stream_step(init_fn, step_fn, sc_init, sc_chunk,
     sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
                         in_specs=in_specs, out_specs=out_specs,
                         check_rep=False)
-    return jax.jit(sharded)
+    return jax.jit(sharded, donate_argnums=(7,) if donate else ())
 
 
 def _pad_params(params, B_pad: int):
@@ -728,7 +786,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               stream: bool = False, collect_trace: bool = True,
               n_seeds: Optional[int] = None,
               antithetic: bool = False,
-              prng_backend: str = "xla") -> FleetResult:
+              prng_backend: str = "xla",
+              async_ingest: bool = False) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -767,6 +826,12 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         uniforms ("xla" default — the canonical reference; "pallas" fuses
         the fold/salt/uniform chain via ``scenarios.with_prng_backend``).
         Bit-identical observations either way (requires ``scenario=``).
+      async_ingest: with ``stream=True`` on an obs-backed fleet, prepare
+        slab n+1 (host slicing + device put) on a background prefetch
+        thread while the device executes slab n
+        (``core.ingest.SlabPrefetcher``) — bit-identical to the
+        synchronous loop, host work overlapped instead of serialized.
+        A no-op with ``scenario=`` (fused generation ships no slabs).
 
     Every configuration (any mesh size x any chunking x any driver x fused
     or materialized generation — and any ``prng_backend``) returns
@@ -776,6 +841,9 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     """
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
+    if async_ingest and not stream:
+        raise ValueError("async_ingest=True requires stream=True (only the "
+                         "host-driven driver ships slabs to prefetch)")
     _check_backends("xla", prng_backend, scenario)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     if scenario is not None:
@@ -807,7 +875,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     if stream:
         return _run_fleet_streamed(policy, padded, params, lv, g, M, mesh,
                                    n_chunks, include_final_fetch,
-                                   collect_trace, B, T_max, fleet.T)
+                                   collect_trace, B, T_max, fleet.T,
+                                   async_ingest)
 
     core = _compiled_fleet_core(policy.init_fn, policy.step_fn,
                                 include_final_fetch, n_chunks, has_svc,
@@ -829,38 +898,282 @@ def _sim_carry0(policy, params, B_pad, K, dt):
              "counts": jnp.zeros((B_pad, K), jnp.int32)})
 
 
-def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
-                        include_final_fetch, collect_trace, B, T_max, T_orig):
-    """Host-driven streaming: numpy slabs in, carry stays on device."""
-    has_svc, has_side = padded.svc is not None, padded.side is not None
-    step = _compiled_stream_step(policy.init_fn, policy.step_fn,
-                                 include_final_fetch, has_svc, has_side, mesh)
-    B_pad, T_pad = padded.B, padded.T_max
-    chunk = T_pad // n_chunks
-    # host-resident obs (the point of streaming: slab-sized device transfers)
-    x_h = np.asarray(padded.x)
-    c_h = np.asarray(padded.c)
-    svc_h = None if not has_svc else np.asarray(padded.svc)
-    side_h = None if not has_side else np.asarray(padded.side)
+# ----------------------------------------------------------------------
+# FleetStepper: the one persistent slab-step implementation behind every
+# streamed driver and the live-serving API.
+# ----------------------------------------------------------------------
 
-    carry = _sim_carry0(policy, params, B_pad, padded.K, lv.dtype)
+class FleetStepper:
+    """Persistent, pre-compiled, donated-carry fleet stepper.
+
+    ONE slab-step implementation behind three drivers
+    (``_run_fleet_streamed``, ``_run_fleet_scenario_streamed``, the
+    ``_dp_ckpt_streamed`` forward pass) and the public live-serving API
+    (``fleet_stepper`` / ``serve.scheduler.LiveFleetScheduler``).  Holds a
+    compiled step looked up from the module-level lru-cached factories
+    (construction of a warm config never retraces), the device-resident
+    carry, and the running slot offset; ``step_slabs`` advances the whole
+    fleet one [B, chunk] slab and — with ``donate=True`` — hands the old
+    carry and slab buffers back to XLA, so N steps allocate O(1) carries.
+
+    Zero-recompile contract: the compiled step is a pure function of
+    ``(policy/scenario fns, flags, mesh, donate)``, all shapes are fixed
+    at construction, and ``T_len``/``t0`` are *traced* inputs — stepping
+    past any horizon, or constructing a second stepper on the same
+    config, triggers no new trace (``STREAM_TRACES`` is the test hook).
+
+    Donation contract: after ``step_slabs`` returns, the previous carry
+    and the slabs passed in are invalidated — callers must not retain
+    references to them.  Paths that must (DP checkpoint collection) build
+    their stepper with ``donate=False``.
+    """
+
+    def __init__(self, *, call, carry, chunk, mesh, has_out, kind,
+                 scenario_mode, donate, B, B_pad, K, T_max, T_orig,
+                 n_seeds=1, lv_host=None, with_svc=False, with_side=False):
+        self._call = call
+        self.carry = carry
+        self.chunk = int(chunk)
+        self._mesh = mesh
+        self._has_out = has_out
+        self._kind = kind                  # "sim" | "dp"
+        self._scenario_mode = scenario_mode
+        self.donate = donate
+        self._B, self._B_pad, self._K = int(B), int(B_pad), int(K)
+        self._T_max, self._T_orig = T_max, T_orig
+        self._n_seeds = n_seeds
+        self._lv_host = lv_host            # np [B_pad, K] level values
+        self._with_svc, self._with_side = with_svc, with_side
+        self.t = 0                         # next slot offset
+        self.steps = 0
+
+    # ---- the one step ------------------------------------------------
+    def step_slabs(self, slabs=()):
+        """Advance one chunk on already-device-ready slab arrays (empty
+        tuple for scenario-fused steppers).  Returns the step's [B_pad,
+        chunk] output (hosting levels) or None for output-less steps."""
+        t0 = jnp.asarray(self.t, jnp.int32)
+        with shard_ctx(self._mesh, (FLEET_AXIS,), model_axis=None):
+            out = self._call(self.carry, t0, tuple(slabs))
+        if self._has_out:
+            self.carry, y = out
+        else:
+            self.carry, y = out, None
+        self.t += self.chunk
+        self.steps += 1
+        return y
+
+    # ---- live telemetry admission (public sim steppers) --------------
+    def _prep_slab(self, a, dtype, trailing=(), name="slab"):
+        a = np.asarray(a)
+        want = (self._B, self.chunk) + trailing
+        if a.ndim == len(want) - 1 and self.chunk == 1:
+            a = np.expand_dims(a, 1)                 # [B] -> [B, 1]
+        if a.shape != want:
+            raise ValueError(f"{name}: expected shape {want}, got {a.shape}")
+        return jnp.asarray(_pad_rows(a.astype(dtype, copy=False),
+                                     self._B_pad, np))
+
+    def step(self, x=None, c=None, svc=None, side=None):
+        """Admit one chunk of live telemetry and advance the fleet.
+
+        Obs-backed steppers take [B, chunk] ([B] when ``chunk == 1``)
+        arrival counts ``x`` and rents ``c`` (plus [B, chunk, K] ``svc``
+        and [B, chunk] ``side`` when constructed with those channels);
+        scenario-fused steppers take no arguments (generation is on
+        device).  Returns the [B, chunk] per-slot hosting levels when the
+        stepper collects traces, else None.
+        """
+        if self._kind != "sim":
+            raise ValueError("step() is for simulation steppers")
+        if self._scenario_mode:
+            if any(a is not None for a in (x, c, svc, side)):
+                raise ValueError("scenario-fused stepper generates its own "
+                                 "observations; step() takes no telemetry")
+            out = self.step_slabs(())
+        else:
+            if x is None or c is None:
+                raise ValueError("obs-backed stepper needs x= and c= slabs")
+            dt = default_float_dtype()
+            slabs = (self._prep_slab(x, np.int32, name="x"),
+                     self._prep_slab(c, dt, name="c"))
+            if self._with_svc:
+                slabs += (self._prep_slab(svc, dt, (self._K,), name="svc"),)
+            elif svc is not None:
+                raise ValueError("stepper built without a svc channel")
+            if self._with_side:
+                slabs += (self._prep_slab(side, np.int32, name="side"),)
+            elif side is not None:
+                raise ValueError("stepper built without a side channel")
+            out = self.step_slabs(slabs)
+        return None if out is None else np.asarray(out)[:self._B]
+
+    # ---- readbacks ---------------------------------------------------
+    def _sim_carry(self):
+        if self._kind != "sim":
+            raise ValueError("simulation readback on a DP stepper")
+        return self.carry[1] if self._scenario_mode else self.carry
+
+    def hosting_levels(self) -> np.ndarray:
+        """[B] current per-instance hosting level *indices* r_t."""
+        state, _ = self._sim_carry()
+        return np.asarray(state["r"])[:self._B].astype(np.int64)
+
+    def hosting_fractions(self) -> np.ndarray:
+        """[B] current per-instance hosting *fractions* (the level values
+        ell_{r_t} in [0, 1]) — the live serving decision readback."""
+        r = self.hosting_levels()
+        lv = self._lv_host[:self._B]
+        return np.take_along_axis(lv, r[:, None], axis=1)[:, 0]
+
+    def frontier(self) -> np.ndarray:
+        """[B, K] DP value frontier (DP steppers only)."""
+        if self._kind != "dp":
+            raise ValueError("frontier() is for DP steppers")
+        J = self.carry[1] if self._scenario_mode else self.carry
+        return np.asarray(J)[:self._B]
+
+    def result(self, r_hist=None) -> FleetResult:
+        """Totals accumulated so far as a ``FleetResult`` (bit-identical
+        to one ``run_fleet`` call over the same slabs — the engine
+        invariant).  ``r_hist``: optionally, the concatenated per-step
+        level outputs to attach as the trace."""
+        (_, acc) = self._sim_carry()
+        return _fleet_result(r_hist, acc["sums"], acc["counts"], self._B,
+                             self._T_max, self._T_orig, self._n_seeds)
+
+
+def _obs_slab_builder(padded: FleetBatch, chunk: int, with_side: bool):
+    """make_slab(i) for obs-backed streaming: slice host-resident numpy
+    obs and device-put one [B, chunk] slab — the unit of work
+    ``SlabPrefetcher`` overlaps with device compute."""
+    x_h, c_h = np.asarray(padded.x), np.asarray(padded.c)
+    svc_h = None if padded.svc is None else np.asarray(padded.svc)
+    side_h = (None if not with_side or padded.side is None
+              else np.asarray(padded.side))
+
+    def make_slab(i):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        slabs = (jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
+        if svc_h is not None:
+            slabs += (jnp.asarray(svc_h[:, sl]),)
+        if side_h is not None:
+            slabs += (jnp.asarray(side_h[:, sl]),)
+        return slabs
+
+    return make_slab
+
+
+def _make_sim_stepper(policy, scenario, padded, params, sparams, lv, g, M,
+                      mesh, chunk, include_final_fetch, collect_trace,
+                      donate, has_svc, has_side, B, T_max, T_orig, n_seeds):
+    """Build a simulation ``FleetStepper`` (obs-backed or scenario-fused)
+    from an already-padded fleet: looks up the compiled step, builds the
+    initial carry, closes over the resident arrays."""
+    T_dev = jnp.asarray(padded.T)
+    if scenario is not None:
+        step = _compiled_scenario_stream_step(
+            policy.init_fn, policy.step_fn, scenario.init_fn,
+            scenario.chunk_fn, include_final_fetch, chunk, collect_trace,
+            mesh, donate)
+        carry = (jax.jit(jax.vmap(scenario.init_fn))(sparams),
+                 _sim_carry0(policy, params, padded.B, padded.K, lv.dtype))
+
+        def call(carry, t0, slabs):
+            return step(params, sparams, lv, g, M, T_dev, t0, carry)
+
+        has_out = collect_trace
+    else:
+        step = _compiled_stream_step(policy.init_fn, policy.step_fn,
+                                     include_final_fetch, has_svc, has_side,
+                                     mesh, donate)
+        carry = _sim_carry0(policy, params, padded.B, padded.K, lv.dtype)
+
+        def call(carry, t0, slabs):
+            return step(params, lv, g, M, T_dev, t0, carry, *slabs)
+
+        has_out = True
+    return FleetStepper(call=call, carry=carry, chunk=chunk, mesh=mesh,
+                        has_out=has_out, kind="sim",
+                        scenario_mode=scenario is not None, donate=donate,
+                        B=B, B_pad=padded.B, K=padded.K, T_max=T_max,
+                        T_orig=T_orig, n_seeds=n_seeds,
+                        lv_host=np.asarray(lv), with_svc=has_svc,
+                        with_side=has_side)
+
+
+def fleet_stepper(policy: PolicyFns, fleet: FleetBatch, *,
+                  scenario: Optional[Scenario] = None,
+                  mesh: Optional[Mesh] = None, chunk_size: int = 1,
+                  include_final_fetch: bool = True,
+                  collect_trace: bool = True,
+                  n_seeds: Optional[int] = None, antithetic: bool = False,
+                  prng_backend: str = "xla",
+                  donate: bool = True) -> FleetStepper:
+    """Long-lived stepping API for live fleets: pre-compile once, then
+    ``step()`` the whole fleet one [B, chunk_size] telemetry slab at a
+    time with zero retraces and a donated carry.
+
+    Obs-backed mode (``scenario=None``): telemetry arrives through
+    ``step(x, c[, svc][, side])`` — the fleet only contributes its grid
+    and per-instance horizons (``FleetBatch.for_scenario`` is the natural
+    constructor; a fleet's materialized obs are NOT consumed here).  For
+    an open-ended live fleet, construct with a generous horizon ``T`` —
+    the horizon mask is a traced input, so it costs nothing, and slots
+    past each instance's own T_i stay exact no-ops.
+
+    Scenario-fused mode: ``step()`` takes no arguments; the generator
+    advances on device (``n_seeds``/``antithetic``/``prng_backend``
+    compose exactly as in ``run_fleet``).
+
+    N ``step()`` calls are bit-identical to one ``run_fleet`` call over
+    the same observations — the engine invariant, proven in
+    tests/test_fleet_stepper.py across chunked/streamed x obs/scenario x
+    ``n_seeds`` x device-count configs.  ``donate=False`` only if you
+    must retain carry references across steps.
+    """
+    _check_backends("xla", prng_backend, scenario)
+    if scenario is None and n_seeds is not None:
+        raise ValueError("n_seeds= needs scenario= (as in run_fleet)")
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+        scenario = with_prng_backend(scenario, prng_backend)
+    policy = _replicate_policy(policy, S)
+    B, T_max = fleet.B, fleet.T_max
+    mesh, padded, _, _ = _prepare_fleet(fleet, mesh, int(chunk_size))
+    params, lv, g, M = _policy_arrays(policy, padded, padded.B)
+    sparams = (None if scenario is None
+               else _pad_params(scenario.params, padded.B))
+    has_svc = scenario is None and fleet.svc is not None
+    has_side = scenario is None and fleet.side is not None
+    return _make_sim_stepper(policy, scenario, padded, params, sparams, lv,
+                             g, M, mesh, int(chunk_size),
+                             include_final_fetch, collect_trace, donate,
+                             has_svc, has_side, B, T_max, fleet.T, S)
+
+
+def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
+                        include_final_fetch, collect_trace, B, T_max, T_orig,
+                        async_ingest=False):
+    """Host-driven streaming: numpy slabs in, carry stays on device — a
+    thin loop over the persistent ``FleetStepper`` (donated carry, zero
+    retraces after warmup; ``async_ingest=True`` prefetches slab n+1 on a
+    background thread while the device executes slab n)."""
+    has_svc, has_side = padded.svc is not None, padded.side is not None
+    chunk = padded.T_max // n_chunks
+    stepper = _make_sim_stepper(policy, None, padded, params, None, lv, g, M,
+                                mesh, chunk, include_final_fetch,
+                                collect_trace, True, has_svc, has_side,
+                                B, T_max, T_orig, 1)
+    make_slab = _obs_slab_builder(padded, chunk, with_side=True)
     r_parts = []
-    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-        for i in range(n_chunks):
-            sl = slice(i * chunk, (i + 1) * chunk)
-            args = (params, lv, g, M, padded.T,
-                    jnp.asarray(i * chunk, jnp.int32), carry,
-                    jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
-            if has_svc:
-                args += (jnp.asarray(svc_h[:, sl]),)
-            if has_side:
-                args += (jnp.asarray(side_h[:, sl]),)
-            carry, r_chunk = step(*args)
-            if collect_trace:
-                r_parts.append(np.asarray(r_chunk))
-    (_, acc) = carry
+    for slabs in slab_feed(make_slab, n_chunks, async_ingest):
+        r_chunk = stepper.step_slabs(slabs)
+        if collect_trace:
+            r_parts.append(np.asarray(r_chunk))
     r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
-    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig)
+    return stepper.result(r_hist)
 
 
 def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
@@ -868,28 +1181,20 @@ def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
                                  include_final_fetch, collect_trace,
                                  B, T_max, T_orig, n_seeds=1):
     """Host-driven streaming with fused generation: per chunk the host
-    ships ONE scalar (the chunk offset); obs never exist on the host."""
+    ships ONE scalar (the chunk offset); obs never exist on the host.  A
+    thin loop over the persistent ``FleetStepper``."""
     chunk = T_pad // n_chunks
-    step = _compiled_scenario_stream_step(policy.init_fn, policy.step_fn,
-                                          scenario.init_fn, scenario.chunk_fn,
-                                          include_final_fetch, chunk,
-                                          collect_trace, mesh)
-    carry = (jax.jit(jax.vmap(scenario.init_fn))(sparams),
-             _sim_carry0(policy, params, padded.B, padded.K, lv.dtype))
+    stepper = _make_sim_stepper(policy, scenario, padded, params, sparams,
+                                lv, g, M, mesh, chunk, include_final_fetch,
+                                collect_trace, True, False, False,
+                                B, T_max, T_orig, n_seeds)
     r_parts = []
-    with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-        for i in range(n_chunks):
-            out = step(params, sparams, lv, g, M, padded.T,
-                       jnp.asarray(i * chunk, jnp.int32), carry)
-            if collect_trace:
-                carry, r_chunk = out
-                r_parts.append(np.asarray(r_chunk))
-            else:
-                carry = out
-    (_, (_, acc)) = carry
+    for _ in range(n_chunks):
+        r_chunk = stepper.step_slabs(())
+        if collect_trace:
+            r_parts.append(np.asarray(r_chunk))
     r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
-    return _fleet_result(r_hist, acc["sums"], acc["counts"], B, T_max, T_orig,
-                         n_seeds)
+    return stepper.result(r_hist)
 
 
 # ----------------------------------------------------------------------
@@ -1144,10 +1449,15 @@ def _compiled_dp_ckpt_scenario_core(sc_init, sc_chunk, n_chunks: int,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh,
-                            dp_backend: str = "xla"):
-    """One forward slab of the value recursion: ``J -> J'``."""
+                            dp_backend: str = "xla",
+                            donate: bool = False):
+    """One forward slab of the value recursion: ``J -> J'``.
+    ``donate=True`` donates the frontier and slab buffers — only legal for
+    cost-only solves (``collect_schedule=True`` retains old frontiers as
+    backtrack checkpoints, so it must keep ``donate=False``)."""
 
     def step(M, lv, g, kmask, T_len, t0, J, xck, cck, *opt):
+        STREAM_TRACES["dp_fwd_obs"] += 1
         lv32 = lv.astype(jnp.float32)
         fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
         sck = opt[0] if has_svc else _model1_svc(xck, g)
@@ -1163,7 +1473,8 @@ def _compiled_dp_stream_fwd(has_svc: bool, mesh: Mesh,
     sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
                         in_specs=in_specs, out_specs=spec,
                         check_rep=dp_backend == "xla")
-    return jax.jit(sharded)
+    donate_argnums = tuple(range(6, 9 + n_opt)) if donate else ()
+    return jax.jit(sharded, donate_argnums=donate_argnums)
 
 
 @functools.lru_cache(maxsize=32)
@@ -1194,11 +1505,14 @@ def _compiled_dp_stream_bwd(has_svc: bool, mesh: Mesh,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
-                                     mesh: Mesh, dp_backend: str = "xla"):
+                                     mesh: Mesh, dp_backend: str = "xla",
+                                     donate: bool = False):
     """One fused-generation forward slab: the host ships one scalar offset
-    per chunk; ``(gen_state, J) -> (gen', J')``."""
+    per chunk; ``(gen_state, J) -> (gen', J')``.  ``donate=True`` donates
+    the carry — cost-only solves only (see ``_compiled_dp_stream_fwd``)."""
 
     def step(sparams, M, lv, g, kmask, T_len, t0, carry):
+        STREAM_TRACES["dp_fwd_scenario"] += 1
         gen_state, J = carry
         lv32 = lv.astype(jnp.float32)
         fetch_mat = dp_fetch_matrix(M.astype(jnp.float32), lv32)
@@ -1214,7 +1528,7 @@ def _compiled_dp_scenario_stream_fwd(sc_init, sc_chunk, chunk: int,
         jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0, None, 0)), mesh=mesh,
         in_specs=(spec,) * 6 + (P(), spec), out_specs=(spec, spec),
         check_rep=False)
-    return jax.jit(sharded)
+    return jax.jit(sharded, donate_argnums=(7,) if donate else ())
 
 
 @functools.lru_cache(maxsize=32)
@@ -1280,64 +1594,83 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
 
 
 def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
-                      collect_schedule: bool, dp_backend: str = "xla"):
+                      collect_schedule: bool, dp_backend: str = "xla",
+                      async_ingest: bool = False):
     """Host-driven checkpointed DP: forward loop collecting per-chunk
     frontier (+ generator-state) checkpoints in a device-resident list,
     then a backward loop replaying the chunks in reverse.  With a scenario
     the host ships one scalar offset per chunk each way; obs-backed fleets
-    slab-feed host-resident numpy arrays like ``_run_fleet_streamed``."""
+    slab-feed host-resident numpy arrays like ``_run_fleet_streamed``
+    (``async_ingest=True`` prefetches the slabs of BOTH passes).
+
+    The forward pass is a thin loop over the persistent ``FleetStepper``.
+    Donation rule: cost-only solves donate the frontier carry; with
+    ``collect_schedule=True`` the old carries ARE the backtrack
+    checkpoints, so that path must run ``donate=False``.
+    """
     chunk = T_pad // n_chunks
     grid_args = _dp_grid_args(padded)
     B_pad, K = padded.B, padded.K
+    T_orig = None      # stepper result metadata, unused by DP readbacks
+    donate = not collect_schedule
     if scenario is not None:
         sparams = _pad_params(scenario.params, padded.B)
         fwd = _compiled_dp_scenario_stream_fwd(scenario.init_fn,
                                                scenario.chunk_fn, chunk,
-                                               mesh, dp_backend)
+                                               mesh, dp_backend, donate)
         bwd = _compiled_dp_scenario_stream_bwd(scenario.init_fn,
                                                scenario.chunk_fn, chunk,
                                                mesh, dp_backend)
         gen0 = jax.jit(jax.vmap(scenario.init_fn))(sparams)
+        carry0 = (gen0, jnp.broadcast_to(dp_frontier0(K), (B_pad, K)))
+
+        def call(carry, t0, slabs):
+            return fwd(sparams, *grid_args, t0, carry)
+
+        make_slab = None
     else:
         has_svc = padded.svc is not None
-        fwd = _compiled_dp_stream_fwd(has_svc, mesh, dp_backend)
+        fwd = _compiled_dp_stream_fwd(has_svc, mesh, dp_backend, donate)
         bwd = _compiled_dp_stream_bwd(has_svc, mesh, dp_backend)
-        x_h, c_h = np.asarray(padded.x), np.asarray(padded.c)
-        svc_h = None if not has_svc else np.asarray(padded.svc)
+        carry0 = jnp.broadcast_to(dp_frontier0(K), (B_pad, K))
 
-        def obs_slabs(i):
-            sl = slice(i * chunk, (i + 1) * chunk)
-            slabs = (jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
-            if has_svc:
-                slabs += (jnp.asarray(svc_h[:, sl]),)
-            return slabs
+        def call(carry, t0, slabs):
+            return fwd(*grid_args, t0, carry, *slabs)
 
-    J = jnp.broadcast_to(dp_frontier0(K), (B_pad, K))
+        make_slab = _obs_slab_builder(padded, chunk, with_side=False)
+
+    stepper = FleetStepper(call=call, carry=carry0, chunk=chunk, mesh=mesh,
+                           has_out=False, kind="dp",
+                           scenario_mode=scenario is not None, donate=donate,
+                           B=B_pad, B_pad=B_pad, K=K, T_max=T_pad,
+                           T_orig=T_orig)
+    empty = lambda i: ()
     ckpts = []                 # device-resident [B, K] rows (+ gen states)
+    for slabs in slab_feed(make_slab or empty, n_chunks,
+                           async_ingest and make_slab is not None):
+        if collect_schedule:   # cost-only never backtracks — don't retain
+            ckpts.append(stepper.carry)  # dead device rows
+        stepper.step_slabs(slabs)
+    J_T = np.asarray(stepper.carry[1] if scenario is not None
+                     else stepper.carry)
+    cost = J_T.min(axis=1)
+    if not collect_schedule:
+        return cost, None
+    k = jnp.asarray(J_T.argmin(axis=1).astype(np.int32))
+    r_parts = []
+    rev = (empty if make_slab is None
+           else (lambda j: make_slab(n_chunks - 1 - j)))
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-        for i in range(n_chunks):
-            t0 = jnp.asarray(i * chunk, jnp.int32)
-            if scenario is not None:
-                if collect_schedule:       # cost-only never backtracks —
-                    ckpts.append((gen0, J))  # don't retain dead device rows
-                gen0, J = fwd(sparams, *grid_args, t0, (gen0, J))
-            else:
-                if collect_schedule:
-                    ckpts.append(J)
-                J = fwd(*grid_args, t0, J, *obs_slabs(i))
-        J_T = np.asarray(J)
-        cost = J_T.min(axis=1)
-        if not collect_schedule:
-            return cost, None
-        k = jnp.asarray(J_T.argmin(axis=1).astype(np.int32))
-        r_parts = []
-        for i in reversed(range(n_chunks)):
+        for j, slabs in enumerate(
+                slab_feed(rev, n_chunks,
+                          async_ingest and make_slab is not None)):
+            i = n_chunks - 1 - j
             t0 = jnp.asarray(i * chunk, jnp.int32)
             if scenario is not None:
                 gen_ck, Jck = ckpts[i]
                 k, rck = bwd(sparams, *grid_args, t0, gen_ck, Jck, k)
             else:
-                k, rck = bwd(*grid_args, t0, ckpts[i], k, *obs_slabs(i))
+                k, rck = bwd(*grid_args, t0, ckpts[i], k, *slabs)
             r_parts.append(np.asarray(rck))
     r_hist = np.concatenate(r_parts[::-1], axis=1)
     return cost, r_hist
@@ -1392,7 +1725,8 @@ def offline_opt_fleet(fleet: FleetBatch, *,
                       stream: bool = False,
                       collect_schedule: bool = True,
                       dp_backend: str = "xla",
-                      prng_backend: str = "xla") -> FleetOfflineResult:
+                      prng_backend: str = "xla",
+                      async_ingest: bool = False) -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
     time, each instance solved at its own horizon.  With ``scenario=...``
     the observations are generated on device inside the forward recursion
@@ -1421,12 +1755,21 @@ def offline_opt_fleet(fleet: FleetBatch, *,
     ``prng_backend`` the scenario's counter-keyed uniform engine (as in
     ``run_fleet``).  Backends are a pure performance knob: costs,
     schedules and sim results are bit-identical across every combination
-    (tests/test_backend_dispatch.py)."""
+    (tests/test_backend_dispatch.py).
+
+    ``async_ingest=True`` (streamed, obs-backed fleets) prefetches the
+    host->device obs slabs of both DP passes on a background thread —
+    double buffering, bit-identical to the synchronous feed (see
+    ``core/ingest.py``); a no-op for scenario-fused solves, which ship no
+    slabs."""
     if stream and not checkpointed:
         raise ValueError("stream=True requires checkpointed=True (the "
                          "materialized backtrack needs the whole table)")
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
+    if async_ingest and not stream:
+        raise ValueError("async_ingest=True requires stream=True (only the "
+                         "host-driven passes feed slabs)")
     if not collect_schedule and not checkpointed:
         raise ValueError("collect_schedule=False requires checkpointed=True")
     _check_backends(dp_backend, prng_backend, scenario)
@@ -1438,7 +1781,8 @@ def offline_opt_fleet(fleet: FleetBatch, *,
         scenario = with_prng_backend(scenario, prng_backend)
     if stream:
         cost, r_hist = _dp_ckpt_streamed(scenario, padded, mesh, n_chunks,
-                                         T_pad, collect_schedule, dp_backend)
+                                         T_pad, collect_schedule, dp_backend,
+                                         async_ingest)
     else:
         core, args = _dp_scan_core_args(scenario, padded, mesh, n_chunks,
                                         T_pad, checkpointed, collect_schedule,

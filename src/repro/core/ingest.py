@@ -1,0 +1,98 @@
+"""Asynchronous slab ingestion for the streaming fleet drivers.
+
+The ``stream=True`` drivers in ``core/fleet.py`` feed one [B, chunk] slab
+per iteration to a pre-compiled device step.  Synchronously, every
+iteration serializes host work (trace/obs slicing, dtype casts, the
+host->device put) with device compute.  ``SlabPrefetcher`` overlaps them:
+a daemon thread runs ``make_slab(i)`` for chunk ``n+1`` — the numpy
+slicing plus ``jnp.asarray`` device puts — while the main thread blocks
+inside the XLA execute for chunk ``n`` (which releases the GIL, so the
+overlap is real even on CPU).
+
+Correctness contract: ``make_slab`` must be a pure function of the chunk
+index (the streaming drivers' slab builders are — they slice host-resident
+arrays), and slabs are delivered strictly in index order, so an async feed
+is **bit-identical** to the synchronous loop it replaces.  The bounded
+queue (``depth`` slabs, default 2 = classic double buffering) caps device
+memory at O(depth * B * chunk) for in-flight slabs.
+
+Worker exceptions propagate to the consumer at the next ``__iter__``
+step; ``close()`` (also via context manager exit) stops the worker early
+without joining on a full queue.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+
+class SlabPrefetcher:
+    """Double-buffered background slab preparation.
+
+    Iterating yields ``make_slab(0), make_slab(1), ..., make_slab(n_chunks
+    - 1)`` in order, each prepared on the worker thread up to ``depth``
+    chunks ahead of the consumer.
+    """
+
+    def __init__(self, make_slab: Callable[[int], object], n_chunks: int,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._n = int(n_chunks)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            try:
+                for i in range(self._n):
+                    if self._stop.is_set():
+                        return
+                    slab = make_slab(i)
+                    # bounded put with a stop check so close() never
+                    # deadlocks against a full queue
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put((slab, None), timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+            except BaseException as exc:  # propagate to the consumer
+                self._q.put((None, exc))
+
+        self._thread = threading.Thread(target=worker, daemon=True,
+                                        name="slab-prefetch")
+        self._thread.start()
+
+    def __iter__(self) -> Iterator:
+        for _ in range(self._n):
+            slab, exc = self._q.get()
+            if exc is not None:
+                self.close()
+                raise exc
+            yield slab
+
+    def close(self) -> None:
+        """Stop the worker (idempotent); pending slabs are dropped."""
+        self._stop.set()
+        while True:  # unblock a worker stuck on put()
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    def __enter__(self) -> "SlabPrefetcher":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+
+def slab_feed(make_slab: Callable[[int], object], n_chunks: int,
+              async_ingest: bool, depth: int = 2) -> Iterator:
+    """The one slab source every streaming driver uses: ``make_slab(i)``
+    for each chunk, prefetched on a background thread when ``async_ingest``
+    (bit-identical either way — same slabs, same order)."""
+    if async_ingest:
+        return iter(SlabPrefetcher(make_slab, n_chunks, depth=depth))
+    return (make_slab(i) for i in range(n_chunks))

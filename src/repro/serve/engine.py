@@ -104,3 +104,16 @@ class ServingEngine:
             return SlotServiceResult(n, served, 0, n - served,
                                      float(n - served), toks)
         raise ValueError(plan.kind)
+
+    # ---- fleet-level grouped serving ------------------------------------
+    def serve_groups(self, groups, rng: np.random.Generator
+                     ) -> List[SlotServiceResult]:
+        """Serve one live-fleet slot: ``groups`` is ``[(plan, prompts),
+        ...]`` where every instance currently hosting the same plan has had
+        its requests concatenated into one batch — so a B-wide fleet costs
+        one decode per *distinct resident plan*, not one per instance.
+        Returns one ``SlotServiceResult`` per group, in order (the
+        fleet-level analogue of ``serve_slot``; see
+        ``serve.scheduler.LiveFleetScheduler``)."""
+        return [self.serve_slot(prompts, plan, rng)
+                for plan, prompts in groups]

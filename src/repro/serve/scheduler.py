@@ -1,20 +1,32 @@
 """Slot-based request scheduler wiring arrivals + spot rents + the
 HostingController (alpha-RR) + the ServingEngine into the paper's
 edge-hosting loop.  This is deliverable (b)'s end-to-end driver core.
+
+Two drivers live here:
+
+* ``EdgeServingScheduler`` — ONE instance, host-side ``HostingController``
+  loop; the original runnable example.
+* ``LiveFleetScheduler`` — B instances on the persistent
+  ``core.fleet.FleetStepper``: one host admits per-instance arrival/rent
+  telemetry slot by slot, every admit is a single pre-compiled
+  donated-carry device step (zero retraces after warmup), and per-instance
+  hosting levels/fractions are read straight off the device carry to drive
+  plan-grouped serving (one decode per distinct resident plan).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchSpec
-from repro.core.costs import HostingCosts
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, FleetResult, fleet_stepper
 from repro.core.hosting_controller import HostingController
 from repro.core.policies.alpha_rr import AlphaRR
 from repro.serve.engine import ServingEngine
-from repro.serve.partial import make_plans
+from repro.serve.partial import HostingPlan, make_plans
 
 
 @dataclasses.dataclass
@@ -99,3 +111,101 @@ class EdgeServingScheduler:
             served_edge=self.stats["edge"], served_partial=self.stats["partial"],
             forwarded=self.stats["cloud"], n_requests=self.stats["requests"],
             n_slots=len(arrivals))
+
+
+class LiveFleetScheduler:
+    """Real-time fleet controller on the persistent ``FleetStepper``.
+
+    One host manages B edge instances (one ``HostingCosts`` each, e.g. one
+    per edge site).  Every ``admit(x, c)`` call feeds ONE slot of
+    per-instance arrival counts and spot rents and advances *all* B
+    controllers through a single pre-compiled donated-carry device step —
+    zero retraces after the first slot, whatever the values, because all
+    shapes are fixed and the slot offset is a traced scalar.  The horizon
+    is open-ended: ``horizon`` only bounds the traced horizon mask (a huge
+    value costs nothing — no [B, T] array is ever materialized).
+
+    Readbacks come straight off the device carry: ``hosting_levels()`` /
+    ``hosting_fractions()`` per instance, ``report()`` for the accumulated
+    rent/service/fetch breakdown.  With ``spec=...`` (or ``engine=...``)
+    the fractions drive plan assignment and ``serve(prompts_by_instance,
+    rng)`` batches one decode per distinct resident plan via
+    ``ServingEngine.serve_groups``.
+
+    Service accounting on device is Model 1 (``g(level) * x`` per slot);
+    the Model-2 realized-coupling loop stays on the single-instance
+    ``EdgeServingScheduler``.
+    """
+
+    def __init__(self, costs_list: Sequence[HostingCosts], *,
+                 policy_cls=AlphaRR, horizon: int = 1 << 20,
+                 spec: Optional[ArchSpec] = None,
+                 engine: Optional[ServingEngine] = None,
+                 alpha: Optional[float] = None, mesh=None, seed: int = 0):
+        grid = HostingGrid.from_costs(list(costs_list))
+        self.fleet = FleetBatch.for_scenario(grid, horizon)
+        self.stepper = fleet_stepper(policy_cls.fleet(self.fleet), self.fleet,
+                                     mesh=mesh, chunk_size=1)
+        self.B = grid.B
+        self.rng = np.random.default_rng(seed)
+        self.engine = engine or (ServingEngine(spec) if spec is not None
+                                 else None)
+        if self.engine is not None:
+            self.plans, _ = make_plans(self.engine.spec, alpha,
+                                       model_cfg=self.engine.cfg)
+            self.plan_levels = np.asarray(sorted(self.plans))
+        self.stats = {"edge": 0, "partial": 0, "cloud": 0, "requests": 0}
+        self.n_slots = 0
+
+    # ---- telemetry admission -------------------------------------------
+    def admit(self, x, c) -> np.ndarray:
+        """Admit one slot of per-instance telemetry: ``x`` [B] arrival
+        counts, ``c`` [B] spot rents.  One device step; returns the [B]
+        hosting-level indices the controllers chose for this slot."""
+        r = self.stepper.step(x=np.asarray(x), c=np.asarray(c))
+        self.n_slots += 1
+        return r[:, 0]
+
+    # ---- device-carry readbacks ----------------------------------------
+    def hosting_levels(self) -> np.ndarray:
+        return self.stepper.hosting_levels()
+
+    def hosting_fractions(self) -> np.ndarray:
+        return self.stepper.hosting_fractions()
+
+    def report(self) -> FleetResult:
+        """Accumulated per-instance cost breakdown (rent/service/fetch and
+        slots-at-level counts) up to the last admitted slot."""
+        return self.stepper.result(None)
+
+    # ---- plan assignment + grouped serving -----------------------------
+    def plan_assignment(self) -> List[HostingPlan]:
+        """Per-instance ``HostingPlan``: each instance's current hosting
+        fraction snapped to the nearest level in the plan set."""
+        if self.engine is None:
+            raise ValueError("plan_assignment requires spec= or engine=")
+        frac = self.hosting_fractions()
+        idx = np.abs(frac[:, None] - self.plan_levels[None, :]).argmin(axis=1)
+        return [self.plans[self.plan_levels[i]] for i in idx]
+
+    def serve(self, prompts_by_instance: Sequence[Optional[np.ndarray]],
+              rng: Optional[np.random.Generator] = None) -> Dict[str, int]:
+        """Serve one slot's requests: group the B instances by their
+        current plan, concatenate each group's prompts, and run one decode
+        per distinct plan.  Returns the updated cumulative serve stats."""
+        rng = rng or self.rng
+        plans = self.plan_assignment()
+        groups: Dict[float, Tuple[HostingPlan, list]] = {}
+        for plan, prompts in zip(plans, prompts_by_instance):
+            if prompts is None or len(prompts) == 0:
+                continue
+            groups.setdefault(plan.level, (plan, []))[1].append(
+                np.asarray(prompts))
+        batched = [(plan, np.concatenate(parts, axis=0))
+                   for plan, parts in groups.values()]
+        for res in self.engine.serve_groups(batched, rng):
+            self.stats["edge"] += res.served_edge
+            self.stats["partial"] += res.served_partial
+            self.stats["cloud"] += res.forwarded
+            self.stats["requests"] += res.n_requests
+        return dict(self.stats)

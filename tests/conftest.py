@@ -23,3 +23,11 @@ try:
 except ImportError:
     import _hypothesis_shim
     _hypothesis_shim.install()
+
+
+# pytest re-arms the default warning filters per test, overriding the
+# module-level ignore in core/fleet.py; the donation advisory (a donated
+# slab whose shape can't alias any output on CPU) is expected and benign.
+def pytest_configure(config):
+    config.addinivalue_line(
+        "filterwarnings", "ignore:Some donated buffers were not usable")

@@ -1,0 +1,303 @@
+"""Persistent FleetStepper + async ingestion, per the PR-7 acceptance bar:
+
+* **Bit-identity** — N ``fleet_stepper`` steps == ONE ``run_fleet`` call
+  (exact equality, never allclose), obs-backed and scenario-fused, chunk
+  sizes that do and do not divide the horizon, mixed per-instance
+  horizons, ``n_seeds`` replication, and (subprocess) a forced-4-device
+  mesh.
+* **Zero retraces** — after warmup, >= 20 further steps (and constructing
+  fresh steppers on the same config) bump no ``STREAM_TRACES`` counter.
+* **Donation safety** — ``donate=True`` invalidates the old carry without
+  ever reading it (stepping stays bit-identical to ``donate=False``);
+  ``donate=False`` keeps the old carry readable.
+* **Async ingestion** — ``async_ingest=True`` is bit-identical to the
+  synchronous feed for ``run_fleet`` and ``offline_opt_fleet``.
+* **Live serving** — ``LiveFleetScheduler.admit`` accounting ==
+  ``run_fleet`` over the same telemetry.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (STREAM_TRACES, FleetBatch, fleet_stepper,
+                              offline_opt_fleet, run_fleet)
+from repro.core.ingest import SlabPrefetcher
+from repro.core.policies import AlphaRR
+import jax
+
+T = 48
+CHUNKS = [16, 20]          # 20 does not divide 48: exercises the padded tail
+HORIZONS = [T, 23, 11, T, 7]
+
+
+COST_POOL = [HostingCosts.two_level(4.0),
+             HostingCosts.three_level(6.0, 0.25, 0.5),
+             HostingCosts.three_level(3.0, 0.5, 0.25),
+             HostingCosts(M=5.0, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                          g=(1.0, 0.4, 0.3, 0.15, 0.0)),
+             HostingCosts.three_level(8.0, 0.375, 0.375)]
+
+
+@pytest.fixture(scope="module")
+def stacked():
+    grid = HostingGrid.from_costs(COST_POOL)
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 3, (grid.B, T))
+    c = rng.integers(1, 16, (grid.B, T)) / 8.0
+    return grid, x, c
+
+
+def make_scenario(B):
+    kx = S.split_keys(jax.random.PRNGKey(13), B)
+    return S.combine(S.ge_arrivals(kx, 0.3, 0.2, 2.0, 0.2, B),
+                     S.spot_rents(jax.random.PRNGKey(1), 0.5, B))
+
+
+def pad_cols(a, T_pad):
+    """Zero-pad telemetry past the horizon (masked, so values don't
+    matter — zeros keep it deterministic)."""
+    out = np.zeros((a.shape[0], T_pad), a.dtype)
+    out[:, :a.shape[1]] = a
+    return out
+
+
+def assert_result_equal(a, b):
+    assert np.array_equal(a.total, b.total)
+    assert np.array_equal(a.rent, b.rent)
+    assert np.array_equal(a.service, b.service)
+    assert np.array_equal(a.fetch, b.fetch)
+    assert np.array_equal(a.level_slots, b.level_slots)
+
+
+# ----------------------------------------------------------------------
+# Bit-identity: N steps == one run_fleet call.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_stepper_matches_run_fleet_obs(stacked, chunk):
+    grid, x, c = stacked
+    dense = FleetBatch.from_dense(grid, x, c, T=HORIZONS)
+    fns = AlphaRR.fleet(dense)
+    ref = run_fleet(fns, dense)
+    st = fleet_stepper(fns, FleetBatch.for_scenario(grid, HORIZONS),
+                       chunk_size=chunk)
+    n = -(-T // chunk)
+    xp, cp = pad_cols(x, n * chunk), pad_cols(c, n * chunk)
+    parts = [st.step(x=xp[:, i*chunk:(i+1)*chunk],
+                     c=cp[:, i*chunk:(i+1)*chunk]) for i in range(n)]
+    res = st.result(np.concatenate(parts, axis=1))
+    assert_result_equal(res, ref)
+    assert np.array_equal(res.r_hist, ref.r_hist)
+    # live readbacks: past-horizon slots are exact no-ops, so the carry's
+    # level is each instance's level at its OWN final in-horizon slot
+    final = ref.r_hist[np.arange(grid.B), np.asarray(HORIZONS) - 1]
+    assert np.array_equal(st.hosting_levels(), final)
+    lv = st.hosting_fractions()
+    assert lv.shape == (grid.B,) and np.all((0.0 <= lv) & (lv <= 1.0))
+
+
+@pytest.mark.parametrize("n_seeds", [None, 3])
+def test_stepper_matches_run_fleet_scenario(n_seeds):
+    grid = HostingGrid.from_costs(COST_POOL)
+    fleet = FleetBatch.for_scenario(grid, HORIZONS)
+    sc = make_scenario(grid.B)
+    fns = AlphaRR.fleet(fleet)
+    ref = run_fleet(fns, fleet, scenario=sc, n_seeds=n_seeds)
+    for chunk in CHUNKS:
+        st = fleet_stepper(fns, fleet, scenario=sc, chunk_size=chunk,
+                           n_seeds=n_seeds)
+        n = -(-T // chunk)
+        parts = [st.step() for _ in range(n)]
+        res = st.result(np.concatenate(parts, axis=1))
+        assert_result_equal(res, ref)
+        assert np.array_equal(res.r_hist, ref.r_hist)
+        assert res.n_seeds == ref.n_seeds
+
+
+# ----------------------------------------------------------------------
+# Zero-retrace guard + donation safety.
+# ----------------------------------------------------------------------
+
+def test_zero_retraces_after_warmup(stacked):
+    grid, x, c = stacked
+    fleet = FleetBatch.for_scenario(grid, 1 << 20)
+    fns = AlphaRR.fleet(fleet)
+    rng = np.random.default_rng(0)
+    st = fleet_stepper(fns, fleet, chunk_size=1)
+    st.step(x=rng.integers(0, 3, grid.B), c=rng.uniform(0.1, 2.0, grid.B))
+    warm = dict(STREAM_TRACES)
+    for _ in range(24):
+        st.step(x=rng.integers(0, 4, grid.B), c=rng.uniform(0.1, 3.0, grid.B))
+    # a second stepper on the same config reuses the compiled step
+    st2 = fleet_stepper(fns, fleet, chunk_size=1)
+    st2.step(x=rng.integers(0, 3, grid.B), c=rng.uniform(0.1, 2.0, grid.B))
+    assert dict(STREAM_TRACES) == warm, (warm, dict(STREAM_TRACES))
+    assert st.steps == 25 and st.t == 25
+
+
+def test_donation_invalidates_old_carry(stacked):
+    grid, x, c = stacked
+    fleet = FleetBatch.for_scenario(grid, T)
+    fns = AlphaRR.fleet(fleet)
+    donating = fleet_stepper(fns, fleet, chunk_size=16)
+    keeping = fleet_stepper(fns, fleet, chunk_size=16, donate=False)
+    for i in range(3):
+        sl = slice(i * 16, (i + 1) * 16)
+        old_d = jax.tree_util.tree_leaves(donating.carry)
+        old_k = jax.tree_util.tree_leaves(keeping.carry)
+        rd = donating.step(x=x[:, sl], c=c[:, sl])
+        rk = keeping.step(x=x[:, sl], c=c[:, sl])
+        # donated carry buffers are gone; undonated ones stay readable
+        assert all(a.is_deleted() for a in old_d)
+        assert all(not a.is_deleted() for a in old_k)
+        np.asarray(old_k[0])
+        # and donation never changes a bit
+        assert np.array_equal(rd, rk)
+    assert_result_equal(donating.result(), keeping.result())
+
+
+# ----------------------------------------------------------------------
+# Async ingestion == synchronous feed, drivers end to end.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_async_run_fleet_bitwise(stacked, chunk):
+    grid, x, c = stacked
+    rng = np.random.default_rng(2)
+    side = rng.integers(0, 2, (grid.B, T))
+    fleet = FleetBatch.from_dense(grid, x, c, side=side, T=HORIZONS)
+    fns = AlphaRR.fleet(fleet)
+    sync = run_fleet(fns, fleet, chunk_size=chunk, stream=True)
+    asyn = run_fleet(fns, fleet, chunk_size=chunk, stream=True,
+                     async_ingest=True)
+    assert_result_equal(asyn, sync)
+    assert np.array_equal(asyn.r_hist, sync.r_hist)
+
+
+def test_async_offline_dp_bitwise(stacked):
+    grid, x, c = stacked
+    fleet = FleetBatch.from_dense(grid, x, c, T=HORIZONS)
+    sync = offline_opt_fleet(fleet, checkpointed=True, stream=True,
+                             chunk_size=16)
+    asyn = offline_opt_fleet(fleet, checkpointed=True, stream=True,
+                             chunk_size=16, async_ingest=True)
+    assert np.array_equal(asyn.cost, sync.cost)
+    assert np.array_equal(asyn.r_hist, sync.r_hist)
+    assert np.array_equal(asyn.sim.total, sync.sim.total)
+    cost_only = offline_opt_fleet(fleet, checkpointed=True, stream=True,
+                                  chunk_size=16, collect_schedule=False,
+                                  async_ingest=True)
+    assert np.array_equal(cost_only.cost, sync.cost)
+    with pytest.raises(ValueError, match="async_ingest"):
+        offline_opt_fleet(fleet, async_ingest=True)
+    with pytest.raises(ValueError, match="async_ingest"):
+        run_fleet(AlphaRR.fleet(fleet), fleet, async_ingest=True)
+
+
+def test_slab_prefetcher_unit():
+    got = list(SlabPrefetcher(lambda i: i * i, 7))
+    assert got == [i * i for i in range(7)]
+
+    def boom(i):
+        if i == 2:
+            raise RuntimeError("bad slab")
+        return i
+
+    it = iter(SlabPrefetcher(boom, 5))
+    assert next(it) == 0 and next(it) == 1
+    with pytest.raises(RuntimeError, match="bad slab"):
+        list(it)
+    # close is idempotent and never deadlocks against a full queue
+    pf = SlabPrefetcher(lambda i: i, 100, depth=1)
+    pf.close()
+    pf.close()
+
+
+# ----------------------------------------------------------------------
+# Live fleet scheduler == run_fleet over the same telemetry.
+# ----------------------------------------------------------------------
+
+def test_live_fleet_scheduler_matches_run_fleet(stacked):
+    from repro.serve.scheduler import LiveFleetScheduler
+    grid, x, c = stacked
+    n_slots = 30
+    sched = LiveFleetScheduler(COST_POOL, horizon=1 << 20)
+    chosen = [sched.admit(x[:, t], c[:, t]) for t in range(n_slots)]
+    dense = FleetBatch.from_dense(grid, x[:, :n_slots], c[:, :n_slots])
+    ref = run_fleet(AlphaRR.fleet(dense), dense, include_final_fetch=False)
+    assert np.array_equal(np.stack(chosen, axis=1), ref.r_hist)
+    rep = sched.report()
+    assert_result_equal(rep, ref)
+    assert np.array_equal(sched.hosting_levels(), ref.r_hist[:, -1])
+    frac = sched.hosting_fractions()
+    lv = np.asarray([cc.levels[r] for cc, r in
+                     zip(COST_POOL, sched.hosting_levels())])
+    assert np.array_equal(frac, lv.astype(frac.dtype))
+    assert sched.n_slots == n_slots
+
+
+# ----------------------------------------------------------------------
+# Forced multi-device mesh (subprocess — this process is pinned to one
+# device by conftest).
+# ----------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import scenarios as S
+    from repro.core.costs import HostingCosts, HostingGrid
+    from repro.core.fleet import FleetBatch, fleet_stepper, run_fleet
+    from repro.core.policies import AlphaRR
+    from repro.sharding.specs import fleet_mesh
+
+    rng = np.random.default_rng(3)
+    # B=6 is not a multiple of 4: exercises dummy-instance padding
+    costs_list = [HostingCosts.three_level(4.0 + i, 0.3, 0.4) for i in range(5)]
+    costs_list.append(HostingCosts.two_level(4.0))
+    grid = HostingGrid.from_costs(costs_list)
+    T = 48
+    x = rng.integers(0, 3, (6, T)); c = rng.integers(1, 16, (6, T)) / 8.0
+    dense = FleetBatch.from_dense(grid, x, c)
+    fns = AlphaRR.fleet(dense)
+    mesh = fleet_mesh()
+    ref = run_fleet(fns, dense, mesh=mesh)
+    st = fleet_stepper(fns, FleetBatch.for_scenario(grid, T), mesh=mesh,
+                       chunk_size=16)
+    parts = [st.step(x=x[:, i*16:(i+1)*16], c=c[:, i*16:(i+1)*16])
+             for i in range(3)]
+    res = st.result(np.concatenate(parts, axis=1))
+    assert np.array_equal(res.total, ref.total)
+    assert np.array_equal(res.r_hist, ref.r_hist)
+    assert np.array_equal(res.level_slots, ref.level_slots)
+
+    kx = S.split_keys(jax.random.PRNGKey(13), 6)
+    sc = S.combine(S.ge_arrivals(kx, 0.3, 0.2, 2.0, 0.2, 6),
+                   S.spot_rents(jax.random.PRNGKey(1), 0.5, 6))
+    fleet = FleetBatch.for_scenario(grid, T)
+    sref = run_fleet(fns, fleet, scenario=sc, mesh=mesh, n_seeds=2)
+    sst = fleet_stepper(fns, fleet, scenario=sc, mesh=mesh, chunk_size=16,
+                        n_seeds=2)
+    sparts = [sst.step() for _ in range(3)]
+    sres = sst.result(np.concatenate(sparts, axis=1))
+    assert np.array_equal(sres.total, sref.total)
+    assert np.array_equal(sres.r_hist, sref.r_hist)
+    print("STEPPER-MULTI-DEVICE-OK")
+""")
+
+
+def test_fleet_stepper_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "STEPPER-MULTI-DEVICE-OK" in out.stdout
