@@ -39,7 +39,14 @@ backend rows (``dp_minplus_kernel`` / ``counter_prng_kernel``) add their
 ``backend`` / ``device_kind`` keys (additive, still schema 1) recording
 which Pallas mode the hosting rows measured ("pallas-interpret" on CPU)
 and ``jax.devices()[0].device_kind`` — so baselines from different
-machines/modes are distinguishable.
+machines/modes are distinguishable.  ``multihost_scaling`` adds its
+2-process-vs-1 rates and ``multihost_scaling_vs_1proc`` ratio, and the
+report gains top-level ``process_count`` / ``host_count`` /
+``local_device_count`` keys (additive, still schema 1) recording the JAX
+process topology the report was produced under — the benchmark process
+itself is single-process (the row's cluster legs run in subprocesses),
+but a report produced inside a real multi-host launch is then
+distinguishable from a laptop run.
 
 ``benchmarks/check_regression.py`` compares a report's ``throughput``
 section against the committed ``BENCH_baseline.json`` (the perf-regression
@@ -84,8 +91,16 @@ def main() -> None:
         json_out = sys.argv[sys.argv.index("--json") + 1]
     fast = "--fast" in sys.argv
     failures = []
+    import jax
     report = {"schema_version": 1, "fast": fast, "modules": [],
-              "throughput": {}}
+              "throughput": {},
+              # JAX process topology of THIS benchmark process (additive,
+              # schema stays 1).  Single-process on CI — the
+              # multihost_scaling row's cluster legs are subprocesses —
+              # but a report from a real multi-host launch self-labels.
+              "process_count": jax.process_count(),
+              "host_count": len({d.process_index for d in jax.devices()}),
+              "local_device_count": jax.local_device_count()}
     t_all = time.time()
     print("module,status,seconds,rows")
     for name in MODULES:
@@ -162,6 +177,19 @@ def main() -> None:
                         r.get("async_stream_slots_instances_per_sec"),
                     "async_vs_sync": r["async_vs_sync"],
                     "identical_bits": r.get("identical_bits"),
+                    "B": r.get("B"), "T": r.get("T"),
+                    "chunk": r.get("chunk"),
+                }
+            if isinstance(r, dict) and "multihost_scaling_vs_1proc" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "single_process_slots_instances_per_sec":
+                        r.get("single_process_slots_instances_per_sec"),
+                    "multi_process_slots_instances_per_sec":
+                        r.get("multi_process_slots_instances_per_sec"),
+                    "multihost_scaling_vs_1proc":
+                        r["multihost_scaling_vs_1proc"],
+                    "identical_bits": r.get("identical_bits"),
+                    "n_processes": r.get("n_processes"),
                     "B": r.get("B"), "T": r.get("T"),
                     "chunk": r.get("chunk"),
                 }

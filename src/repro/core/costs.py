@@ -20,7 +20,7 @@ All functions are pure and JAX-compatible; the simulator composes them under
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -223,12 +223,22 @@ class HostingGrid:
 
     # ---- constructors -------------------------------------------------
     @staticmethod
-    def from_costs(costs_list: Sequence[HostingCosts]) -> "HostingGrid":
-        """Stack a list of per-instance ``HostingCosts``, padding to max K."""
+    def from_costs(costs_list: Sequence[HostingCosts],
+                   K: Optional[int] = None) -> "HostingGrid":
+        """Stack a list of per-instance ``HostingCosts``, padding to max K.
+
+        ``K=`` overrides the padded width (must be >= every instance's K).
+        Multi-host fleets need it: each process builds only its own rows,
+        so all processes must pad to the GLOBAL max K or their shards
+        won't assemble into one global array.
+        """
         if not costs_list:
             raise ValueError("need at least one instance")
         dt = default_float_dtype()
-        K = max(cc.K for cc in costs_list)
+        K_min = max(cc.K for cc in costs_list)
+        K = K_min if K is None else int(K)
+        if K < K_min:
+            raise ValueError(f"K={K} < max instance K {K_min}")
         B = len(costs_list)
         M = np.zeros((B,), np.float64)
         lv = np.ones((B, K), np.float64)

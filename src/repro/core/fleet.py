@@ -117,6 +117,37 @@ machinery as a public long-lived API for live serving
 (``serve.scheduler.LiveFleetScheduler``): admit per-instance telemetry
 one slab at a time, read back per-instance hosting levels/fractions, zero
 recompiles at any step count.
+
+**Multi-host fleets** — with ``jax.distributed`` initialized
+(``repro.sharding.distributed.initialize()``), the ``fleet`` mesh spans
+every process and the instance axis is bounded by aggregate host RAM.
+Conventions:
+
+  * **Global vs local B.**  Callers pass PROCESS-LOCAL inputs: each
+    process constructs a ``FleetBatch`` / policy / scenario holding only
+    its own ``B_local`` rows (the same ``B_local`` on every process),
+    and owns global rows ``[p * B_pad_local, (p + 1) * B_pad_local)`` —
+    the mesh orders devices process-contiguously, and padding to a device
+    multiple happens per process (``_prepare_fleet``), which makes the
+    global pad a global-device multiple automatically.  Counter-keyed
+    scenarios make shard construction trivially consistent: build the
+    global key set, keep your ``B_local`` slice.
+  * **Who feeds which slab shard.**  Every obs path assembles global
+    arrays with ``jax.make_array_from_process_local_data``
+    (``_dev_rows``): each host device-puts only its own ``[B_local, ...]``
+    rows — slab ingestion (``_obs_slab_builder`` -> ``slab_feed`` /
+    ``SlabPrefetcher``), stepper telemetry (``FleetStepper.step``), and
+    whole-horizon transfers alike ship ZERO cross-host observation bytes.
+    The compiled cores are unchanged: ``shard_map`` over the fleet axis
+    has no collectives, so per-row compute is process-local by
+    construction and N-process == 1-process bit-identity holds row for
+    row (tests/test_multihost.py).
+  * **``gather=`` semantics.**  Results (and stepper readbacks) default
+    to process-local views — this process's ``B_local`` rows, matching
+    its inputs.  ``gather=True`` allgathers the full ``[B_global]`` rows
+    onto every process (one cross-host collective per array, the only
+    cross-host traffic in the engine); it is a no-op on single-process
+    meshes, so library code can pass it through unconditionally.
 """
 from __future__ import annotations
 
@@ -131,7 +162,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.ingest import slab_feed
@@ -146,7 +177,10 @@ from repro.core.scenarios.combinators import (replicate_seeds,
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
                                   schedule_chunk_core)
 from repro.sharding.context import shard_ctx
-from repro.sharding.specs import FLEET_AXIS, fleet_mesh
+from repro.sharding.specs import (FLEET_AXIS, fleet_mesh,
+                                  mesh_is_multiprocess,
+                                  mesh_local_device_count,
+                                  mesh_process_count)
 
 
 # ----------------------------------------------------------------------
@@ -358,10 +392,101 @@ def _prepare_fleet(fleet: FleetBatch, mesh: Optional[Mesh],
     Returns ``(mesh, padded fleet, n_chunks, T_pad)`` — T_pad is explicit
     because scenario-driven fleets carry no obs array to read it from."""
     mesh = fleet_mesh() if mesh is None else mesh
-    n_dev = int(mesh.devices.size)
+    if mesh_is_multiprocess(mesh):
+        # Each process holds only its own [B_local] rows; pad them to a
+        # multiple of the LOCAL device count.  Because the mesh orders
+        # devices process-contiguously (fleet_mesh sorts on process_index)
+        # and every process contributes the same device count, the global
+        # pad is automatically a global-device multiple and process p's
+        # rows are global rows [p * B_pad_local, (p + 1) * B_pad_local).
+        n_dev = mesh_local_device_count(mesh)
+    else:
+        n_dev = int(mesh.devices.size)
     B_pad = math.ceil(fleet.B / n_dev) * n_dev
     n_chunks, T_pad = chunk_geometry(fleet.T_max, chunk_size)
     return mesh, _pad_fleet(fleet, B_pad, T_pad), n_chunks, T_pad
+
+
+# ----------------------------------------------------------------------
+# Multi-host data movement: process-local rows <-> globally-sharded arrays.
+# Every helper is an exact single-process no-op, so the 1-process code
+# paths stay byte-for-byte what they were.
+# ----------------------------------------------------------------------
+
+def _dev_rows(mesh, a):
+    """Device-put a [B_pad_local, ...] row block for this mesh: plain
+    ``jnp.asarray`` on a single-process mesh; on a process-spanning mesh, a
+    globally-sharded ``jax.Array`` assembled with
+    ``jax.make_array_from_process_local_data`` (this process contributes
+    only its own rows — zero cross-host bytes, the sharding metadata is the
+    only thing every process agrees on)."""
+    if not mesh_is_multiprocess(mesh):
+        return jnp.asarray(a)
+    a = np.asarray(a)
+    sharding = NamedSharding(mesh, P(FLEET_AXIS))
+    gshape = (a.shape[0] * mesh_process_count(mesh),) + a.shape[1:]
+    return jax.make_array_from_process_local_data(sharding, a, gshape)
+
+
+def _dev_tree(mesh, tree):
+    """``_dev_rows`` over every [B]-leading leaf of a params pytree."""
+    return jax.tree_util.tree_map(lambda a: _dev_rows(mesh, a), tree)
+
+
+def _dev_replicated(mesh, a):
+    """Device-put a replicated (P()) input: committed locally on a
+    single-process mesh; left an UNCOMMITTED host value on a multi-process
+    mesh, where jit treats it as same-on-every-process replicated data (a
+    locally-committed array would be rejected by a multi-process jit)."""
+    return np.asarray(a) if mesh_is_multiprocess(mesh) else jnp.asarray(a)
+
+
+def _local_rows(a):
+    """Host view of this process's rows: for a non-fully-addressable global
+    array, the process-local shards concatenated in global row order
+    ([B_pad_local, ...]); otherwise plain ``np.asarray``."""
+    if isinstance(a, jax.Array) and not a.is_fully_addressable:
+        shards = sorted(a.addressable_shards,
+                        key=lambda s: s.index[0].start or 0)
+        return np.concatenate([np.asarray(s.data) for s in shards], axis=0)
+    return np.asarray(a)
+
+
+def _gather_rows(mesh, a):
+    """The ``gather=True`` opt-in: allgather process-local result rows to
+    the full [B_global, ...] array on every process (one cross-host
+    collective per array).  A no-op on single-process meshes and None."""
+    if a is None or not mesh_is_multiprocess(mesh):
+        return a
+    from jax.experimental import multihost_utils
+    # Gather the raw BIT PATTERN: a uint8 view widens the last axis by
+    # itemsize, so the allgather never routes float64/int64 values through
+    # jax's x64-disabled canonicalization (which would silently downcast —
+    # gather=True must be dtype- and bit-exact).
+    a = np.ascontiguousarray(a)
+    out = np.asarray(multihost_utils.process_allgather(
+        a.view(np.uint8), tiled=True))
+    return out.view(a.dtype)
+
+
+def _gather_result(res: "FleetResult", mesh) -> "FleetResult":
+    g = lambda a: _gather_rows(mesh, a)
+    return dataclasses.replace(
+        res, total=g(res.total), fetch=g(res.fetch), rent=g(res.rent),
+        service=g(res.service), r_hist=g(res.r_hist),
+        level_slots=g(res.level_slots), T=g(res.T))
+
+
+def _vmap_init(init_fn, params, mesh):
+    """``vmap(init_fn)`` over [B]-stacked params with the output sharded
+    like the inputs — on a process-spanning mesh the vmapped init runs
+    under ``shard_map`` so every state leaf comes out P(fleet)-sharded
+    (ready for the compiled step's in_specs with no resharding)."""
+    if mesh_is_multiprocess(mesh):
+        f = shard_map(jax.vmap(init_fn), mesh=mesh, in_specs=(P(FLEET_AXIS),),
+                      out_specs=P(FLEET_AXIS), check_rep=False)
+        return jax.jit(f)(params)
+    return jax.jit(jax.vmap(init_fn))(params)
 
 
 # ----------------------------------------------------------------------
@@ -433,13 +558,15 @@ class FleetOfflineResult:
 
 def _fleet_result(r_hist, sums, counts, B, T_max, T,
                   n_seeds: int = 1) -> FleetResult:
-    # float64 host accumulation, matching run_policy_batch
-    sums = np.asarray(sums)[:B].astype(np.float64)
+    # float64 host accumulation, matching run_policy_batch; on a
+    # multi-process mesh the device arrays read back as THIS process's rows
+    # (_local_rows), so B here is the process-local row count
+    sums = _local_rows(sums)[:B].astype(np.float64)
     return FleetResult(
         total=sums.sum(axis=1),
         rent=sums[:, 0], service=sums[:, 1], fetch=sums[:, 2],
-        r_hist=None if r_hist is None else np.asarray(r_hist)[:B, :T_max],
-        level_slots=np.asarray(counts)[:B].astype(np.int64),
+        r_hist=None if r_hist is None else _local_rows(r_hist)[:B, :T_max],
+        level_slots=_local_rows(counts)[:B].astype(np.int64),
         T=np.asarray(T).astype(np.int64), n_seeds=n_seeds)
 
 
@@ -730,13 +857,14 @@ def _pad_params(params, B_pad: int):
         lambda a: _pad_rows(jnp.asarray(a), B_pad), params)
 
 
-def _policy_arrays(policy: PolicyFns, fleet: FleetBatch, B_pad: int):
+def _policy_arrays(policy: PolicyFns, fleet: FleetBatch, B_pad: int, mesh):
     dt = default_float_dtype()
     params = _pad_params(policy.params, B_pad)
     lv = _pad_rows(fleet.grid.levels.astype(dt), B_pad)
     g = _pad_rows(fleet.grid.g.astype(dt), B_pad)
     M = _pad_rows(fleet.grid.M.astype(dt), B_pad)
-    return params, lv, g, M
+    return (_dev_tree(mesh, params), _dev_rows(mesh, lv),
+            _dev_rows(mesh, g), _dev_rows(mesh, M))
 
 
 def _check_scenario(scenario: Scenario, fleet: FleetBatch):
@@ -787,7 +915,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               n_seeds: Optional[int] = None,
               antithetic: bool = False,
               prng_backend: str = "xla",
-              async_ingest: bool = False) -> FleetResult:
+              async_ingest: bool = False,
+              gather: bool = False) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
 
     Args:
@@ -832,6 +961,11 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         (``core.ingest.SlabPrefetcher``) — bit-identical to the
         synchronous loop, host work overlapped instead of serialized.
         A no-op with ``scenario=`` (fused generation ships no slabs).
+      gather: on a process-spanning mesh, allgather the result rows so
+        every process sees the full [B_global] fleet (one cross-host
+        collective per result array).  Default False: results are this
+        process's own rows, matching the local inputs.  A no-op on
+        single-process meshes.  See "Multi-host fleets" above.
 
     Every configuration (any mesh size x any chunking x any driver x fused
     or materialized generation — and any ``prng_backend``) returns
@@ -851,51 +985,57 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
-    params, lv, g, M = _policy_arrays(policy, padded, padded.B)
+    params, lv, g, M = _policy_arrays(policy, padded, padded.B, mesh)
 
     if scenario is not None:
         _check_scenario(scenario, fleet)
-        sparams = _pad_params(scenario.params, padded.B)
+        sparams = _dev_tree(mesh, _pad_params(scenario.params, padded.B))
         if stream:
-            return _run_fleet_scenario_streamed(
+            res = _run_fleet_scenario_streamed(
                 policy, scenario, padded, params, sparams, lv, g, M, mesh,
                 n_chunks, T_pad, include_final_fetch, collect_trace,
                 B, T_max, fleet.T, S)
+            return _gather_result(res, mesh) if gather else res
         core = _compiled_scenario_core(policy.init_fn, policy.step_fn,
                                        scenario.init_fn, scenario.chunk_fn,
                                        include_final_fetch, n_chunks,
                                        collect_trace, mesh)
-        tids_all = jnp.arange(T_pad, dtype=jnp.int32)
+        tids_all = _dev_replicated(mesh, np.arange(T_pad, dtype=np.int32))
         with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
-            out = core(params, sparams, lv, g, M, padded.T, tids_all)
+            out = core(params, sparams, lv, g, M,
+                       _dev_rows(mesh, padded.T), tids_all)
         r_hist, sums, counts = out if collect_trace else (None,) + out
-        return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T, S)
+        res = _fleet_result(r_hist, sums, counts, B, T_max, fleet.T, S)
+        return _gather_result(res, mesh) if gather else res
 
     has_svc, has_side = fleet.svc is not None, fleet.side is not None
     if stream:
-        return _run_fleet_streamed(policy, padded, params, lv, g, M, mesh,
-                                   n_chunks, include_final_fetch,
-                                   collect_trace, B, T_max, fleet.T,
-                                   async_ingest)
+        res = _run_fleet_streamed(policy, padded, params, lv, g, M, mesh,
+                                  n_chunks, include_final_fetch,
+                                  collect_trace, B, T_max, fleet.T,
+                                  async_ingest)
+        return _gather_result(res, mesh) if gather else res
 
     core = _compiled_fleet_core(policy.init_fn, policy.step_fn,
                                 include_final_fetch, n_chunks, has_svc,
                                 has_side, collect_trace, mesh)
-    args = (params, lv, g, M, padded.T, padded.x, padded.c)
+    args = (params, lv, g, M, _dev_rows(mesh, padded.T),
+            _dev_rows(mesh, padded.x), _dev_rows(mesh, padded.c))
     if has_svc:
-        args += (padded.svc,)
+        args += (_dev_rows(mesh, padded.svc),)
     if has_side:
-        args += (padded.side,)
+        args += (_dev_rows(mesh, padded.side),)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         out = core(*args)
     r_hist, sums, counts = out if collect_trace else (None,) + out
-    return _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
+    res = _fleet_result(r_hist, sums, counts, B, T_max, fleet.T)
+    return _gather_result(res, mesh) if gather else res
 
 
-def _sim_carry0(policy, params, B_pad, K, dt):
-    return (jax.jit(jax.vmap(policy.init_fn))(params),
-            {"sums": jnp.zeros((B_pad, 3), dt),
-             "counts": jnp.zeros((B_pad, K), jnp.int32)})
+def _sim_carry0(policy, params, B_pad, K, dt, mesh):
+    return (_vmap_init(policy.init_fn, params, mesh),
+            {"sums": _dev_rows(mesh, np.zeros((B_pad, 3), dt)),
+             "counts": _dev_rows(mesh, np.zeros((B_pad, K), np.int32))})
 
 
 # ----------------------------------------------------------------------
@@ -952,7 +1092,9 @@ class FleetStepper:
         """Advance one chunk on already-device-ready slab arrays (empty
         tuple for scenario-fused steppers).  Returns the step's [B_pad,
         chunk] output (hosting levels) or None for output-less steps."""
-        t0 = jnp.asarray(self.t, jnp.int32)
+        # an uncommitted host scalar: valid as a replicated (P()) input on
+        # both single- and multi-process meshes, identical trace either way
+        t0 = np.int32(self.t)
         with shard_ctx(self._mesh, (FLEET_AXIS,), model_axis=None):
             out = self._call(self.carry, t0, tuple(slabs))
         if self._has_out:
@@ -971,8 +1113,8 @@ class FleetStepper:
             a = np.expand_dims(a, 1)                 # [B] -> [B, 1]
         if a.shape != want:
             raise ValueError(f"{name}: expected shape {want}, got {a.shape}")
-        return jnp.asarray(_pad_rows(a.astype(dtype, copy=False),
-                                     self._B_pad, np))
+        return _dev_rows(self._mesh, _pad_rows(a.astype(dtype, copy=False),
+                                               self._B_pad, np))
 
     def step(self, x=None, c=None, svc=None, side=None):
         """Admit one chunk of live telemetry and advance the fleet.
@@ -1006,47 +1148,60 @@ class FleetStepper:
             elif side is not None:
                 raise ValueError("stepper built without a side channel")
             out = self.step_slabs(slabs)
-        return None if out is None else np.asarray(out)[:self._B]
+        return None if out is None else _local_rows(out)[:self._B]
 
     # ---- readbacks ---------------------------------------------------
+    # On a process-spanning mesh every readback is this process's own
+    # [B_local] rows (matching the local telemetry it admits); pass
+    # ``gather=True`` for the full [B_global] fleet view (one cross-host
+    # collective).  ``gather`` is a no-op on single-process meshes.
+
     def _sim_carry(self):
         if self._kind != "sim":
             raise ValueError("simulation readback on a DP stepper")
         return self.carry[1] if self._scenario_mode else self.carry
 
-    def hosting_levels(self) -> np.ndarray:
+    def hosting_levels(self, gather: bool = False) -> np.ndarray:
         """[B] current per-instance hosting level *indices* r_t."""
         state, _ = self._sim_carry()
-        return np.asarray(state["r"])[:self._B].astype(np.int64)
+        r = _local_rows(state["r"])[:self._B].astype(np.int64)
+        return _gather_rows(self._mesh, r) if gather else r
 
-    def hosting_fractions(self) -> np.ndarray:
+    def hosting_fractions(self, gather: bool = False) -> np.ndarray:
         """[B] current per-instance hosting *fractions* (the level values
         ell_{r_t} in [0, 1]) — the live serving decision readback."""
         r = self.hosting_levels()
         lv = self._lv_host[:self._B]
-        return np.take_along_axis(lv, r[:, None], axis=1)[:, 0]
+        frac = np.take_along_axis(lv, r[:, None], axis=1)[:, 0]
+        return _gather_rows(self._mesh, frac) if gather else frac
 
-    def frontier(self) -> np.ndarray:
+    def frontier(self, gather: bool = False) -> np.ndarray:
         """[B, K] DP value frontier (DP steppers only)."""
         if self._kind != "dp":
             raise ValueError("frontier() is for DP steppers")
         J = self.carry[1] if self._scenario_mode else self.carry
-        return np.asarray(J)[:self._B]
+        J = _local_rows(J)[:self._B]
+        return _gather_rows(self._mesh, J) if gather else J
 
-    def result(self, r_hist=None) -> FleetResult:
+    def result(self, r_hist=None, gather: bool = False) -> FleetResult:
         """Totals accumulated so far as a ``FleetResult`` (bit-identical
         to one ``run_fleet`` call over the same slabs — the engine
         invariant).  ``r_hist``: optionally, the concatenated per-step
         level outputs to attach as the trace."""
         (_, acc) = self._sim_carry()
-        return _fleet_result(r_hist, acc["sums"], acc["counts"], self._B,
-                             self._T_max, self._T_orig, self._n_seeds)
+        res = _fleet_result(r_hist, acc["sums"], acc["counts"], self._B,
+                            self._T_max, self._T_orig, self._n_seeds)
+        return _gather_result(res, self._mesh) if gather else res
 
 
-def _obs_slab_builder(padded: FleetBatch, chunk: int, with_side: bool):
+def _obs_slab_builder(padded: FleetBatch, chunk: int, mesh, with_side: bool):
     """make_slab(i) for obs-backed streaming: slice host-resident numpy
     obs and device-put one [B, chunk] slab — the unit of work
-    ``SlabPrefetcher`` overlaps with device compute."""
+    ``SlabPrefetcher`` overlaps with device compute.  On a process-spanning
+    mesh each process holds (and ships) only its own [B_local, chunk] rows;
+    ``_dev_rows`` assembles the global slab from them with zero cross-host
+    observation bytes (metadata-only assembly, safe on the prefetch
+    thread)."""
     x_h, c_h = np.asarray(padded.x), np.asarray(padded.c)
     svc_h = None if padded.svc is None else np.asarray(padded.svc)
     side_h = (None if not with_side or padded.side is None
@@ -1054,11 +1209,11 @@ def _obs_slab_builder(padded: FleetBatch, chunk: int, with_side: bool):
 
     def make_slab(i):
         sl = slice(i * chunk, (i + 1) * chunk)
-        slabs = (jnp.asarray(x_h[:, sl]), jnp.asarray(c_h[:, sl]))
+        slabs = (_dev_rows(mesh, x_h[:, sl]), _dev_rows(mesh, c_h[:, sl]))
         if svc_h is not None:
-            slabs += (jnp.asarray(svc_h[:, sl]),)
+            slabs += (_dev_rows(mesh, svc_h[:, sl]),)
         if side_h is not None:
-            slabs += (jnp.asarray(side_h[:, sl]),)
+            slabs += (_dev_rows(mesh, side_h[:, sl]),)
         return slabs
 
     return make_slab
@@ -1070,14 +1225,15 @@ def _make_sim_stepper(policy, scenario, padded, params, sparams, lv, g, M,
     """Build a simulation ``FleetStepper`` (obs-backed or scenario-fused)
     from an already-padded fleet: looks up the compiled step, builds the
     initial carry, closes over the resident arrays."""
-    T_dev = jnp.asarray(padded.T)
+    T_dev = _dev_rows(mesh, padded.T)
     if scenario is not None:
         step = _compiled_scenario_stream_step(
             policy.init_fn, policy.step_fn, scenario.init_fn,
             scenario.chunk_fn, include_final_fetch, chunk, collect_trace,
             mesh, donate)
-        carry = (jax.jit(jax.vmap(scenario.init_fn))(sparams),
-                 _sim_carry0(policy, params, padded.B, padded.K, lv.dtype))
+        carry = (_vmap_init(scenario.init_fn, sparams, mesh),
+                 _sim_carry0(policy, params, padded.B, padded.K, lv.dtype,
+                             mesh))
 
         def call(carry, t0, slabs):
             return step(params, sparams, lv, g, M, T_dev, t0, carry)
@@ -1087,7 +1243,8 @@ def _make_sim_stepper(policy, scenario, padded, params, sparams, lv, g, M,
         step = _compiled_stream_step(policy.init_fn, policy.step_fn,
                                      include_final_fetch, has_svc, has_side,
                                      mesh, donate)
-        carry = _sim_carry0(policy, params, padded.B, padded.K, lv.dtype)
+        carry = _sim_carry0(policy, params, padded.B, padded.K, lv.dtype,
+                            mesh)
 
         def call(carry, t0, slabs):
             return step(params, lv, g, M, T_dev, t0, carry, *slabs)
@@ -1098,7 +1255,7 @@ def _make_sim_stepper(policy, scenario, padded, params, sparams, lv, g, M,
                         scenario_mode=scenario is not None, donate=donate,
                         B=B, B_pad=padded.B, K=padded.K, T_max=T_max,
                         T_orig=T_orig, n_seeds=n_seeds,
-                        lv_host=np.asarray(lv), with_svc=has_svc,
+                        lv_host=_local_rows(lv), with_svc=has_svc,
                         with_side=has_side)
 
 
@@ -1142,9 +1299,9 @@ def fleet_stepper(policy: PolicyFns, fleet: FleetBatch, *,
     policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, _, _ = _prepare_fleet(fleet, mesh, int(chunk_size))
-    params, lv, g, M = _policy_arrays(policy, padded, padded.B)
+    params, lv, g, M = _policy_arrays(policy, padded, padded.B, mesh)
     sparams = (None if scenario is None
-               else _pad_params(scenario.params, padded.B))
+               else _dev_tree(mesh, _pad_params(scenario.params, padded.B)))
     has_svc = scenario is None and fleet.svc is not None
     has_side = scenario is None and fleet.side is not None
     return _make_sim_stepper(policy, scenario, padded, params, sparams, lv,
@@ -1166,12 +1323,12 @@ def _run_fleet_streamed(policy, padded, params, lv, g, M, mesh, n_chunks,
                                 mesh, chunk, include_final_fetch,
                                 collect_trace, True, has_svc, has_side,
                                 B, T_max, T_orig, 1)
-    make_slab = _obs_slab_builder(padded, chunk, with_side=True)
+    make_slab = _obs_slab_builder(padded, chunk, mesh, with_side=True)
     r_parts = []
     for slabs in slab_feed(make_slab, n_chunks, async_ingest):
         r_chunk = stepper.step_slabs(slabs)
         if collect_trace:
-            r_parts.append(np.asarray(r_chunk))
+            r_parts.append(_local_rows(r_chunk))
     r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
     return stepper.result(r_hist)
 
@@ -1192,7 +1349,7 @@ def _run_fleet_scenario_streamed(policy, scenario, padded, params, sparams,
     for _ in range(n_chunks):
         r_chunk = stepper.step_slabs(())
         if collect_trace:
-            r_parts.append(np.asarray(r_chunk))
+            r_parts.append(_local_rows(r_chunk))
     r_hist = np.concatenate(r_parts, axis=1) if collect_trace else None
     return stepper.result(r_hist)
 
@@ -1556,10 +1713,13 @@ def _compiled_dp_scenario_stream_bwd(sc_init, sc_chunk, chunk: int,
     return jax.jit(sharded)
 
 
-def _dp_grid_args(padded: FleetBatch):
+def _dp_grid_args(padded: FleetBatch, mesh):
     dt = default_float_dtype()
-    return (padded.grid.M.astype(dt), padded.grid.levels.astype(dt),
-            padded.grid.g.astype(dt), padded.grid.mask, padded.T)
+    return (_dev_rows(mesh, padded.grid.M.astype(dt)),
+            _dev_rows(mesh, padded.grid.levels.astype(dt)),
+            _dev_rows(mesh, padded.grid.g.astype(dt)),
+            _dev_rows(mesh, padded.grid.mask),
+            _dev_rows(mesh, padded.T))
 
 
 def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
@@ -1568,9 +1728,9 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
     """(compiled device-scan DP core, its args) for this config — shared by
     ``offline_opt_fleet`` and ``offline_dp_memory_stats`` so the probed
     program is exactly the executed one."""
-    grid_args = _dp_grid_args(padded)
+    grid_args = _dp_grid_args(padded, mesh)
     if scenario is not None:
-        sparams = _pad_params(scenario.params, padded.B)
+        sparams = _dev_tree(mesh, _pad_params(scenario.params, padded.B))
         if checkpointed:
             core = _compiled_dp_ckpt_scenario_core(
                 scenario.init_fn, scenario.chunk_fn, n_chunks,
@@ -1579,7 +1739,8 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
             core = _compiled_dp_scenario_core(scenario.init_fn,
                                               scenario.chunk_fn, n_chunks,
                                               mesh, dp_backend)
-        args = (sparams,) + grid_args + (jnp.arange(T_pad, dtype=jnp.int32),)
+        args = (sparams,) + grid_args + (
+            _dev_replicated(mesh, np.arange(T_pad, dtype=np.int32)),)
     else:
         has_svc = padded.svc is not None
         if checkpointed:
@@ -1587,9 +1748,10 @@ def _dp_scan_core_args(scenario, padded, mesh, n_chunks, T_pad,
                                           mesh, dp_backend)
         else:
             core = _compiled_dp_core(n_chunks, has_svc, mesh, dp_backend)
-        args = grid_args + (jnp.asarray(padded.x), jnp.asarray(padded.c))
+        args = grid_args + (_dev_rows(mesh, padded.x),
+                            _dev_rows(mesh, padded.c))
         if has_svc:
-            args += (jnp.asarray(padded.svc),)
+            args += (_dev_rows(mesh, padded.svc),)
     return core, args
 
 
@@ -1609,20 +1771,22 @@ def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
     checkpoints, so that path must run ``donate=False``.
     """
     chunk = T_pad // n_chunks
-    grid_args = _dp_grid_args(padded)
+    grid_args = _dp_grid_args(padded, mesh)
     B_pad, K = padded.B, padded.K
     T_orig = None      # stepper result metadata, unused by DP readbacks
     donate = not collect_schedule
+    J0 = _dev_rows(mesh, np.broadcast_to(np.asarray(dp_frontier0(K)),
+                                         (B_pad, K)))
     if scenario is not None:
-        sparams = _pad_params(scenario.params, padded.B)
+        sparams = _dev_tree(mesh, _pad_params(scenario.params, padded.B))
         fwd = _compiled_dp_scenario_stream_fwd(scenario.init_fn,
                                                scenario.chunk_fn, chunk,
                                                mesh, dp_backend, donate)
         bwd = _compiled_dp_scenario_stream_bwd(scenario.init_fn,
                                                scenario.chunk_fn, chunk,
                                                mesh, dp_backend)
-        gen0 = jax.jit(jax.vmap(scenario.init_fn))(sparams)
-        carry0 = (gen0, jnp.broadcast_to(dp_frontier0(K), (B_pad, K)))
+        gen0 = _vmap_init(scenario.init_fn, sparams, mesh)
+        carry0 = (gen0, J0)
 
         def call(carry, t0, slabs):
             return fwd(sparams, *grid_args, t0, carry)
@@ -1632,12 +1796,12 @@ def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
         has_svc = padded.svc is not None
         fwd = _compiled_dp_stream_fwd(has_svc, mesh, dp_backend, donate)
         bwd = _compiled_dp_stream_bwd(has_svc, mesh, dp_backend)
-        carry0 = jnp.broadcast_to(dp_frontier0(K), (B_pad, K))
+        carry0 = J0
 
         def call(carry, t0, slabs):
             return fwd(*grid_args, t0, carry, *slabs)
 
-        make_slab = _obs_slab_builder(padded, chunk, with_side=False)
+        make_slab = _obs_slab_builder(padded, chunk, mesh, with_side=False)
 
     stepper = FleetStepper(call=call, carry=carry0, chunk=chunk, mesh=mesh,
                            has_out=False, kind="dp",
@@ -1651,12 +1815,13 @@ def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
         if collect_schedule:   # cost-only never backtracks — don't retain
             ckpts.append(stepper.carry)  # dead device rows
         stepper.step_slabs(slabs)
-    J_T = np.asarray(stepper.carry[1] if scenario is not None
-                     else stepper.carry)
+    # local rows: each process backtracks (and returns) its own shard
+    J_T = _local_rows(stepper.carry[1] if scenario is not None
+                      else stepper.carry)
     cost = J_T.min(axis=1)
     if not collect_schedule:
         return cost, None
-    k = jnp.asarray(J_T.argmin(axis=1).astype(np.int32))
+    k = _dev_rows(mesh, J_T.argmin(axis=1).astype(np.int32))
     r_parts = []
     rev = (empty if make_slab is None
            else (lambda j: make_slab(n_chunks - 1 - j)))
@@ -1665,13 +1830,13 @@ def _dp_ckpt_streamed(scenario, padded, mesh, n_chunks, T_pad,
                 slab_feed(rev, n_chunks,
                           async_ingest and make_slab is not None)):
             i = n_chunks - 1 - j
-            t0 = jnp.asarray(i * chunk, jnp.int32)
+            t0 = np.int32(i * chunk)
             if scenario is not None:
                 gen_ck, Jck = ckpts[i]
                 k, rck = bwd(sparams, *grid_args, t0, gen_ck, Jck, k)
             else:
                 k, rck = bwd(*grid_args, t0, ckpts[i], k, *slabs)
-            r_parts.append(np.asarray(rck))
+            r_parts.append(_local_rows(rck))
     r_hist = np.concatenate(r_parts[::-1], axis=1)
     return cost, r_hist
 
@@ -1726,7 +1891,8 @@ def offline_opt_fleet(fleet: FleetBatch, *,
                       collect_schedule: bool = True,
                       dp_backend: str = "xla",
                       prng_backend: str = "xla",
-                      async_ingest: bool = False) -> FleetOfflineResult:
+                      async_ingest: bool = False,
+                      gather: bool = False) -> FleetOfflineResult:
     """Fleet alpha-OPT: the exact DP, sharded over devices and chunked over
     time, each instance solved at its own horizon.  With ``scenario=...``
     the observations are generated on device inside the forward recursion
@@ -1761,7 +1927,11 @@ def offline_opt_fleet(fleet: FleetBatch, *,
     host->device obs slabs of both DP passes on a background thread —
     double buffering, bit-identical to the synchronous feed (see
     ``core/ingest.py``); a no-op for scenario-fused solves, which ship no
-    slabs."""
+    slabs.
+
+    ``gather=True`` (process-spanning meshes) allgathers cost / r_hist /
+    sim rows to the full [B_global] fleet on every process; the default is
+    this process's own rows, as in ``run_fleet``."""
     if stream and not checkpointed:
         raise ValueError("stream=True requires checkpointed=True (the "
                          "materialized backtrack needs the whole table)")
@@ -1790,16 +1960,22 @@ def offline_opt_fleet(fleet: FleetBatch, *,
         with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
             out = core(*args)
         cost, r_hist = out if collect_schedule else (out, None)
-    cost = np.asarray(cost)[:B].astype(np.float64)
+    cost = _local_rows(cost)[:B].astype(np.float64)
     if not collect_schedule:
+        if gather:
+            cost = _gather_rows(mesh, cost)
         return FleetOfflineResult(cost=cost, r_hist=None, sim=None,
                                   n_seeds=S)
-    r_hist = np.asarray(r_hist)[:B, :T_max].astype(np.int64)
+    r_hist = _local_rows(r_hist)[:B, :T_max].astype(np.int64)
     # fleet/scenario are already seed-replicated here, so the evaluation
     # runs plain and only the result is re-tagged with the MC axis
     sim = evaluate_schedule_fleet(fleet, r_hist, scenario=scenario, mesh=mesh,
                                   chunk_size=chunk_size)
     sim = dataclasses.replace(sim, n_seeds=S)
+    if gather:
+        cost = _gather_rows(mesh, cost)
+        r_hist = _gather_rows(mesh, r_hist)
+        sim = _gather_result(sim, mesh)
     return FleetOfflineResult(cost=cost, r_hist=r_hist, sim=sim, n_seeds=S)
 
 
@@ -1877,7 +2053,8 @@ def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
                             chunk_size: Optional[int] = None,
                             n_seeds: Optional[int] = None,
                             antithetic: bool = False,
-                            prng_backend: str = "xla") -> FleetResult:
+                            prng_backend: str = "xla",
+                            gather: bool = False) -> FleetResult:
     """Fleet ``evaluate_schedule``: ``r_hist`` is [B, T_max]; slots past each
     instance's T contribute nothing (and charge no fetch).  With
     ``scenario=...`` the priced observations are generated on device;
@@ -1902,24 +2079,29 @@ def evaluate_schedule_fleet(fleet: FleetBatch, r_hist, *,
     r = _pad_rows(r, padded.B, np)
     if scenario is not None:
         _check_scenario(scenario, fleet)
-        sparams = _pad_params(scenario.params, padded.B)
+        sparams = _dev_tree(mesh, _pad_params(scenario.params, padded.B))
         core = _compiled_schedule_scenario_core(scenario.init_fn,
                                                 scenario.chunk_fn,
                                                 n_chunks, mesh)
-        args = (sparams, padded.grid.levels.astype(dt),
-                padded.grid.g.astype(dt), padded.grid.M.astype(dt),
-                padded.T, jnp.asarray(r), jnp.arange(T_pad, dtype=jnp.int32))
+        args = (sparams, _dev_rows(mesh, padded.grid.levels.astype(dt)),
+                _dev_rows(mesh, padded.grid.g.astype(dt)),
+                _dev_rows(mesh, padded.grid.M.astype(dt)),
+                _dev_rows(mesh, padded.T), _dev_rows(mesh, r),
+                _dev_replicated(mesh, np.arange(T_pad, dtype=np.int32)))
     else:
         has_svc = fleet.svc is not None
         core = _compiled_schedule_core(n_chunks, has_svc, mesh)
-        args = (padded.grid.levels.astype(dt), padded.grid.g.astype(dt),
-                padded.grid.M.astype(dt), padded.T, r, padded.x, padded.c)
+        args = (_dev_rows(mesh, padded.grid.levels.astype(dt)),
+                _dev_rows(mesh, padded.grid.g.astype(dt)),
+                _dev_rows(mesh, padded.grid.M.astype(dt)),
+                _dev_rows(mesh, padded.T), _dev_rows(mesh, r),
+                _dev_rows(mesh, padded.x), _dev_rows(mesh, padded.c))
         if has_svc:
-            args += (padded.svc,)
+            args += (_dev_rows(mesh, padded.svc),)
     with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
         sums, counts = core(*args)
     # r (replicated + padded above) rather than the raw r_hist input, so the
     # returned trace matches the [B*S] row layout of the totals
     res = _fleet_result(r.astype(np.int64), sums, counts,
                         B, T_max, fleet.T, S)
-    return res
+    return _gather_result(res, mesh) if gather else res

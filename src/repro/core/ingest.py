@@ -19,6 +19,13 @@ memory at O(depth * B * chunk) for in-flight slabs.
 Worker exceptions propagate to the consumer at the next ``__iter__``
 step; ``close()`` (also via context manager exit) stops the worker early
 without joining on a full queue.
+
+**Multi-host**: nothing here changes on a process-spanning mesh — each
+process runs its OWN prefetcher over its OWN [B_local, chunk] rows.  The
+drivers' slab builders call ``jax.make_array_from_process_local_data``,
+which is metadata-only (no collective, no cross-host bytes), so it is
+safe on the prefetch thread and the zero-cross-host-obs-bytes property
+of sharded ingestion is preserved under overlap.
 """
 from __future__ import annotations
 

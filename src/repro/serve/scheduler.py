@@ -135,14 +135,23 @@ class LiveFleetScheduler:
     Service accounting on device is Model 1 (``g(level) * x`` per slot);
     the Model-2 realized-coupling loop stays on the single-instance
     ``EdgeServingScheduler``.
+
+    **Multi-host**: on a process-spanning mesh (``repro.sharding
+    .distributed.initialize()`` + a global ``fleet_mesh()``), construct
+    the scheduler on each process with that process's OWN ``costs_list``
+    rows (local B), feed ``admit`` that process's local telemetry rows,
+    and read local views back; ``hosting_levels(gather=True)`` /
+    ``report(gather=True)`` opt into the cross-host allgather.  ``grid_K``
+    must then be the GLOBAL max K so every process's grid pads alike.
     """
 
     def __init__(self, costs_list: Sequence[HostingCosts], *,
                  policy_cls=AlphaRR, horizon: int = 1 << 20,
                  spec: Optional[ArchSpec] = None,
                  engine: Optional[ServingEngine] = None,
-                 alpha: Optional[float] = None, mesh=None, seed: int = 0):
-        grid = HostingGrid.from_costs(list(costs_list))
+                 alpha: Optional[float] = None, mesh=None, seed: int = 0,
+                 grid_K: Optional[int] = None):
+        grid = HostingGrid.from_costs(list(costs_list), K=grid_K)
         self.fleet = FleetBatch.for_scenario(grid, horizon)
         self.stepper = fleet_stepper(policy_cls.fleet(self.fleet), self.fleet,
                                      mesh=mesh, chunk_size=1)
@@ -167,16 +176,19 @@ class LiveFleetScheduler:
         return r[:, 0]
 
     # ---- device-carry readbacks ----------------------------------------
-    def hosting_levels(self) -> np.ndarray:
-        return self.stepper.hosting_levels()
+    # Process-local [B] views by default; gather=True allgathers the full
+    # global fleet onto every process (multi-host meshes only — a no-op
+    # single-process).
+    def hosting_levels(self, gather: bool = False) -> np.ndarray:
+        return self.stepper.hosting_levels(gather=gather)
 
-    def hosting_fractions(self) -> np.ndarray:
-        return self.stepper.hosting_fractions()
+    def hosting_fractions(self, gather: bool = False) -> np.ndarray:
+        return self.stepper.hosting_fractions(gather=gather)
 
-    def report(self) -> FleetResult:
+    def report(self, gather: bool = False) -> FleetResult:
         """Accumulated per-instance cost breakdown (rent/service/fetch and
         slots-at-level counts) up to the last admitted slot."""
-        return self.stepper.result(None)
+        return self.stepper.result(None, gather=gather)
 
     # ---- plan assignment + grouped serving -----------------------------
     def plan_assignment(self) -> List[HostingPlan]:

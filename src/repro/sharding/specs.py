@@ -67,9 +67,44 @@ FLEET_AXIS = "fleet"
 def fleet_mesh(devices=None) -> Mesh:
     """1-D mesh over all (or the given) devices, axis name ``fleet`` — the
     hosting fleet engine (``core/fleet.py``) shards its [B] instance axis
-    over it.  Embarrassingly parallel: no collectives cross this axis."""
+    over it.  Embarrassingly parallel: no collectives cross this axis.
+
+    **Process-spanning:** once ``repro.sharding.distributed.initialize()``
+    has brought up ``jax.distributed``, ``jax.devices()`` is the *global*
+    device list, so this mesh spans every process.  Devices are ordered
+    ``(process_index, id)`` — process p owns a contiguous block of mesh
+    positions, which is what lets ``core/fleet.py`` map process p's local
+    rows to global rows ``[p*B_pad_local, (p+1)*B_pad_local)`` and keep
+    ingestion host-local (zero cross-host obs bytes)."""
     devs = jax.devices() if devices is None else list(devices)
+    devs = sorted(devs, key=lambda d: (d.process_index, d.id))
     return Mesh(np.asarray(devs), (FLEET_AXIS,))
+
+
+def mesh_process_count(mesh: Mesh) -> int:
+    """Number of distinct processes whose devices participate in ``mesh``."""
+    return len({d.process_index for d in mesh.devices.flat})
+
+
+def mesh_is_multiprocess(mesh: Mesh) -> bool:
+    return mesh_process_count(mesh) > 1
+
+
+def mesh_local_device_count(mesh: Mesh) -> int:
+    """Devices of ``mesh`` owned by THIS process.  For multi-process fleet
+    meshes the engine requires this to be uniform across processes (every
+    process contributes the same device count), so per-process row padding
+    lines up with a contiguous slice of the global instance axis."""
+    import jax as _jax
+    me = _jax.process_index()
+    n = sum(1 for d in mesh.devices.flat if d.process_index == me)
+    n_procs = mesh_process_count(mesh)
+    if n_procs > 1 and n * n_procs != mesh.devices.size:
+        raise ValueError(
+            f"fleet mesh devices are not uniform across processes: "
+            f"{mesh.devices.size} total over {n_procs} processes, "
+            f"{n} local to process {me}")
+    return n
 
 
 class ShardingRules:

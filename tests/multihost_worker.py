@@ -1,0 +1,193 @@
+"""Worker + shared workload builders for tests/test_multihost.py.
+
+NOT a test module (no ``test_`` prefix): the pytest process imports the
+``build_*`` helpers to construct the single-process reference workload,
+and ``run_local_cluster`` runs this file as the per-process worker
+(``python tests/multihost_worker.py <mode> <outdir>``).  Every builder is
+parameterized on a GLOBAL row range ``[lo, hi)`` so a worker's local shard
+is by construction the same rows the reference holds at ``[lo:hi]`` —
+mixed K, mixed T, per-row obs from a per-global-row generator, and
+counter-keyed scenario streams sliced from one global key set.
+
+Worker modes:
+  * ``engine <outdir>`` — join the cluster, run the sim / DP / stepper
+    config matrix on this process's shard, save exact result bits to
+    ``<outdir>/out_<pid>.npz``.
+  * ``meshinfo`` — join the cluster, print one JSON line of mesh facts
+    (process-spanning construction assertions run in the parent).
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+B_GLOBAL = 8
+T_MAX = 40
+SEED = 7
+T_CHOICES = (24, 32, 40, 28, 36)       # mixed horizons, max == T_MAX
+K_GLOBAL = 5   # global grid K padding: every shard pads to this (the
+               # multi-host convention — see HostingGrid.from_costs)
+
+
+def costs_for_row(i: int):
+    """Mixed-K costs keyed on the GLOBAL row index (same scheme as
+    test_fleet_engine.mixed_costs, made slice-stable)."""
+    from repro.core.costs import HostingCosts
+    M = [2.0, 4.0, 10.0][i % 3]
+    kind = (i // 2) % 3
+    if kind == 0:
+        return HostingCosts.two_level(M)
+    if kind == 1:
+        return HostingCosts.three_level(M, 0.25 + 0.125 * (i % 3),
+                                        0.125 * (1 + i % 5))
+    return HostingCosts(M=M, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                        g=(1.0, 0.4, 0.3, 0.15, 0.0))
+
+
+def build_obs_fleet(lo: int, hi: int):
+    """Obs-backed FleetBatch for global rows [lo, hi): each row's trace
+    comes from its OWN ``default_rng(1000 + row)``, so any shard equals the
+    same rows of the global build with zero cross-row coupling."""
+    from repro.core.costs import HostingGrid
+    from repro.core.fleet import FleetBatch
+    grid = HostingGrid.from_costs([costs_for_row(i) for i in range(lo, hi)],
+                                  K=K_GLOBAL)
+    B = hi - lo
+    x = np.zeros((B, T_MAX), np.int32)
+    c = np.zeros((B, T_MAX), np.float32)
+    T = np.zeros((B,), np.int32)
+    for j, i in enumerate(range(lo, hi)):
+        rng = np.random.default_rng(1000 + i)
+        Ti = T_CHOICES[i % len(T_CHOICES)]
+        x[j, :Ti] = rng.integers(0, 3, Ti)
+        c[j, :Ti] = rng.integers(1, 16, Ti) / 8.0
+        T[j] = Ti
+    return FleetBatch.from_dense(grid, x, c, T=T)
+
+
+def build_scenario_fleet(lo: int, hi: int):
+    """(obs-less FleetBatch, Scenario) for global rows [lo, hi): streams
+    take explicit per-row keys sliced from the GLOBAL ``split_keys`` set —
+    the counter-keyed convention that makes per-host shard generation
+    trivially consistent."""
+    import jax
+    from repro.core import scenarios as S
+    from repro.core.costs import HostingGrid
+    from repro.core.fleet import FleetBatch
+    B = hi - lo
+    kx = S.split_keys(jax.random.PRNGKey(SEED), B_GLOBAL)[lo:hi]
+    kc = S.split_keys(jax.random.PRNGKey(SEED + 1), B_GLOBAL)[lo:hi]
+    p = np.asarray([0.2 + 0.05 * (i % 4) for i in range(lo, hi)], np.float32)
+    sc = S.combine(S.bernoulli_arrivals(kx, p, B),
+                   S.spot_rents(kc, 0.5, B))
+    grid = HostingGrid.from_costs([costs_for_row(i) for i in range(lo, hi)],
+                                  K=K_GLOBAL)
+    T = np.asarray([T_CHOICES[i % len(T_CHOICES)] for i in range(lo, hi)],
+                   np.int32)
+    return FleetBatch.for_scenario(grid, T), sc
+
+
+def run_engine_configs(lo: int, hi: int, mesh=None, gather: bool = False):
+    """The sim + DP + stepper config matrix on rows [lo, hi); returns a
+    flat dict of numpy arrays (exact bits — the test compares with
+    np.array_equal, never allclose)."""
+    from repro.core.fleet import fleet_stepper, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR
+    out = {}
+
+    # ---- obs-backed ---------------------------------------------------
+    fleet = build_obs_fleet(lo, hi)
+    policy = AlphaRR.fleet(fleet)
+    r = run_fleet(policy, fleet, mesh=mesh, chunk_size=8)
+    out.update(o_run_total=r.total, o_run_fetch=r.fetch, o_run_rent=r.rent,
+               o_run_service=r.service, o_run_rhist=r.r_hist,
+               o_run_levels=r.level_slots)
+    rs = run_fleet(policy, fleet, mesh=mesh, chunk_size=8, stream=True,
+                   async_ingest=True)
+    out.update(o_stream_total=rs.total, o_stream_rhist=rs.r_hist)
+    dpm = offline_opt_fleet(fleet, mesh=mesh, chunk_size=8)
+    out.update(o_dpmat_cost=dpm.cost, o_dpmat_rhist=dpm.r_hist,
+               o_dpmat_simtotal=dpm.sim.total)
+    dpc = offline_opt_fleet(fleet, mesh=mesh, chunk_size=8,
+                            checkpointed=True, stream=True, async_ingest=True)
+    out.update(o_dpck_cost=dpc.cost, o_dpck_rhist=dpc.r_hist)
+
+    stepper = fleet_stepper(policy, fleet, mesh=mesh, chunk_size=4)
+    x, c = np.asarray(fleet.x), np.asarray(fleet.c)
+    parts = [stepper.step(x=x[:, t:t + 4], c=c[:, t:t + 4])
+             for t in range(0, T_MAX, 4)]
+    sr = stepper.result(np.concatenate(parts, axis=1))
+    out.update(o_step_total=sr.total, o_step_rhist=sr.r_hist,
+               o_step_levels=stepper.hosting_levels())
+    if gather:
+        rg = run_fleet(policy, fleet, mesh=mesh, chunk_size=8, gather=True)
+        out.update(o_gather_total=rg.total, o_gather_rhist=rg.r_hist)
+
+    # ---- scenario-fused, n_seeds=2 ------------------------------------
+    sfleet, sc = build_scenario_fleet(lo, hi)
+    spolicy = AlphaRR.fleet(sfleet)
+    r = run_fleet(spolicy, sfleet, scenario=sc, mesh=mesh, chunk_size=8,
+                  n_seeds=2)
+    out.update(s_run_total=r.total, s_run_rhist=r.r_hist)
+    rs = run_fleet(spolicy, sfleet, scenario=sc, mesh=mesh, chunk_size=8,
+                   stream=True, collect_trace=False, n_seeds=2)
+    out.update(s_stream_total=rs.total, s_stream_rent=rs.rent)
+    dpc = offline_opt_fleet(sfleet, scenario=sc, mesh=mesh, chunk_size=8,
+                            checkpointed=True, stream=True, n_seeds=2)
+    out.update(s_dpck_cost=dpc.cost, s_dpck_rhist=dpc.r_hist,
+               s_dpck_simtotal=dpc.sim.total)
+    stepper = fleet_stepper(spolicy, sfleet, scenario=sc, mesh=mesh,
+                            chunk_size=8, n_seeds=2)
+    for _ in range(T_MAX // 8):
+        stepper.step()
+    out["s_step_total"] = stepper.result().total
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _engine_main(outdir: str) -> None:
+    from repro.sharding import distributed
+    distributed.initialize()
+    import jax
+    lo = jax.process_index() * (B_GLOBAL // jax.process_count())
+    hi = lo + B_GLOBAL // jax.process_count()
+    out = run_engine_configs(lo, hi, gather=True)
+    out["meta"] = np.asarray([jax.process_index(), jax.process_count(),
+                              lo, hi])
+    np.savez(os.path.join(outdir, f"out_{jax.process_index()}.npz"), **out)
+    distributed.shutdown()
+
+
+def _meshinfo_main() -> None:
+    from repro.sharding import distributed
+    multi = distributed.initialize()
+    import jax
+    from repro.sharding.specs import (fleet_mesh, mesh_is_multiprocess,
+                                      mesh_local_device_count,
+                                      mesh_process_count)
+    mesh = fleet_mesh()
+    procs = [d.process_index for d in mesh.devices.flat]
+    print(json.dumps({
+        "pid": jax.process_index(),
+        "nprocs": jax.process_count(),
+        "initialized": bool(multi),
+        "global_devices": jax.device_count(),
+        "local_devices": jax.local_device_count(),
+        "mesh_size": int(mesh.devices.size),
+        "mesh_procs": procs,
+        "process_contiguous": procs == sorted(procs),
+        "mesh_process_count": mesh_process_count(mesh),
+        "mesh_is_multiprocess": mesh_is_multiprocess(mesh),
+        "mesh_local_device_count": mesh_local_device_count(mesh),
+    }))
+    distributed.shutdown()
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1]
+    if mode == "engine":
+        _engine_main(sys.argv[2])
+    elif mode == "meshinfo":
+        _meshinfo_main()
+    else:
+        raise SystemExit(f"unknown worker mode {mode!r}")

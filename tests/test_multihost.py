@@ -1,0 +1,210 @@
+"""Multi-host fleet engine: 2-process local cluster == single process, bit
+for bit.
+
+The tentpole proof for the process-spanning ``fleet`` mesh: spawn a
+2-process local JAX cluster (``repro.sharding.distributed
+.run_local_cluster``), have each worker run the full sim + DP + stepper
+config matrix (obs-backed and scenario-fused, chunked and streamed,
+mixed K, mixed T, ``n_seeds``) on its OWN host-local rows only, and
+assert ``np.array_equal`` — never allclose — against an in-process
+single-process run of the same global workload.  Also unit-tests the
+harness itself (port pick, worker failure teardown, forced process
+count) and the process-spanning mesh construction, so a multihost CI
+failure is attributable to harness vs mesh vs engine.
+"""
+import json
+import os
+import subprocess
+import time
+
+import numpy as np
+import pytest
+
+from repro.sharding import distributed
+
+import multihost_worker as W
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+WORKER = os.path.join(TESTS_DIR, "multihost_worker.py")
+
+N_PROCS = distributed.default_num_processes(2)
+DEVICES_PER_PROCESS = int(os.environ.get("REPRO_MULTIHOST_DEVICES", "1"))
+
+
+# ----------------------------------------------------------------------
+# harness unit tests (no cluster spawn needed except where stated)
+# ----------------------------------------------------------------------
+
+def test_pick_free_port_is_bindable():
+    import socket
+    port = distributed.pick_free_port()
+    assert 0 < port < 65536
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", port))   # freshly picked -> still free
+
+
+def test_default_num_processes_env(monkeypatch):
+    monkeypatch.delenv(distributed.ENV_FORCE_PROCESSES, raising=False)
+    assert distributed.default_num_processes(3) == 3
+    monkeypatch.setenv(distributed.ENV_FORCE_PROCESSES, "5")
+    assert distributed.default_num_processes(3) == 5
+
+
+def test_worker_env_wiring():
+    env = distributed.worker_env("127.0.0.1:5555", 4, 2,
+                                 devices_per_process=3,
+                                 extra_env={"MARKER": "yes"})
+    assert env[distributed.ENV_COORD] == "127.0.0.1:5555"
+    assert env[distributed.ENV_NPROCS] == "4"
+    assert env[distributed.ENV_PID] == "2"
+    assert env["JAX_PLATFORMS"] == "cpu"
+    assert "--xla_force_host_platform_device_count=3" in env["XLA_FLAGS"]
+    # exactly one forced-device flag even if the parent already had one
+    assert env["XLA_FLAGS"].count("xla_force_host_platform_device_count") == 1
+    assert env["MARKER"] == "yes"
+    src = os.path.join(os.path.dirname(TESTS_DIR), "src")
+    assert src in env["PYTHONPATH"].split(os.pathsep)
+
+
+def test_initialize_noop_without_env(monkeypatch):
+    monkeypatch.delenv(distributed.ENV_COORD, raising=False)
+    monkeypatch.delenv(distributed.ENV_NPROCS, raising=False)
+    monkeypatch.delenv(distributed.ENV_PID, raising=False)
+    assert distributed.initialize() is False
+    assert distributed.is_initialized() is False
+    distributed.shutdown()   # idempotent no-op
+
+
+def test_run_local_cluster_worker_failure_teardown():
+    """One worker exits nonzero -> RuntimeError naming it, and the whole
+    cluster is reaped (no orphans holding the port)."""
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="worker"):
+        distributed.run_local_cluster(
+            ["-c", "import os, sys; sys.exit("
+             f"3 if os.environ['{distributed.ENV_PID}'] == '1' else 0)"],
+            n_processes=2, timeout=60.0)
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_run_local_cluster_timeout_kills_workers():
+    with pytest.raises(subprocess.TimeoutExpired):
+        distributed.run_local_cluster(
+            ["-c", "import time; time.sleep(600)"],
+            n_processes=2, timeout=2.0)
+
+
+def test_run_local_cluster_returns_stdout_per_pid():
+    outs = distributed.run_local_cluster(
+        ["-c", f"import os; print(os.environ['{distributed.ENV_PID}'])"],
+        n_processes=3, timeout=60.0)
+    assert [o.strip() for o in outs] == ["0", "1", "2"]
+
+
+# ----------------------------------------------------------------------
+# process-spanning mesh construction (needs a real cluster)
+# ----------------------------------------------------------------------
+
+def test_fleet_mesh_process_spanning():
+    outs = distributed.run_local_cluster(
+        [WORKER, "meshinfo"], n_processes=N_PROCS,
+        devices_per_process=DEVICES_PER_PROCESS, timeout=300.0)
+    infos = [json.loads(o.strip().splitlines()[-1]) for o in outs]
+    assert sorted(i["pid"] for i in infos) == list(range(N_PROCS))
+    for info in infos:
+        assert info["initialized"] is True
+        assert info["nprocs"] == N_PROCS
+        assert info["local_devices"] == DEVICES_PER_PROCESS
+        assert info["global_devices"] == N_PROCS * DEVICES_PER_PROCESS
+        # the fleet mesh spans every process's devices, process-contiguous
+        assert info["mesh_size"] == N_PROCS * DEVICES_PER_PROCESS
+        assert sorted(set(info["mesh_procs"])) == list(range(N_PROCS))
+        assert info["process_contiguous"] is True
+        assert info["mesh_process_count"] == N_PROCS
+        assert info["mesh_is_multiprocess"] is True
+        assert info["mesh_local_device_count"] == DEVICES_PER_PROCESS
+
+
+def test_mesh_helpers_single_process():
+    from repro.sharding.specs import (fleet_mesh, mesh_is_multiprocess,
+                                      mesh_local_device_count,
+                                      mesh_process_count)
+    mesh = fleet_mesh()
+    assert mesh_process_count(mesh) == 1
+    assert mesh_is_multiprocess(mesh) is False
+    assert mesh_local_device_count(mesh) == mesh.devices.size
+
+
+# ----------------------------------------------------------------------
+# the tentpole: 2-process == 1-process bit-identity
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cluster_outputs(tmp_path_factory):
+    """Run the engine config matrix once on an N-process cluster; return
+    {pid: npz dict} keyed by worker process id."""
+    outdir = tmp_path_factory.mktemp("multihost")
+    distributed.run_local_cluster(
+        [WORKER, "engine", str(outdir)], n_processes=N_PROCS,
+        devices_per_process=DEVICES_PER_PROCESS, timeout=900.0)
+    out = {}
+    for pid in range(N_PROCS):
+        with np.load(outdir / f"out_{pid}.npz") as z:
+            out[pid] = {k: z[k] for k in z.files}
+    return out
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Single-process run of the same GLOBAL workload, in this process."""
+    return W.run_engine_configs(0, W.B_GLOBAL, gather=False)
+
+
+def _row_range(meta):
+    pid, nprocs, lo, hi = (int(v) for v in meta)
+    assert hi - lo == W.B_GLOBAL // nprocs
+    return lo, hi
+
+
+ENGINE_KEYS = sorted([
+    # obs-backed: full driver / streamed / DP materialized / DP ckpt / stepper
+    "o_run_total", "o_run_fetch", "o_run_rent", "o_run_service",
+    "o_run_rhist", "o_run_levels",
+    "o_stream_total", "o_stream_rhist",
+    "o_dpmat_cost", "o_dpmat_rhist", "o_dpmat_simtotal",
+    "o_dpck_cost", "o_dpck_rhist",
+    "o_step_total", "o_step_rhist", "o_step_levels",
+    # scenario-fused with n_seeds=2
+    "s_run_total", "s_run_rhist",
+    "s_stream_total", "s_stream_rent",
+    "s_dpck_cost", "s_dpck_rhist", "s_dpck_simtotal",
+    "s_step_total",
+])
+
+
+@pytest.mark.parametrize("key", ENGINE_KEYS)
+def test_two_process_bit_identity(cluster_outputs, reference, key):
+    """Every engine output on a 2-process cluster equals the same rows of
+    the single-process global run — np.array_equal, never allclose."""
+    ref = reference[key]
+    for pid in range(N_PROCS):
+        z = cluster_outputs[pid]
+        lo, hi = _row_range(z["meta"])
+        if key.startswith("s_") and ref.shape[0] == W.B_GLOBAL * 2:
+            want = ref[lo * 2:hi * 2]    # n_seeds=2: seed-major row blocks
+        else:
+            want = ref[lo:hi]
+        got = z[key]
+        assert got.dtype == want.dtype, (key, pid, got.dtype, want.dtype)
+        assert np.array_equal(got, want), (
+            f"{key}: worker {pid} rows [{lo}:{hi}] differ from "
+            f"single-process reference")
+
+
+def test_gather_returns_global_rows(cluster_outputs, reference):
+    """gather=True: every process sees the full global result, equal to
+    the single-process run."""
+    for pid in range(N_PROCS):
+        z = cluster_outputs[pid]
+        assert np.array_equal(z["o_gather_total"], reference["o_run_total"])
+        assert np.array_equal(z["o_gather_rhist"], reference["o_run_rhist"])
