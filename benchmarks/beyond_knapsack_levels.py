@@ -10,12 +10,15 @@ alpha, RR, and the uniform-grid multiple-RR.
 
 Fleet-engine port: every candidate grid — each 3-level curve point for the
 best-alpha search, plain RR, and the knapsack/uniform multi-level grids —
-is one instance of a single mixed-K fleet, and the whole table is ONE
-seed-fused ``run_fleet`` on a Bernoulli + spot scenario with coupled
-Model-2 service draws bound to each instance's own g columns
-(``n_seeds`` Monte-Carlo sample paths folded into the stream keys by the
-engine; costs are seed-means).  No per-instance ``run_policy`` loop
-remains anywhere in benchmarks/.
+is one LANE of the engine's policy fan-out axis over a B=1 fleet whose
+grid is the union of every candidate's (level, g) points.  The Bernoulli +
+spot + coupled Model-2 service path is generated exactly ONCE per seed
+(previously once per candidate row — all rows replayed the same
+shared-key path); each lane gathers its own g columns out of the union
+svc slab, which is bitwise identical to per-candidate generation because
+the Model-2 uniforms are coupled across levels.  ``n_seeds`` Monte-Carlo
+sample paths fold into the stream keys engine-side; costs are seed-means.
+No per-instance ``run_policy`` loop remains anywhere in benchmarks/.
 
 Claim tested: measured-curve grids dominate uniform grids of the same K,
 and more levels help monotonically (up to noise) — quantifying the open
@@ -30,7 +33,7 @@ from repro.core import geolife
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.fleet import FleetBatch, mc_stats, run_fleet
-from repro.core.policies import AlphaRR
+from repro.core.policies import AlphaRR, PolicyLane
 
 C_MEAN = 0.55
 M = 10.0
@@ -90,17 +93,29 @@ def run(T=4000, seed=0, n_seeds=4):
         costs_list.append(_grid_costs(kn, cmin, cmax))
         costs_list.append(_grid_costs(un, cmin, cmax))
 
-    grid = HostingGrid.from_costs(costs_list)
-    B = grid.B
+    # union fleet grid: one B=1 instance holding every distinct candidate
+    # (level, g) point; each candidate lane gathers its columns out of it
+    union = sorted({(float(lv), float(g))
+                    for cc in costs_list for lv, g in zip(cc.levels, cc.g)})
+    u_costs = HostingCosts(M=M, levels=tuple(a for a, _ in union),
+                           g=tuple(g for _, g in union),
+                           c_min=cmin, c_max=cmax)
+    grid = HostingGrid.from_costs([u_costs])
+    col_of = {lv: k for k, (lv, _) in enumerate(union)}
     sc = S.combine(
-        S.bernoulli_arrivals(S.shared_keys(kx, B), P_ARRIVAL, B),
-        S.spot_rents(S.shared_keys(kc, B), C_MEAN, B),
-        svc=S.model2_service(S.shared_keys(ks, B), grid.g, B,
+        S.bernoulli_arrivals(S.shared_keys(kx, 1), P_ARRIVAL, 1),
+        S.spot_rents(S.shared_keys(kc, 1), C_MEAN, 1),
+        svc=S.model2_service(S.shared_keys(ks, 1), grid.g, 1,
                              max_per_slot=1))
     fleet = FleetBatch.for_scenario(grid, T)
-    res = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
-                    n_seeds=n_seeds)
-    mean, ci = mc_stats(res.seed_view(res.total) / T, axis=1)       # [B]
+    lanes = []
+    for cc in costs_list:
+        g_c = HostingGrid.from_costs([cc])
+        cols = np.array([[col_of[float(lv)] for lv in cc.levels]], np.int32)
+        lanes.append(PolicyLane(AlphaRR.batch(g_c), grid=g_c, svc_cols=cols))
+    res = run_fleet(lanes, fleet, scenario=sc, n_seeds=n_seeds)
+    # policy-major, B=1: row p*S+s -> [P, S]
+    mean, ci = mc_stats(res.total.reshape(len(lanes), n_seeds) / T, axis=1)
 
     rows = []
     best = int(np.argmin(mean[:n_curve]))

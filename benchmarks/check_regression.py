@@ -51,6 +51,7 @@ RATIO_KEYS = {
     "fused_vs_per_seed",
     "ckpt_vs_materialized",
     "peak_mem_ratio",
+    "fanout_vs_separate",
 }
 # NOT guarded: fused_vs_stream — kernel_bench documents it as
 # informational (the streamed side's generation is untimed and its CPU

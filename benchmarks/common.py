@@ -9,12 +9,13 @@ grid of cost parameters.  Both axes now live in the *engine*, not here:
   into every stream key server-side (``scenarios.replicate_seeds``) and
   return seed-replicated results with a ``[B, S]`` ``seed_view``.  No
   benchmark-layer per-seed stacking or key plumbing remains.
-* **Policy-family axis** — ``fused_policy_families`` stacks the classic
-  {full grid, endpoint restriction} families into ONE mixed-K fleet (the
-  AlphaRR step serves both: RR *is* AlphaRR on a 2-level grid), so a whole
-  figure is one fused ``run_fleet`` for the online curves plus one
-  ``offline_opt_fleet`` for both OPT curves.  Generation fuses into the
-  scan — no observation array is ever materialized, on host or device.
+* **Policy-family axis** — ``fused_policy_families`` rides the engine's
+  policy *fan-out* axis: one B-row fleet, lane 0 alpha-RR on the full
+  grids, lane 1 RR on their endpoint restrictions, and (``run_opt``) the
+  offline-DP forward frontier co-executed per lane — so a whole figure is
+  ONE ``run_fleet`` call in which every workload slab is generated exactly
+  once and stepped by every family.  Generation fuses into the scan — no
+  observation array is ever materialized, on host or device.
 
 ``scenario_policy_suite`` builds the classic six-curve rows on top of
 these (per grid point, seed-means with Student-t 95% CI columns);
@@ -34,16 +35,12 @@ import time
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.fleet import (FleetBatch, FleetOfflineResult, FleetResult,
-                              mc_stats, offline_opt_fleet, run_fleet,
-                              student_t975)
+                              mc_stats, run_fleet, student_t975)
 from repro.core.policies import AlphaRR, RetroRenting, offline_opt_batch
-from repro.core.scenarios.base import Scenario
 from repro.core.simulator import run_policy_batch
 from repro.core import bounds
 
@@ -108,17 +105,13 @@ def batch_policy_suite(costs_list: Sequence[HostingCosts], x, c, svc=None,
 # figure, one offline_opt_fleet for both OPT curves, MC axis in the engine.
 # ----------------------------------------------------------------------
 
-def _grid_rows(grid: HostingGrid, lo: int, hi: int) -> HostingGrid:
-    return HostingGrid(M=grid.M[lo:hi], levels=grid.levels[lo:hi],
-                       g=grid.g[lo:hi], mask=grid.mask[lo:hi])
-
-
 class FamilyResults:
     """Results of one fused {full-grid, endpoint} family run.
 
-    ``online`` / ``offline`` rows are laid out family-major then
-    instance-major then seed-minor: row ``(fam * B + b) * S + s``.
-    ``split(arr)`` returns one ``[B, S, ...]`` view per family.
+    ``online`` / ``offline`` rows are laid out family-major (= policy-lane
+    major) then instance-major then seed-minor: row ``(fam * B + b) * S +
+    s`` — exactly ``FleetResult.policy_view``'s layout.  ``split(arr)``
+    returns one ``[B, S, ...]`` view per family.
     """
 
     def __init__(self, online: FleetResult,
@@ -140,48 +133,40 @@ def fused_policy_families(costs_list: Sequence[HostingCosts],
                           scenario_fn: Callable, T, *,
                           n_seeds: Optional[int] = None,
                           chunk_size: Optional[int] = None,
-                          run_opt: bool = True,
-                          dp_checkpointed: bool = False) -> FamilyResults:
+                          run_opt: bool = True) -> FamilyResults:
     """Run a figure's {alpha-RR, RR[, alpha-OPT, OPT]} curves as ONE fused
-    ``run_fleet`` (+ one ``offline_opt_fleet``).
+    ``run_fleet`` on the engine's policy fan-out axis.
 
-    The policy-family axis is stacked into the fleet itself: rows ``0..B``
-    carry the figure's grids, rows ``B..2B`` their 2-level endpoint
-    restrictions (padded + masked per the mixed-K convention, so each
-    family's valid rows are bit-identical to a standalone run).  The same
-    AlphaRR step serves both — RR is AlphaRR on a 2-level grid — and the
-    DP prices both in one call.  ``scenario_fn(grid) -> Scenario`` is
-    called once per family view so Model-2 service streams bind each
-    family's own ``g`` columns (RR prices the exact endpoint gather of the
-    same coupled uniforms); both calls must therefore build the same
-    stream family.  ``n_seeds`` rides through to the engine's MC axis.
-    ``dp_checkpointed=True`` prices the OPT curves with the checkpointed
-    two-pass DP (bit-identical; O(B * chunk) DP memory) — the right default
-    for long-horizon figures.
+    The family axis is the fan-out axis: lane 0 runs alpha-RR on the
+    figure's own grids, lane 1 runs RR on their 2-level endpoint
+    restrictions (``RetroRenting.fleet_lane`` — under a Model-2 scenario
+    it gathers its two columns out of the shared svc slab, bitwise equal
+    to a standalone endpoint run by stream-key coupling).  Each slab of
+    the scenario is generated ONCE and stepped by both lanes — the fleet
+    is B rows, not the old 2B stacked-row encoding, so generation work
+    halves.  ``run_opt=True`` co-executes the per-lane offline-DP forward
+    frontier inside the same fused scan (``with_opt_forward``); its
+    per-lane minima ARE the OPT curve costs (bit-identical to
+    ``offline_opt_fleet(checkpointed=True, collect_schedule=False)``), so
+    a whole figure is literally one engine call.  ``scenario_fn(grid) ->
+    Scenario`` is called once, on the full grid.  ``n_seeds`` rides
+    through to the engine's MC axis.
     """
     B = len(costs_list)
-    endpoints = [HostingCosts.two_level(cc.M, cc.c_min, cc.c_max)
-                 for cc in costs_list]
-    grid_all = HostingGrid.from_costs(list(costs_list) + endpoints)
-    sc_lo = scenario_fn(_grid_rows(grid_all, 0, B))
-    sc_hi = scenario_fn(_grid_rows(grid_all, B, 2 * B))
-    if (sc_lo.init_fn, sc_lo.chunk_fn) != (sc_hi.init_fn, sc_hi.chunk_fn):
-        raise ValueError("scenario_fn must declare the same stream family "
-                         "for the full and endpoint grids")
-    sc = Scenario(sc_lo.name, sc_lo.init_fn, sc_lo.chunk_fn,
-                  jax.tree_util.tree_map(
-                      lambda a, b: jnp.concatenate([a, b], axis=0),
-                      sc_lo.params, sc_hi.params),
-                  has_svc=sc_lo.has_svc, has_side=sc_lo.has_side)
-    Ts = np.tile(np.broadcast_to(np.asarray(T, np.int32), (B,)), 2)
-    fleet = FleetBatch.for_scenario(grid_all, Ts)
-    fns = AlphaRR.fleet(fleet)
-    kw = dict(scenario=sc, chunk_size=chunk_size, n_seeds=n_seeds)
-    run_fleet(fns, fleet, **kw)                    # warm the jit cache
+    grid = HostingGrid.from_costs(list(costs_list))
+    sc = scenario_fn(grid)
+    Ts = np.broadcast_to(np.asarray(T, np.int32), (B,))
+    fleet = FleetBatch.for_scenario(grid, Ts)
+    lanes = [AlphaRR.fleet_lane(fleet),
+             RetroRenting.fleet_lane(fleet, with_svc=sc.has_svc)]
+    kw = dict(scenario=sc, chunk_size=chunk_size, n_seeds=n_seeds,
+              with_opt_forward=run_opt)
+    run_fleet(lanes, fleet, **kw)                  # warm the jit cache
     t0 = time.time()
-    online = run_fleet(fns, fleet, **kw)
+    online = run_fleet(lanes, fleet, **kw)
     us = (time.time() - t0) / (float(np.sum(Ts)) * online.n_seeds) * 1e6
-    offline = (offline_opt_fleet(fleet, checkpointed=dp_checkpointed, **kw)
+    offline = (FleetOfflineResult(cost=online.opt_cost, r_hist=None,
+                                  sim=None, n_seeds=online.n_seeds)
                if run_opt else None)
     return FamilyResults(online, offline, B, us)
 
@@ -192,17 +177,16 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
                           x_means=None, c_means=None,
                           include_bounds: bool = True,
                           include_opt: bool = True,
-                          chunk_size: Optional[int] = None,
-                          dp_checkpointed: bool = False):
+                          chunk_size: Optional[int] = None):
     """The classic six-curve suite, one fused run per figure.
 
     Args:
       costs_list: B per-instance costs (mixed K allowed) — one per grid
         point; the Monte-Carlo axis is declared with ``n_seeds``, never by
         stacking replica rows here.
-      scenario_fn: ``(grid: HostingGrid) -> Scenario`` factory; called for
-        each family view of the stacked grid (full and endpoint) so
-        Model-2 service streams bind the right ``g`` columns.
+      scenario_fn: ``(grid: HostingGrid) -> Scenario`` factory; called
+        once on the figure's grid — the RR lane gathers its endpoint
+        columns out of the shared Model-2 svc slab.
       T: horizon (scalar or [B]).
       n_seeds: Monte-Carlo sample paths per grid point (engine-side seed
         fold).  When set, every numeric column gains a Student-t
@@ -212,9 +196,6 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
       include_opt: False skips the offline DP (figures that only plot
         online curves), dropping the 'alpha-OPT'/'OPT' columns.
       chunk_size: forwarded to the engine (None = single chunk).
-      dp_checkpointed: price OPT with the checkpointed two-pass DP
-        (bit-identical to the materialized table; no [B, T, K] buffer) —
-        set it on long-horizon figures.
 
     Returns one row dict per *grid point* (seed axis already collapsed),
     with the same keys as ``batch_policy_suite`` plus the CI columns.
@@ -222,8 +203,7 @@ def scenario_policy_suite(costs_list: Sequence[HostingCosts],
     B = len(costs_list)
     fam = fused_policy_families(costs_list, scenario_fn, T,
                                 n_seeds=n_seeds, chunk_size=chunk_size,
-                                run_opt=include_opt,
-                                dp_checkpointed=dp_checkpointed)
+                                run_opt=include_opt)
     Ts = np.broadcast_to(np.asarray(T, np.float64), (B,))
 
     cols = OrderedDict()

@@ -2,12 +2,14 @@
 alpha-RR vs RR, Gilbert-Elliot arrivals (Bern(0.9) in H, Bern(0.1) in L).
 Paper values: alpha=.3 g=.4 | a1=.4 g=.3 | a2=.5 g=.15, c=0.5.
 
-Fused MC driver: ALL THREE level-grid families — K=5 multiple-RR, K=3
-alpha-RR and the K=2 endpoint RR — of every M live in ONE mixed-K
-``HostingGrid`` (padded + masked) so the whole figure is a single
-``run_fleet`` call; the Monte-Carlo axis is ``n_seeds`` folded into the
-shared GE/spot stream keys by the engine (every instance replays the same
-per-seed sample path).  Zero per-seed or per-policy loops remain.
+Fused MC driver: the figure's three level-grid families — K=5 multiple-RR,
+K=3 alpha-RR and the K=2 endpoint RR — ride the engine's policy *fan-out*
+axis as three lanes over ONE B=|MS| fleet, each lane scoring on its own
+accounting grid (Model 1: service is ``g_lane * x`` from the lane's own g
+row).  Every GE/spot slab is generated exactly once per scan step and
+stepped by all three families; the Monte-Carlo axis is ``n_seeds`` folded
+into the shared stream keys by the engine.  Zero per-seed or per-policy
+loops — and zero redundant row replication — remain.
 """
 from __future__ import annotations
 
@@ -16,49 +18,53 @@ import jax
 from repro.core import scenarios as S
 from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.fleet import FleetBatch, mc_stats, run_fleet
-from repro.core.policies import AlphaRR
+from repro.core.policies import AlphaRR, PolicyLane
 
 LEVELS = (0.0, 0.3, 0.4, 0.5, 1.0)
 GS = (1.0, 0.4, 0.3, 0.15, 0.0)
 GE = dict(p_hl=0.4, p_lh=0.4, rate_h=0.9, rate_l=0.1)
 C_MEAN = 0.5
 MS = [2.0, 5.0, 10.0, 20.0, 40.0]
+FAMILIES = ("multiple-RR", "alpha-RR", "RR")
 
 
 def run(T=8000, seed=0, n_seeds=4):
     c_lo, c_hi = S.spot_bounds(C_MEAN)
     kx, kc = jax.random.split(jax.random.PRNGKey(seed))
-    costs_list, meta = [], []
-    for M in MS:
-        for fam, costs in (
-                ("multiple-RR", HostingCosts(M=M, levels=LEVELS, g=GS,
-                                             c_min=c_lo, c_max=c_hi)),
-                ("alpha-RR", HostingCosts.three_level(M, 0.3, 0.4,
-                                                      c_min=c_lo,
-                                                      c_max=c_hi)),
-                ("RR", HostingCosts.two_level(M, c_lo, c_hi))):
-            costs_list.append(costs)
-            meta.append({"M": M, "family": fam})
-    grid = HostingGrid.from_costs(costs_list)       # mixed K: 5, 3 and 2
+    fam_costs = {
+        "multiple-RR": [HostingCosts(M=M, levels=LEVELS, g=GS,
+                                     c_min=c_lo, c_max=c_hi) for M in MS],
+        "alpha-RR": [HostingCosts.three_level(M, 0.3, 0.4, c_min=c_lo,
+                                              c_max=c_hi) for M in MS],
+        "RR": [HostingCosts.two_level(M, c_lo, c_hi) for M in MS],
+    }
+    grid = HostingGrid.from_costs(fam_costs["multiple-RR"])   # K=5 fleet grid
     B = grid.B
     sc = S.combine(
         S.ge_arrivals(S.shared_keys(kx, B), GE["p_hl"], GE["p_lh"],
                       GE["rate_h"], GE["rate_l"], B, emission="bernoulli"),
         S.spot_rents(S.shared_keys(kc, B), C_MEAN, B))
     fleet = FleetBatch.for_scenario(grid, T)
-    res = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
-                    n_seeds=n_seeds)
+    # lane 0 scores on the fleet grid; lanes 1-2 on their own K=3 / K=2
+    # grids (Model 1 -> no svc column map needed)
+    lanes = [AlphaRR.fleet(fleet)]
+    for fam in FAMILIES[1:]:
+        g_fam = HostingGrid.from_costs(fam_costs[fam])
+        lanes.append(PolicyLane(AlphaRR.batch(g_fam), grid=g_fam))
+    res = run_fleet(lanes, fleet, scenario=sc, n_seeds=n_seeds)
 
-    mean, ci = mc_stats(res.seed_view(res.total) / T, axis=1)   # [B]
-    hist_bs = res.seed_view(res.level_slots)                    # [B, S, K]
-    by_M = {M: {"M": M, "n_seeds": n_seeds} for M in MS}
-    for i, m in enumerate(meta):
-        row = by_M[m["M"]]
-        row[m["family"]] = float(mean[i])
-        row[f"{m['family']}_ci95"] = float(ci[i])
-        if m["family"] == "multiple-RR":
-            row["multi_hist"] = hist_bs[i].mean(axis=0)[:len(LEVELS)].tolist()
-    return list(by_M.values())
+    tot = res.policy_view(res.total).reshape(3, B, n_seeds) / T
+    mean, ci = mc_stats(tot, axis=2)                            # [3, B]
+    hist = res.policy_view(res.level_slots)[0].reshape(B, n_seeds, -1)
+    rows = []
+    for i, M in enumerate(MS):
+        row = {"M": M, "n_seeds": n_seeds}
+        for f, fam in enumerate(FAMILIES):
+            row[fam] = float(mean[f, i])
+            row[f"{fam}_ci95"] = float(ci[f, i])
+        row["multi_hist"] = hist[i].mean(axis=0)[:len(LEVELS)].tolist()
+        rows.append(row)
+    return rows
 
 
 def check(rows):

@@ -44,12 +44,11 @@ def run(T=8000, seed=0, n_seeds=4):
             S.bursty_arrivals(S.shared_keys(kx, grid.B), grid.B, **BURST),
             S.spot_rents(S.shared_keys(kc, grid.B), C_MEAN, grid.B))
 
-    # the longest default horizon in the suite: price OPT with the
-    # checkpointed two-pass DP (bit-identical, no [B, T, K] table)
+    # the longest default horizon in the suite: OPT comes from the co-executed
+    # forward frontier (O(B * K) DP memory, never a [B, T, K] table)
     suite = scenario_policy_suite(costs_list, scenario_fn, T,
                                   n_seeds=n_seeds, x_means=X_MEAN,
-                                  c_means=C_MEAN, chunk_size=min(2000, T),
-                                  dp_checkpointed=True)
+                                  c_means=C_MEAN, chunk_size=min(2000, T))
     rows = []
     for m, r in zip(meta, suite):
         r.pop("hist")

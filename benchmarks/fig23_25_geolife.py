@@ -68,15 +68,14 @@ def run(T=4000, seed=0, n_seeds=4):
     best = int(np.argmin(mean24))
     a_star, g_star = points[best]
 
-    # Fig 25: cost vs M at the best alpha — one fused family run (alpha-RR
-    # + RR) and one DP call for both OPT curves
+    # Fig 25: cost vs M at the best alpha — one fused fan-out run (alpha-RR
+    # + RR lanes with both OPT frontiers co-executed in the same scan)
     Ms = [2.0, 5.0, 10.0, 20.0, 40.0]
     costs25 = [HostingCosts.three_level(M, a_star, g_star, cmin, cmax)
                for M in Ms]
     suite = scenario_policy_suite(costs25, scenario_fn, T, n_seeds=n_seeds,
                                   include_bounds=False,
-                                  chunk_size=min(1000, T),
-                                  dp_checkpointed=True)
+                                  chunk_size=min(1000, T))
     for M, r in zip(Ms, suite):
         rows.append({"fig": "25", "alpha": a_star, "M": M, **r})
     return rows

@@ -33,7 +33,12 @@ adds ``live_slots_admitted_per_sec`` plus ``p50_step_latency_us`` /
 widest measured fleet), and ``stream_overlap`` adds
 ``async_stream_slots_instances_per_sec`` / ``async_vs_sync`` (double
 buffered prefetch vs the synchronous slab feed, bit-equality asserted
-in-row).  The hosting-kernel
+in-row).  ``policy_fanout`` adds ``fanout_vs_separate`` /
+``fanout_vs_separate_p2`` / ``generation_passes_saved`` (P policy
+families fused on one generated stream vs P separate ``run_fleet``
+dispatches, every lane bit-equality-asserted in-row; in fast mode the
+``multihost_scaling`` entry instead carries explicit nulls — the cluster
+leg runs in full mode only).  The hosting-kernel
 backend rows (``dp_minplus_kernel`` / ``counter_prng_kernel``) add their
 ``*_pallas_vs_xla`` ratios, and the report itself gains top-level
 ``backend`` / ``device_kind`` keys (additive, still schema 1) recording
@@ -179,6 +184,17 @@ def main() -> None:
                     "identical_bits": r.get("identical_bits"),
                     "B": r.get("B"), "T": r.get("T"),
                     "chunk": r.get("chunk"),
+                }
+            if isinstance(r, dict) and "fanout_vs_separate" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("slots_instances_per_sec"),
+                    "fanout_vs_separate": r["fanout_vs_separate"],
+                    "fanout_vs_separate_p2": r.get("fanout_vs_separate_p2"),
+                    "generation_passes_saved":
+                        r.get("generation_passes_saved"),
+                    "identical_bits": r.get("identical_bits"),
+                    "B": r.get("B"), "T": r.get("T"),
                 }
             if isinstance(r, dict) and "multihost_scaling_vs_1proc" in r:
                 report["throughput"][r.get("name", name)] = {

@@ -279,6 +279,16 @@ class HostingGrid:
         return HostingGrid(M=self.M, levels=lv, g=g,
                            mask=jnp.ones((B, 2), bool))
 
+    def endpoint_columns(self) -> jnp.ndarray:
+        """[B, 2] int32 column indices of the endpoint levels (0, top) in
+        this grid — the ``PolicyLane.svc_cols`` map that scores a
+        no-partial-hosting lane on the service slab generated once on the
+        full grid (same coupled Model-2 uniforms, so the gathered columns
+        equal ``endpoint_service`` / direct endpoint-grid generation
+        bitwise)."""
+        zeros = jnp.zeros((self.B,), jnp.int32)
+        return jnp.stack([zeros, self.top_index().astype(jnp.int32)], axis=1)
+
     def endpoint_service(self, svc: jnp.ndarray) -> jnp.ndarray:
         """Gather a stacked [B, T, K] service matrix down to the endpoint
         levels: [B, T, 2] columns (level 0, top level) — the realized costs a

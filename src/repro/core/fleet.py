@@ -118,6 +118,44 @@ machinery as a public long-lived API for live serving
 one slab at a time, read back per-instance hosting levels/fractions, zero
 recompiles at any step count.
 
+**Policy fan-out** — ``run_fleet`` (and ``fleet_stepper``) accept a
+*sequence* of policies: each generated [B, chunk] obs slab is produced
+exactly ONCE per scan step and every policy *lane* steps against it inside
+the same compiled program — plus, with ``with_opt_forward=True``, the
+offline DP's [B, K] entry frontier per lane, so a whole competitive-ratio
+panel (every online family AND the OPT denominators) prices one shared
+sample path in a single generation pass.  Conventions:
+
+  * a **lane** is a ``PolicyFns`` (scored on the fleet's own grid) or a
+    ``policies.base.PolicyLane`` binding the pair to its own accounting
+    grid (e.g. the endpoint restriction for RR) plus — mandatory for
+    Model-2 service, where the slab is generated on the fleet grid — a
+    [B, K_lane] ``svc_cols`` column map (``HostingGrid.endpoint_columns``
+    builds the endpoint one).  This check is the policy-axis home of the
+    old ``fused_policy_families`` same-stream-family validation: lanes
+    share the stream *by construction*, the engine only verifies each
+    lane can price it;
+  * lane states are heterogeneous (different policies, different K), so
+    the carry holds a TUPLE of per-lane ``(state, acc)`` pytrees and each
+    lane runs literally its own ``sim_chunk_core`` call over the shared
+    slab (``simulator.sim_chunk_lanes``) — identical op chain, identical
+    in-carry reduction order, per-lane ``freeze_invalid`` — which is why
+    ``policies=[p]`` fan-out == standalone ``run_fleet(p)`` and lane ``p``
+    of a fan-out == its standalone restricted run hold *bitwise*, under
+    every mesh x chunking x streaming x ``n_seeds`` x backend config
+    (tests/test_policy_fanout.py);
+  * ``with_opt_forward=True`` threads one DP frontier per lane (the
+    lane's own lv/mask, ``dp_fwd_chunk`` — the exact chunk kernel every
+    offline driver shares) through the same carry and returns
+    ``FleetResult.opt_cost``, bit-identical to
+    ``offline_opt_fleet(checkpointed=True, collect_schedule=False)`` on
+    the matching restricted fleet;
+  * results are **policy-major**: row ``(p * B + b) * S + s``; reshape
+    with ``FleetResult.policy_view`` ([P, B*S] leading axes), then
+    ``seed_view`` per policy.  Compile-cache keys grow the tuple of
+    per-lane ``(init_fn, step_fn)`` pairs — fan-out factories stay
+    module-level and lru-cached like every other core.
+
 **Multi-host fleets** — with ``jax.distributed`` initialized
 (``repro.sharding.distributed.initialize()``), the ``fleet`` mesh spans
 every process and the instance axis is bounded by aggregate host RAM.
@@ -166,7 +204,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.costs import HostingCosts, HostingGrid, default_float_dtype
 from repro.core.ingest import slab_feed
-from repro.core.policies.base import PolicyFns
+from repro.core.policies.base import PolicyFns, PolicyLane, as_policy_lanes
 from repro.core.policies.offline_opt import (DP_BACKENDS, dp_backtrack,
                                              dp_backtrack_chunk,
                                              dp_fetch_matrix, dp_frontier0,
@@ -175,7 +213,7 @@ from repro.core.scenarios.base import PRNG_BACKENDS, Scenario, chunk_geometry
 from repro.core.scenarios.combinators import (replicate_seeds,
                                               with_prng_backend)
 from repro.core.simulator import (SimResult, sim_acc0, sim_chunk_core,
-                                  schedule_chunk_core)
+                                  sim_chunk_lanes, schedule_chunk_core)
 from repro.sharding.context import shard_ctx
 from repro.sharding.specs import (FLEET_AXIS, fleet_mesh,
                                   mesh_is_multiprocess,
@@ -474,7 +512,8 @@ def _gather_result(res: "FleetResult", mesh) -> "FleetResult":
     return dataclasses.replace(
         res, total=g(res.total), fetch=g(res.fetch), rent=g(res.rent),
         service=g(res.service), r_hist=g(res.r_hist),
-        level_slots=g(res.level_slots), T=g(res.T))
+        level_slots=g(res.level_slots), T=g(res.T),
+        opt_cost=g(res.opt_cost))
 
 
 def _vmap_init(init_fn, params, mesh):
@@ -502,6 +541,14 @@ class FleetResult:
     [B_instances * S] replication, instance-major and seed-minor: row
     ``b * S + s`` is instance ``b`` under seed ``s``.  ``seed_view``
     reshapes any such array to [B_instances, S, ...].
+
+    With a policy fan-out axis (``n_policies=P > 1``) the row axis is
+    additionally POLICY-MAJOR: row ``(p * B_fleet + b) * S + s`` is lane
+    ``p`` on fleet row ``b`` under seed ``s``.  ``policy_view`` peels the
+    lane axis off any [P * B_fleet * S]-leading array (after which
+    ``seed_view`` applies per lane); ``level_slots`` of hetero-K lanes are
+    zero-padded to the widest lane's K, and ``opt_cost`` carries the
+    co-executed per-lane DP optimum when run with ``with_opt_forward=True``.
     """
 
     total: np.ndarray         # [B]
@@ -513,6 +560,9 @@ class FleetResult:
     level_slots: np.ndarray   # [B, K] slots spent at each level
     T: np.ndarray             # [B] per-instance horizons
     n_seeds: int = 1          # MC replicas per instance (B = B_instances * S)
+    n_policies: int = 1       # fan-out lanes (B = P * B_fleet * S)
+    opt_cost: Optional[np.ndarray] = None  # [B] offline DP optimum per row
+                                           # (with_opt_forward=True only)
 
     @property
     def B(self) -> int:
@@ -520,13 +570,21 @@ class FleetResult:
 
     @property
     def B_instances(self) -> int:
-        """Distinct instances (the pre-replication B)."""
+        """Distinct instances (the pre-replication B; includes the policy
+        axis when fanned out — peel that off first with ``policy_view``)."""
         return self.B // self.n_seeds
 
     def seed_view(self, a) -> np.ndarray:
         """Reshape a [B*S]-leading result array to [B_instances, S, ...]."""
         a = np.asarray(a)
         return a.reshape((self.B_instances, self.n_seeds) + a.shape[1:])
+
+    def policy_view(self, a) -> np.ndarray:
+        """Reshape a policy-major [P * B_fleet * S]-leading result array to
+        [P, B_fleet * S, ...] — one row block per fan-out lane."""
+        a = np.asarray(a)
+        return a.reshape((self.n_policies, self.B // self.n_policies)
+                         + a.shape[1:])
 
     @property
     def per_slot(self) -> np.ndarray:
@@ -568,6 +626,42 @@ def _fleet_result(r_hist, sums, counts, B, T_max, T,
         r_hist=None if r_hist is None else _local_rows(r_hist)[:B, :T_max],
         level_slots=_local_rows(counts)[:B].astype(np.int64),
         T=np.asarray(T).astype(np.int64), n_seeds=n_seeds)
+
+
+def _fanout_result(r_lanes, sums_lanes, counts_lanes, opt_lanes,
+                   B, T_max, T, n_seeds, mesh, gather=False) -> FleetResult:
+    """Policy-major assembly of a fan-out run: each lane's device rows are
+    sliced to this process's B rows exactly as ``_fleet_result`` does
+    (identical casts, identical reduction order — lane p of the result is
+    bitwise the standalone result), then concatenated along the row axis.
+    On a process-spanning mesh ``gather=True`` allgathers PER LANE before
+    concatenating — gathering the concatenated rows would interleave
+    processes into the policy-major layout.  ``level_slots`` of hetero-K
+    lanes are zero-padded to the widest lane's K."""
+    gr = (lambda a: _gather_rows(mesh, a)) if gather else (lambda a: a)
+    P_n = len(sums_lanes)
+    sums = np.concatenate(
+        [gr(_local_rows(s)[:B].astype(np.float64)) for s in sums_lanes])
+    counts = [gr(_local_rows(cnt)[:B].astype(np.int64))
+              for cnt in counts_lanes]
+    K_max = max(cnt.shape[1] for cnt in counts)
+    counts = np.concatenate(
+        [np.pad(cnt, ((0, 0), (0, K_max - cnt.shape[1]))) for cnt in counts])
+    r_hist = None
+    if r_lanes is not None:
+        r_hist = np.concatenate(
+            [gr(np.ascontiguousarray(_local_rows(r)[:B, :T_max]))
+             for r in r_lanes])
+    opt_cost = None
+    if opt_lanes is not None:
+        opt_cost = np.concatenate(
+            [gr(_local_rows(o)[:B].astype(np.float64)) for o in opt_lanes])
+    T_rows = gr(np.asarray(T).astype(np.int64))
+    return FleetResult(
+        total=sums.sum(axis=1), rent=sums[:, 0], service=sums[:, 1],
+        fetch=sums[:, 2], r_hist=r_hist, level_slots=counts,
+        T=np.tile(T_rows, P_n), n_seeds=n_seeds, n_policies=P_n,
+        opt_cost=opt_cost)
 
 
 # ----------------------------------------------------------------------
@@ -669,7 +763,10 @@ def _chunked_drive(run_chunk, carry0, n_chunks: int, arrays):
     carry, ys = jax.lax.scan(
         outer, carry0, (jnp.arange(n_chunks, dtype=jnp.int32) * chunk,) + xs)
     if ys is not None:
-        ys = ys.reshape((T_pad,) + ys.shape[2:])
+        # ys may be a pytree (the fan-out cores emit one trace per lane);
+        # for a single array the tree_map is the previous reshape verbatim
+        ys = jax.tree_util.tree_map(
+            lambda y: y.reshape((T_pad,) + y.shape[2:]), ys)
     return carry, ys
 
 
@@ -850,6 +947,269 @@ def _compiled_scenario_stream_step(init_fn, step_fn, sc_init, sc_chunk,
     return jax.jit(sharded, donate_argnums=(7,) if donate else ())
 
 
+# ----------------------------------------------------------------------
+# Policy fan-out cores: ONE generated [chunk] slab per step, P policy
+# lanes (and, with with_opt, P offline-DP frontiers) consuming it inside
+# the same compiled program.  See "Policy fan-out" in the module
+# docstring.  Each core takes ``lanes`` — the tuple of per-lane
+# (params, lv, g, M, mask, cols) device rows (_lane_arrays) — and emits a
+# FLAT tuple of outputs (explicit out_specs need a flat shape):
+# P x r_hist (collect_trace) + P x sums + P x counts + P x opt (with_opt).
+# ----------------------------------------------------------------------
+
+def _lane_svc(svc, x, g, cols, own_grid: bool, i: int):
+    """The [chunk, K_lane] service slab lane ``i`` prices: the shared slab
+    itself (fleet-grid lane), its ``svc_cols`` gather (own-grid lane under
+    Model 2 — coupled uniforms make the gathered columns bitwise equal to
+    generating on the lane grid directly), or Model-1 pricing ``g * x``
+    from the lane's own g row.  Structural mismatches raise at trace time —
+    the scenario-fused twin of the eager ``_check_lanes`` validation."""
+    if svc is None:
+        if cols is not None:
+            raise ValueError(
+                f"fan-out lane {i}: svc_cols= was given but the stream "
+                "generates no Model-2 service channel — a Model-1 lane "
+                "prices g * x from its own grid")
+        return _model1_svc(x, g)
+    if cols is None:
+        if own_grid:
+            raise ValueError(
+                f"fan-out lane {i}: a lane on its own grid must map the "
+                "shared Model-2 service slab onto its levels via svc_cols= "
+                "(the stream is generated ONCE, on the fleet grid — "
+                "HostingGrid.endpoint_columns builds the endpoint map)")
+        return svc
+    return jnp.take(svc, cols, axis=-1)
+
+
+def _lane_dp_grid(lanes):
+    """Per-lane hoisted (lv32, fetch_mat, kmask) for the co-executed DP —
+    the same prologue every offline core computes once per instance."""
+    out = []
+    for (_params, lv, _g, M, mask, _cols) in lanes:
+        lv32 = lv.astype(jnp.float32)
+        out.append((lv32, dp_fetch_matrix(M.astype(jnp.float32), lv32), mask))
+    return tuple(out)
+
+
+def _fanout_chunk(lane_fns, lane_own, include_final_fetch, with_opt,
+                  dp_backend, lanes, dp_grid, T_len, t0, sims, Js,
+                  x, c, svc, side):
+    """Advance every lane (and optionally every DP frontier) over ONE
+    shared slab — the body every fan-out driver shares.  Returns
+    (sims', Js', per-lane r chunks)."""
+    n_lanes = len(lane_fns)
+    svcs = tuple(_lane_svc(svc, x, lanes[i][2], lanes[i][5], lane_own[i], i)
+                 for i in range(n_lanes))
+    sims, rs = sim_chunk_lanes(
+        tuple(fns[1] for fns in lane_fns), include_final_fetch,
+        tuple(l[0] for l in lanes), tuple(l[1] for l in lanes),
+        tuple(l[3] for l in lanes), T_len, t0, sims, x, c, svcs, side)
+    if with_opt:
+        tids = t0 + jnp.arange(x.shape[-1], dtype=jnp.int32)
+        Js = tuple(
+            dp_fwd_chunk(J, tids, c, svck, lv32, kmask, fetch_mat,
+                         T_len, dp_backend)[0]
+            for J, (lv32, fetch_mat, kmask), svck in zip(Js, dp_grid, svcs))
+    return sims, Js, rs
+
+
+def _make_fanout_instance_core(lane_fns, lane_own, include_final_fetch: bool,
+                               n_chunks: int, has_svc: bool, has_side: bool,
+                               collect_trace: bool, with_opt: bool,
+                               dp_backend: str):
+    """Whole-horizon fan-out core for ONE instance, obs-backed.
+    Args: (lanes, T_len, x, c[, svc][, side])."""
+    n_lanes = len(lane_fns)
+
+    def core(lanes, T_len, x, c, *opt):
+        svc = opt[0] if has_svc else None
+        side = opt[1 if has_svc else 0] if has_side else None
+        sims0 = tuple(
+            (fns[0](l[0]), sim_acc0(l[1].shape[-1], l[1].dtype))
+            for fns, l in zip(lane_fns, lanes))
+        dp_grid = _lane_dp_grid(lanes) if with_opt else None
+        carry0 = ((sims0, tuple(dp_frontier0(l[1].shape[-1]) for l in lanes))
+                  if with_opt else sims0)
+
+        def run_chunk(carry, t0, xck, cck, sck, sdck):
+            sims, Js = carry if with_opt else (carry, None)
+            if sdck is None:
+                sdck = jnp.zeros(xck.shape, jnp.int32)
+            sims, Js, rs = _fanout_chunk(
+                lane_fns, lane_own, include_final_fetch, with_opt,
+                dp_backend, lanes, dp_grid, T_len, t0, sims, Js,
+                xck, cck, sck, sdck)
+            carry = (sims, Js) if with_opt else sims
+            return carry, (rs if collect_trace else None)
+
+        carry, r_hists = _chunked_drive(run_chunk, carry0, n_chunks,
+                                        (x, c, svc, side))
+        sims, Js = carry if with_opt else (carry, None)
+        outs = tuple(r_hists) if collect_trace else ()
+        outs += tuple(acc["sums"] for (_, acc) in sims)
+        outs += tuple(acc["counts"] for (_, acc) in sims)
+        if with_opt:
+            outs += tuple(jnp.min(J) for J in Js)
+        return outs
+
+    return core
+
+
+def _make_fanout_scenario_core(lane_fns, lane_own, sc_init, sc_chunk,
+                               include_final_fetch: bool, n_chunks: int,
+                               collect_trace: bool, with_opt: bool,
+                               dp_backend: str):
+    """Fused-generation fan-out core for ONE instance: the scenario's
+    ``chunk_fn`` emits each [chunk] slab exactly once inside the scan and
+    every lane consumes it.  Args: (lanes, sparams, T_len, tids_all)."""
+
+    def core(lanes, sparams, T_len, tids_all):
+        sims0 = tuple(
+            (fns[0](l[0]), sim_acc0(l[1].shape[-1], l[1].dtype))
+            for fns, l in zip(lane_fns, lanes))
+        dp_grid = _lane_dp_grid(lanes) if with_opt else None
+        carry0 = (sc_init(sparams), sims0)
+        if with_opt:
+            carry0 += (tuple(dp_frontier0(l[1].shape[-1]) for l in lanes),)
+
+        def run_chunk(carry, t0, tids):
+            gen_state, sims = carry[0], carry[1]
+            Js = carry[2] if with_opt else None
+            gen_state, slab = sc_chunk(sparams, gen_state, tids)
+            side = (slab.side if slab.side is not None
+                    else jnp.zeros(slab.x.shape, jnp.int32))
+            sims, Js, rs = _fanout_chunk(
+                lane_fns, lane_own, include_final_fetch, with_opt,
+                dp_backend, lanes, dp_grid, T_len, t0, sims, Js,
+                slab.x, slab.c, slab.svc, side)
+            carry = (gen_state, sims) + ((Js,) if with_opt else ())
+            return carry, (rs if collect_trace else None)
+
+        carry, r_hists = _chunked_drive(run_chunk, carry0, n_chunks,
+                                        (tids_all,))
+        sims = carry[1]
+        outs = tuple(r_hists) if collect_trace else ()
+        outs += tuple(acc["sums"] for (_, acc) in sims)
+        outs += tuple(acc["counts"] for (_, acc) in sims)
+        if with_opt:
+            outs += tuple(jnp.min(J) for J in carry[2])
+        return outs
+
+    return core
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_fanout_core(lane_fns, lane_own, include_final_fetch: bool,
+                          n_chunks: int, has_svc: bool, has_side: bool,
+                          collect_trace: bool, with_opt: bool,
+                          dp_backend: str, mesh: Mesh):
+    core = _make_fanout_instance_core(lane_fns, lane_own, include_final_fetch,
+                                      n_chunks, has_svc, has_side,
+                                      collect_trace, with_opt, dp_backend)
+    n_lanes = len(lane_fns)
+    spec = P(FLEET_AXIS)
+    n_args = 4 + int(has_svc) + int(has_side)
+    n_out = n_lanes * (2 + int(collect_trace) + int(with_opt))
+    sharded = shard_map(jax.vmap(core), mesh=mesh,
+                        in_specs=(spec,) * n_args,
+                        out_specs=(spec,) * n_out,
+                        # pallas_call has no replication rule
+                        check_rep=(not with_opt) or dp_backend == "xla")
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_fanout_scenario_core(lane_fns, lane_own, sc_init, sc_chunk,
+                                   include_final_fetch: bool, n_chunks: int,
+                                   collect_trace: bool, with_opt: bool,
+                                   dp_backend: str, mesh: Mesh):
+    core = _make_fanout_scenario_core(lane_fns, lane_own, sc_init, sc_chunk,
+                                      include_final_fetch, n_chunks,
+                                      collect_trace, with_opt, dp_backend)
+    n_lanes = len(lane_fns)
+    spec = P(FLEET_AXIS)
+    n_out = n_lanes * (2 + int(collect_trace) + int(with_opt))
+    sharded = shard_map(jax.vmap(core, in_axes=(0, 0, 0, None)), mesh=mesh,
+                        in_specs=(spec, spec, spec, P()),
+                        out_specs=(spec,) * n_out, check_rep=False)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_fanout_stream_step(lane_fns, lane_own,
+                                 include_final_fetch: bool, has_svc: bool,
+                                 has_side: bool, collect_trace: bool,
+                                 with_opt: bool, dp_backend: str, mesh: Mesh,
+                                 donate: bool = False):
+    """One fan-out slab step for the host streaming loop: the shared
+    [B, chunk] slab in, every lane's (state, acc) — and DP frontier with
+    ``with_opt`` — advanced in one compiled call.  Carry: ``(sims,)`` or
+    ``(sims, Js)``, tuples of per-lane pytrees."""
+
+    def step(lanes, T_len, t0, carry, xck, cck, *opt):
+        STREAM_TRACES["sim_obs_fanout"] += 1
+        sck = opt[0] if has_svc else None
+        sdck = (opt[1 if has_svc else 0] if has_side
+                else jnp.zeros(xck.shape, jnp.int32))
+        sims = carry[0]
+        Js = carry[1] if with_opt else None
+        dp_grid = _lane_dp_grid(lanes) if with_opt else None
+        sims, Js, rs = _fanout_chunk(
+            lane_fns, lane_own, include_final_fetch, with_opt, dp_backend,
+            lanes, dp_grid, T_len, t0, sims, Js, xck, cck, sck, sdck)
+        carry = (sims, Js) if with_opt else (sims,)
+        return (carry, rs) if collect_trace else carry
+
+    n_opt = int(has_svc) + int(has_side)
+    in_axes = (0, 0, None, 0, 0, 0) + (0,) * n_opt
+    spec = P(FLEET_AXIS)
+    in_specs = (spec, spec, P(), spec, spec, spec) + (spec,) * n_opt
+    out_specs = (spec, spec) if collect_trace else spec
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
+                        in_specs=in_specs, out_specs=out_specs,
+                        check_rep=(not with_opt) or dp_backend == "xla")
+    donate_argnums = tuple(range(3, 6 + n_opt)) if donate else ()
+    return jax.jit(sharded, donate_argnums=donate_argnums)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_fanout_scenario_stream_step(lane_fns, lane_own, sc_init,
+                                          sc_chunk,
+                                          include_final_fetch: bool,
+                                          chunk: int, collect_trace: bool,
+                                          with_opt: bool, dp_backend: str,
+                                          mesh: Mesh, donate: bool = False):
+    """One fused-generation fan-out slab step: the host ships one scalar
+    offset per chunk, the generator runs once, every lane consumes its
+    slab.  Carry: ``(gen_state, sims[, Js])``."""
+
+    def step(lanes, sparams, T_len, t0, carry):
+        STREAM_TRACES["sim_scenario_fanout"] += 1
+        tids = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        gen_state, sims = carry[0], carry[1]
+        Js = carry[2] if with_opt else None
+        dp_grid = _lane_dp_grid(lanes) if with_opt else None
+        gen_state, slab = sc_chunk(sparams, gen_state, tids)
+        side = (slab.side if slab.side is not None
+                else jnp.zeros(slab.x.shape, jnp.int32))
+        sims, Js, rs = _fanout_chunk(
+            lane_fns, lane_own, include_final_fetch, with_opt, dp_backend,
+            lanes, dp_grid, T_len, t0, sims, Js, slab.x, slab.c, slab.svc,
+            side)
+        carry = (gen_state, sims) + ((Js,) if with_opt else ())
+        return (carry, rs) if collect_trace else carry
+
+    spec = P(FLEET_AXIS)
+    in_axes = (0, 0, 0, None, 0)
+    in_specs = (spec, spec, spec, P(), spec)
+    out_specs = (spec, spec) if collect_trace else spec
+    sharded = shard_map(jax.vmap(step, in_axes=in_axes), mesh=mesh,
+                        in_specs=in_specs, out_specs=out_specs,
+                        check_rep=False)
+    return jax.jit(sharded, donate_argnums=(4,) if donate else ())
+
+
 def _pad_params(params, B_pad: int):
     """Pad every [B]-leading leaf of a params pytree (policy or scenario)
     to B_pad by replicating row 0 (padded instances run with T = 0)."""
@@ -865,6 +1225,75 @@ def _policy_arrays(policy: PolicyFns, fleet: FleetBatch, B_pad: int, mesh):
     M = _pad_rows(fleet.grid.M.astype(dt), B_pad)
     return (_dev_tree(mesh, params), _dev_rows(mesh, lv),
             _dev_rows(mesh, g), _dev_rows(mesh, M))
+
+
+def _check_lanes(lanes, fleet: FleetBatch, has_svc: Optional[bool]):
+    """Eager fan-out validation — the policy-axis home of the old
+    ``fused_policy_families`` same-stream-family check: lanes share the
+    stream by construction, the engine verifies each lane can PRICE it.
+    ``has_svc`` is None when the service channel is only known at trace
+    time (scenario-fused runs), where ``_lane_svc`` enforces the same
+    rules on the generated slab's structure."""
+    for i, lane in enumerate(lanes):
+        if not isinstance(lane.fns, PolicyFns):
+            raise TypeError(f"fan-out lane {i}: .fns must be a PolicyFns, "
+                            f"got {type(lane.fns).__name__}")
+        if lane.grid is not None and lane.grid.B != fleet.B:
+            raise ValueError(
+                f"fan-out lane {i} ({lane.name!r}): lane grid B="
+                f"{lane.grid.B} != fleet B={fleet.B}")
+        if lane.svc_cols is not None:
+            if lane.grid is None:
+                raise ValueError(
+                    f"fan-out lane {i} ({lane.name!r}): svc_cols= without a "
+                    "lane grid — a fleet-grid lane prices the shared svc "
+                    "slab directly")
+            if has_svc is False:
+                raise ValueError(
+                    f"fan-out lane {i} ({lane.name!r}): svc_cols= but the "
+                    "fleet carries no Model-2 service channel — a Model-1 "
+                    "lane prices g * x from its own grid")
+            cols = np.asarray(lane.svc_cols)
+            if cols.ndim != 2 or cols.shape[0] != fleet.B:
+                raise ValueError(
+                    f"fan-out lane {i} ({lane.name!r}): svc_cols must be "
+                    f"[B={fleet.B}, K_lane], got shape {cols.shape}")
+        elif lane.grid is not None and has_svc is True:
+            raise ValueError(
+                f"fan-out lane {i} ({lane.name!r}): a lane on its own grid "
+                "must map the fleet's Model-2 service slab onto its levels "
+                "via svc_cols= (HostingGrid.endpoint_columns builds the "
+                "endpoint map)")
+
+
+def _lane_arrays(lanes, padded: FleetBatch, S: int, mesh):
+    """Per-lane device arg tuples of the fan-out cores — (params, lv, g, M,
+    mask, cols) per lane, every row block seed-replicated (x S) and padded
+    to the fleet's B_pad exactly as ``_policy_arrays``/``_replicate_mc`` do
+    for the classic path.  Fleet-grid lanes (grid=None) reuse the padded
+    fleet grid's rows untouched."""
+    dt = default_float_dtype()
+    B_pad = padded.B
+    rep = lambda a: (jnp.asarray(a) if S == 1
+                     else jnp.repeat(jnp.asarray(a), S, axis=0))
+    out = []
+    for lane in lanes:
+        pol = _replicate_policy(lane.fns, S)
+        params = _dev_tree(mesh, _pad_params(pol.params, B_pad))
+        if lane.grid is None:
+            grid, prep = padded.grid, (lambda a: a)
+        else:
+            grid, prep = lane.grid, (lambda a: _pad_rows(rep(a), B_pad))
+        lv = _dev_rows(mesh, prep(grid.levels.astype(dt)))
+        g = _dev_rows(mesh, prep(grid.g.astype(dt)))
+        M = _dev_rows(mesh, prep(grid.M.astype(dt)))
+        mask = _dev_rows(mesh, prep(grid.mask))
+        cols = None
+        if lane.svc_cols is not None:
+            cols = _dev_rows(mesh, _pad_rows(
+                rep(jnp.asarray(lane.svc_cols, jnp.int32)), B_pad))
+        out.append((params, lv, g, M, mask, cols))
+    return tuple(out)
 
 
 def _check_scenario(scenario: Scenario, fleet: FleetBatch):
@@ -907,7 +1336,7 @@ def _replicate_policy(policy: PolicyFns, S: int) -> PolicyFns:
         lambda a: jnp.repeat(jnp.asarray(a), S, axis=0), policy.params))
 
 
-def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
+def run_fleet(policy, fleet: FleetBatch, *,
               scenario: Optional[Scenario] = None,
               mesh: Optional[Mesh] = None, chunk_size: Optional[int] = None,
               include_final_fetch: bool = True,
@@ -915,6 +1344,8 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
               n_seeds: Optional[int] = None,
               antithetic: bool = False,
               prng_backend: str = "xla",
+              with_opt_forward: bool = False,
+              dp_backend: str = "xla",
               async_ingest: bool = False,
               gather: bool = False) -> FleetResult:
     """Simulate a fleet: sharded over devices, chunked/streamed over time.
@@ -924,6 +1355,13 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         axis matching ``fleet.grid`` (``AlphaRR.fleet(fleet)``, ...).  For
         RR-style restrictions pass the restricted fleet
         (``fleet.restrict_to_endpoints()``), as with ``run_policy_batch``.
+        Alternatively a SEQUENCE of policies — the fan-out axis: every
+        entry (a ``PolicyFns``, or a ``policies.PolicyLane`` binding its
+        own accounting grid + Model-2 ``svc_cols`` map) steps against the
+        ONE shared obs stream inside the same compiled program, and the
+        result comes back policy-major (``FleetResult.policy_view``) with
+        lane p bitwise equal to its standalone run.  See "Policy fan-out"
+        in the module docstring.
       fleet: the stacked instances (mixed horizons allowed).
       scenario: generate observations ON DEVICE inside the scan instead of
         reading them from ``fleet`` (which must then be obs-less:
@@ -955,6 +1393,16 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
         uniforms ("xla" default — the canonical reference; "pallas" fuses
         the fold/salt/uniform chain via ``scenarios.with_prng_backend``).
         Bit-identical observations either way (requires ``scenario=``).
+      with_opt_forward: co-execute the offline DP's [K] entry frontier per
+        policy lane against the same shared stream (the cost-only forward
+        pass — ``dp_fwd_chunk``, the offline drivers' own chunk kernel)
+        and return ``FleetResult.opt_cost``: per row, bitwise the
+        ``offline_opt_fleet(..., checkpointed=True,
+        collect_schedule=False).cost`` of the lane's fleet.  A plain
+        ``PolicyFns`` policy is treated as a single-lane fan-out.
+      dp_backend: min-plus engine for the co-executed DP ("xla" default /
+        "pallas"), exactly as in ``offline_opt_fleet``; only consulted
+        with ``with_opt_forward=True``.
       async_ingest: with ``stream=True`` on an obs-backed fleet, prepare
         slab n+1 (host slicing + device put) on a background prefetch
         thread while the device executes slab n
@@ -970,15 +1418,26 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     Every configuration (any mesh size x any chunking x any driver x fused
     or materialized generation — and any ``prng_backend``) returns
     bit-identical results; see tests/test_fleet_engine.py,
-    tests/test_scenarios.py, tests/test_mc_driver.py and
-    tests/test_backend_dispatch.py.
+    tests/test_scenarios.py, tests/test_mc_driver.py,
+    tests/test_backend_dispatch.py and tests/test_policy_fanout.py.
     """
+    lanes = as_policy_lanes(policy)
+    if lanes is None and with_opt_forward:
+        lanes = (PolicyLane(policy),)
+    if lanes is not None:
+        return _run_fleet_fanout(
+            lanes, fleet, scenario=scenario, mesh=mesh,
+            chunk_size=chunk_size, include_final_fetch=include_final_fetch,
+            stream=stream, collect_trace=collect_trace, n_seeds=n_seeds,
+            antithetic=antithetic, prng_backend=prng_backend,
+            dp_backend=dp_backend, with_opt=with_opt_forward,
+            async_ingest=async_ingest, gather=gather)
     if stream and chunk_size is None:
         raise ValueError("stream=True requires chunk_size")
     if async_ingest and not stream:
         raise ValueError("async_ingest=True requires stream=True (only the "
                          "host-driven driver ships slabs to prefetch)")
-    _check_backends("xla", prng_backend, scenario)
+    _check_backends(dp_backend, prng_backend, scenario)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     if scenario is not None:
         scenario = with_prng_backend(scenario, prng_backend)
@@ -1032,6 +1491,110 @@ def run_fleet(policy: PolicyFns, fleet: FleetBatch, *,
     return _gather_result(res, mesh) if gather else res
 
 
+def _run_fleet_fanout(lanes, fleet: FleetBatch, *, scenario, mesh,
+                      chunk_size, include_final_fetch, stream, collect_trace,
+                      n_seeds, antithetic, prng_backend, dp_backend,
+                      with_opt, async_ingest, gather) -> FleetResult:
+    """Driver of the policy fan-out axis (see the module docstring): ONE
+    generation pass, P policy lanes (+ optional per-lane DP frontiers),
+    chunked or streamed, returning a policy-major ``FleetResult``."""
+    if stream and chunk_size is None:
+        raise ValueError("stream=True requires chunk_size")
+    if async_ingest and not stream:
+        raise ValueError("async_ingest=True requires stream=True (only the "
+                         "host-driven driver ships slabs to prefetch)")
+    _check_backends(dp_backend, prng_backend, scenario)
+    has_svc = None if scenario is not None else fleet.svc is not None
+    _check_lanes(lanes, fleet, has_svc)
+    fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
+    if scenario is not None:
+        scenario = with_prng_backend(scenario, prng_backend)
+    B, T_max = fleet.B, fleet.T_max
+    mesh, padded, n_chunks, T_pad = _prepare_fleet(fleet, mesh, chunk_size)
+    lane_args = _lane_arrays(lanes, padded, S, mesh)
+    lane_fns = tuple((l.fns.init_fn, l.fns.step_fn) for l in lanes)
+    lane_own = tuple(l.grid is not None for l in lanes)
+    n_lanes = len(lanes)
+
+    if scenario is not None:
+        _check_scenario(scenario, fleet)
+        sparams = _dev_tree(mesh, _pad_params(scenario.params, padded.B))
+        if stream:
+            return _run_fleet_fanout_streamed(
+                lanes, lane_fns, lane_own, lane_args, scenario, padded,
+                sparams, mesh, n_chunks, T_pad, include_final_fetch,
+                collect_trace, with_opt, dp_backend, B, T_max, fleet.T, S,
+                False, gather)
+        core = _compiled_fanout_scenario_core(
+            lane_fns, lane_own, scenario.init_fn, scenario.chunk_fn,
+            include_final_fetch, n_chunks, collect_trace, with_opt,
+            dp_backend, mesh)
+        tids_all = _dev_replicated(mesh, np.arange(T_pad, dtype=np.int32))
+        with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+            outs = core(lane_args, sparams, _dev_rows(mesh, padded.T),
+                        tids_all)
+    else:
+        has_side = padded.side is not None
+        if stream:
+            return _run_fleet_fanout_streamed(
+                lanes, lane_fns, lane_own, lane_args, None, padded, None,
+                mesh, n_chunks, T_pad, include_final_fetch, collect_trace,
+                with_opt, dp_backend, B, T_max, fleet.T, S, async_ingest,
+                gather)
+        core = _compiled_fanout_core(
+            lane_fns, lane_own, include_final_fetch, n_chunks, has_svc,
+            has_side, collect_trace, with_opt, dp_backend, mesh)
+        args = (lane_args, _dev_rows(mesh, padded.T),
+                _dev_rows(mesh, padded.x), _dev_rows(mesh, padded.c))
+        if has_svc:
+            args += (_dev_rows(mesh, padded.svc),)
+        if has_side:
+            args += (_dev_rows(mesh, padded.side),)
+        with shard_ctx(mesh, (FLEET_AXIS,), model_axis=None):
+            outs = core(*args)
+    i = 0
+    r_lanes = None
+    if collect_trace:
+        r_lanes, i = outs[:n_lanes], n_lanes
+    sums_lanes = outs[i:i + n_lanes]
+    counts_lanes = outs[i + n_lanes:i + 2 * n_lanes]
+    opt_lanes = outs[i + 2 * n_lanes:] if with_opt else None
+    return _fanout_result(r_lanes, sums_lanes, counts_lanes, opt_lanes,
+                          B, T_max, fleet.T, S, mesh, gather)
+
+
+def _run_fleet_fanout_streamed(lanes, lane_fns, lane_own, lane_args,
+                               scenario, padded, sparams, mesh, n_chunks,
+                               T_pad, include_final_fetch, collect_trace,
+                               with_opt, dp_backend, B, T_max, T_orig,
+                               n_seeds, async_ingest, gather) -> FleetResult:
+    """Host-driven fan-out streaming: a thin loop over the persistent
+    fan-out ``FleetStepper`` (same donated-carry, zero-retrace contract as
+    the single-policy streamed drivers)."""
+    chunk = T_pad // n_chunks
+    has_svc = scenario is None and padded.svc is not None
+    has_side = scenario is None and padded.side is not None
+    stepper = _make_fanout_stepper(lanes, lane_fns, lane_own, lane_args,
+                                   scenario, padded, sparams, mesh, chunk,
+                                   include_final_fetch, collect_trace,
+                                   with_opt, dp_backend, True, has_svc,
+                                   has_side, B, T_max, T_orig, n_seeds)
+    if scenario is None:
+        make_slab = _obs_slab_builder(padded, chunk, mesh, with_side=True)
+        feed = slab_feed(make_slab, n_chunks, async_ingest)
+    else:
+        feed = (() for _ in range(n_chunks))
+    r_parts = [[] for _ in lanes]
+    for slabs in feed:
+        rs = stepper.step_slabs(slabs)
+        if collect_trace:
+            for p, r in enumerate(rs):
+                r_parts[p].append(_local_rows(r))
+    r_hist = (tuple(np.concatenate(parts, axis=1) for parts in r_parts)
+              if collect_trace else None)
+    return stepper.result(r_hist, gather=gather)
+
+
 def _sim_carry0(policy, params, B_pad, K, dt, mesh):
     return (_vmap_init(policy.init_fn, params, mesh),
             {"sums": _dev_rows(mesh, np.zeros((B_pad, 3), dt)),
@@ -1070,7 +1633,9 @@ class FleetStepper:
 
     def __init__(self, *, call, carry, chunk, mesh, has_out, kind,
                  scenario_mode, donate, B, B_pad, K, T_max, T_orig,
-                 n_seeds=1, lv_host=None, with_svc=False, with_side=False):
+                 n_seeds=1, lv_host=None, with_svc=False, with_side=False,
+                 fanout=False, n_policies=1, with_opt=False,
+                 lane_lv_host=None):
         self._call = call
         self.carry = carry
         self.chunk = int(chunk)
@@ -1084,6 +1649,10 @@ class FleetStepper:
         self._n_seeds = n_seeds
         self._lv_host = lv_host            # np [B_pad, K] level values
         self._with_svc, self._with_side = with_svc, with_side
+        self._fanout = fanout              # multi-lane carry layout
+        self.n_policies = int(n_policies)
+        self._with_opt = with_opt          # co-executed DP frontiers
+        self._lane_lv_host = lane_lv_host  # per-lane np [B_pad, K_p] levels
         self.t = 0                         # next slot offset
         self.steps = 0
 
@@ -1148,7 +1717,12 @@ class FleetStepper:
             elif side is not None:
                 raise ValueError("stepper built without a side channel")
             out = self.step_slabs(slabs)
-        return None if out is None else _local_rows(out)[:self._B]
+        if out is None:
+            return None
+        if self._fanout:
+            # one [B, chunk] level block per lane, stacked policy-major
+            return np.stack([_local_rows(r)[:self._B] for r in out])
+        return _local_rows(out)[:self._B]
 
     # ---- readbacks ---------------------------------------------------
     # On a process-spanning mesh every readback is this process's own
@@ -1156,24 +1730,57 @@ class FleetStepper:
     # ``gather=True`` for the full [B_global] fleet view (one cross-host
     # collective).  ``gather`` is a no-op on single-process meshes.
 
-    def _sim_carry(self):
+    def _lane_sims(self):
+        """The tuple of per-lane (state, acc) carries (fan-out steppers)."""
+        return self.carry[1] if self._scenario_mode else self.carry[0]
+
+    def _lane_Js(self):
+        """The tuple of per-lane DP frontiers (with_opt fan-out steppers)."""
+        if not self._with_opt:
+            raise ValueError("opt readback needs with_opt_forward=True")
+        return self.carry[2] if self._scenario_mode else self.carry[1]
+
+    def _sim_carry(self, policy: int = 0):
         if self._kind != "sim":
             raise ValueError("simulation readback on a DP stepper")
+        if self._fanout:
+            return self._lane_sims()[policy]
+        if policy:
+            raise ValueError("policy= readback needs a fan-out stepper")
         return self.carry[1] if self._scenario_mode else self.carry
 
-    def hosting_levels(self, gather: bool = False) -> np.ndarray:
-        """[B] current per-instance hosting level *indices* r_t."""
-        state, _ = self._sim_carry()
+    def hosting_levels(self, gather: bool = False,
+                       policy: int = 0) -> np.ndarray:
+        """[B] current per-instance hosting level *indices* r_t (of fan-out
+        lane ``policy``, on multi-policy steppers)."""
+        state, _ = self._sim_carry(policy)
         r = _local_rows(state["r"])[:self._B].astype(np.int64)
         return _gather_rows(self._mesh, r) if gather else r
 
-    def hosting_fractions(self, gather: bool = False) -> np.ndarray:
+    def hosting_fractions(self, gather: bool = False,
+                          policy: int = 0) -> np.ndarray:
         """[B] current per-instance hosting *fractions* (the level values
         ell_{r_t} in [0, 1]) — the live serving decision readback."""
-        r = self.hosting_levels()
-        lv = self._lv_host[:self._B]
+        r = self.hosting_levels(policy=policy)
+        lv = (self._lane_lv_host[policy] if self._fanout
+              else self._lv_host)[:self._B]
         frac = np.take_along_axis(lv, r[:, None], axis=1)[:, 0]
         return _gather_rows(self._mesh, frac) if gather else frac
+
+    def opt_cost(self, gather: bool = False,
+                 policy: Optional[int] = None) -> np.ndarray:
+        """Current offline-DP optimum of the slots stepped so far, from the
+        co-executed frontiers (``with_opt_forward=True`` steppers): the
+        host-side ``J.min(axis=1)`` every streamed DP driver uses.  [B] for
+        one ``policy=`` lane, else [P, B] over all lanes."""
+        Js = self._lane_Js()
+        if policy is not None:
+            Js = (Js[policy],)
+        gr = ((lambda a: _gather_rows(self._mesh, a)) if gather
+              else (lambda a: a))
+        costs = [gr(_local_rows(J)[:self._B].min(axis=1).astype(np.float64))
+                 for J in Js]
+        return costs[0] if policy is not None else np.stack(costs)
 
     def frontier(self, gather: bool = False) -> np.ndarray:
         """[B, K] DP value frontier (DP steppers only)."""
@@ -1187,7 +1794,23 @@ class FleetStepper:
         """Totals accumulated so far as a ``FleetResult`` (bit-identical
         to one ``run_fleet`` call over the same slabs — the engine
         invariant).  ``r_hist``: optionally, the concatenated per-step
-        level outputs to attach as the trace."""
+        level outputs to attach as the trace (on a fan-out stepper, a
+        per-lane tuple — the result is policy-major, with ``opt_cost``
+        attached when constructed with ``with_opt_forward=True``)."""
+        if self._fanout:
+            if self._kind != "sim":
+                raise ValueError("simulation readback on a DP stepper")
+            sims = self._lane_sims()
+            opt_lanes = None
+            if self._with_opt:
+                opt_lanes = tuple(
+                    _local_rows(J)[:self._B].min(axis=1)
+                    for J in self._lane_Js())
+            return _fanout_result(
+                r_hist, tuple(acc["sums"] for (_, acc) in sims),
+                tuple(acc["counts"] for (_, acc) in sims), opt_lanes,
+                self._B, self._T_max, self._T_orig, self._n_seeds,
+                self._mesh, gather)
         (_, acc) = self._sim_carry()
         res = _fleet_result(r_hist, acc["sums"], acc["counts"], self._B,
                             self._T_max, self._T_orig, self._n_seeds)
@@ -1259,17 +1882,81 @@ def _make_sim_stepper(policy, scenario, padded, params, sparams, lv, g, M,
                         with_side=has_side)
 
 
-def fleet_stepper(policy: PolicyFns, fleet: FleetBatch, *,
+def _make_fanout_stepper(lanes, lane_fns, lane_own, lane_args, scenario,
+                         padded, sparams, mesh, chunk, include_final_fetch,
+                         collect_trace, with_opt, dp_backend, donate,
+                         has_svc, has_side, B, T_max, T_orig, n_seeds):
+    """Build a fan-out ``FleetStepper``: the compiled multi-lane slab step,
+    the tuple-of-lane-carries (+ per-lane DP frontiers with ``with_opt``),
+    per-lane level rows for the fraction readbacks."""
+    T_dev = _dev_rows(mesh, padded.T)
+    dt = default_float_dtype()
+    B_pad = padded.B
+    sims0 = tuple(
+        (_vmap_init(fns[0], largs[0], mesh),
+         {"sums": _dev_rows(mesh, np.zeros((B_pad, 3), dt)),
+          "counts": _dev_rows(mesh, np.zeros((B_pad, largs[1].shape[-1]),
+                                             np.int32))})
+        for fns, largs in zip(lane_fns, lane_args))
+    Js0 = ()
+    if with_opt:
+        Js0 = (tuple(
+            _dev_rows(mesh, np.broadcast_to(
+                np.asarray(dp_frontier0(largs[1].shape[-1])),
+                (B_pad, largs[1].shape[-1])))
+            for largs in lane_args),)
+    if scenario is not None:
+        step = _compiled_fanout_scenario_stream_step(
+            lane_fns, lane_own, scenario.init_fn, scenario.chunk_fn,
+            include_final_fetch, chunk, collect_trace, with_opt, dp_backend,
+            mesh, donate)
+        carry = (_vmap_init(scenario.init_fn, sparams, mesh), sims0) + Js0
+
+        def call(carry, t0, slabs):
+            return step(lane_args, sparams, T_dev, t0, carry)
+    else:
+        step = _compiled_fanout_stream_step(
+            lane_fns, lane_own, include_final_fetch, has_svc, has_side,
+            collect_trace, with_opt, dp_backend, mesh, donate)
+        carry = (sims0,) + Js0
+
+        def call(carry, t0, slabs):
+            return step(lane_args, T_dev, t0, carry, *slabs)
+
+    return FleetStepper(
+        call=call, carry=carry, chunk=chunk, mesh=mesh,
+        has_out=collect_trace, kind="sim",
+        scenario_mode=scenario is not None, donate=donate, B=B, B_pad=B_pad,
+        K=padded.K, T_max=T_max, T_orig=T_orig, n_seeds=n_seeds,
+        lv_host=_local_rows(lane_args[0][1]), with_svc=has_svc,
+        with_side=has_side, fanout=True, n_policies=len(lanes),
+        with_opt=with_opt,
+        lane_lv_host=tuple(_local_rows(a[1]) for a in lane_args))
+
+
+def fleet_stepper(policy, fleet: FleetBatch, *,
                   scenario: Optional[Scenario] = None,
                   mesh: Optional[Mesh] = None, chunk_size: int = 1,
                   include_final_fetch: bool = True,
                   collect_trace: bool = True,
                   n_seeds: Optional[int] = None, antithetic: bool = False,
                   prng_backend: str = "xla",
+                  with_opt_forward: bool = False,
+                  dp_backend: str = "xla",
                   donate: bool = True) -> FleetStepper:
     """Long-lived stepping API for live fleets: pre-compile once, then
     ``step()`` the whole fleet one [B, chunk_size] telemetry slab at a
     time with zero retraces and a donated carry.
+
+    ``policy`` may be a SEQUENCE of policies (``PolicyFns`` /
+    ``PolicyLane`` lanes, as in ``run_fleet``): every admitted slab then
+    steps all lanes in one compiled call — the live scheduler's
+    shadow-scoring hook (``LiveFleetScheduler``), where candidate policies
+    accumulate their would-have-been costs on the production telemetry.
+    Readbacks take ``policy=`` lane indices; ``step()`` returns [P, B,
+    chunk] levels; ``result()`` is policy-major.  ``with_opt_forward=True``
+    co-advances each lane's offline-DP frontier (``opt_cost()`` readback —
+    the exact hindsight optimum of the slots admitted so far).
 
     Obs-backed mode (``scenario=None``): telemetry arrives through
     ``step(x, c[, svc][, side])`` — the fleet only contributes its grid
@@ -1289,21 +1976,37 @@ def fleet_stepper(policy: PolicyFns, fleet: FleetBatch, *,
     ``n_seeds`` x device-count configs.  ``donate=False`` only if you
     must retain carry references across steps.
     """
-    _check_backends("xla", prng_backend, scenario)
+    lanes = as_policy_lanes(policy)
+    if lanes is None and with_opt_forward:
+        lanes = (PolicyLane(policy),)
+    _check_backends(dp_backend, prng_backend, scenario)
     if scenario is None and n_seeds is not None:
         raise ValueError("n_seeds= needs scenario= (as in run_fleet)")
+    if lanes is not None:
+        _check_lanes(lanes, fleet,
+                     None if scenario is not None else fleet.svc is not None)
     fleet, scenario, S = _replicate_mc(fleet, scenario, n_seeds, antithetic)
     if scenario is not None:
         _check_scenario(scenario, fleet)
         scenario = with_prng_backend(scenario, prng_backend)
-    policy = _replicate_policy(policy, S)
     B, T_max = fleet.B, fleet.T_max
     mesh, padded, _, _ = _prepare_fleet(fleet, mesh, int(chunk_size))
-    params, lv, g, M = _policy_arrays(policy, padded, padded.B, mesh)
     sparams = (None if scenario is None
                else _dev_tree(mesh, _pad_params(scenario.params, padded.B)))
     has_svc = scenario is None and fleet.svc is not None
     has_side = scenario is None and fleet.side is not None
+    if lanes is not None:
+        lane_args = _lane_arrays(lanes, padded, S, mesh)
+        lane_fns = tuple((l.fns.init_fn, l.fns.step_fn) for l in lanes)
+        lane_own = tuple(l.grid is not None for l in lanes)
+        return _make_fanout_stepper(lanes, lane_fns, lane_own, lane_args,
+                                    scenario, padded, sparams, mesh,
+                                    int(chunk_size), include_final_fetch,
+                                    collect_trace, with_opt_forward,
+                                    dp_backend, donate, has_svc, has_side,
+                                    B, T_max, fleet.T, S)
+    policy = _replicate_policy(policy, S)
+    params, lv, g, M = _policy_arrays(policy, padded, padded.B, mesh)
     return _make_sim_stepper(policy, scenario, padded, params, sparams, lv,
                              g, M, mesh, int(chunk_size),
                              include_final_fetch, collect_trace, donate,

@@ -1,4 +1,5 @@
-from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs
+from repro.core.policies.base import (OnlinePolicy, PolicyFns, PolicyLane,
+                                      SlotObs, as_policy_lanes)
 from repro.core.policies.alpha_rr import (AlphaRR, RetroRenting,
                                           alpha_rr_literal, alpha_rr_params,
                                           alpha_rr_grid_params, alpha_rr_init,
@@ -11,7 +12,8 @@ from repro.core.policies.baselines import (StaticPolicy, MDPPolicy, ABCPolicy,
                                            solve_mdp, solve_abc)
 
 __all__ = [
-    "OnlinePolicy", "PolicyFns", "SlotObs", "AlphaRR", "RetroRenting",
+    "OnlinePolicy", "PolicyFns", "PolicyLane", "SlotObs", "as_policy_lanes",
+    "AlphaRR", "RetroRenting",
     "alpha_rr_literal", "alpha_rr_params", "alpha_rr_grid_params",
     "alpha_rr_init", "alpha_rr_step",
     "offline_opt", "offline_opt_batch", "offline_opt_no_partial",

@@ -39,7 +39,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.costs import HostingCosts, HostingGrid
-from repro.core.policies.base import OnlinePolicy, PolicyFns, SlotObs, State
+from repro.core.policies.base import (OnlinePolicy, PolicyFns, PolicyLane,
+                                      SlotObs, State)
 
 _BIG = jnp.float32(3.4e38)  # acts as +inf for min(0, .) gating
 _TIE_EPS = 1e-6             # ties break toward staying (no spurious fetch)
@@ -140,6 +141,15 @@ class AlphaRR(OnlinePolicy):
         the engine handles per-instance T masking."""
         return cls.batch(fleet.grid)
 
+    @classmethod
+    def fleet_lane(cls, fleet: "FleetBatch",  # noqa: F821
+                   with_svc: bool = False) -> PolicyLane:
+        """This policy as ONE entry of ``run_fleet``'s policy fan-out axis.
+        alpha-RR scores on the fleet's own grid, so the lane carries no
+        grid/column map of its own (the shared svc slab applies directly)."""
+        del with_svc
+        return PolicyLane(cls.fleet(fleet))
+
 
 class RetroRenting(AlphaRR):
     """RR of [22]: AlphaRR restricted to levels (0, 1).  Provided as a named
@@ -161,6 +171,18 @@ class RetroRenting(AlphaRR):
         """RR policy batch for a fleet; run it on
         ``fleet.restrict_to_endpoints()`` (the accounting grid must match)."""
         return cls.batch(fleet.grid)
+
+    @classmethod
+    def fleet_lane(cls, fleet: "FleetBatch",  # noqa: F821
+                   with_svc: bool = False) -> PolicyLane:
+        """RR as a fan-out lane on its OWN endpoint accounting grid; under a
+        Model-2 svc slab (``with_svc=True``) the lane gathers its two
+        columns out of the fleet-grid slab (bitwise equal to generating on
+        the endpoint grid directly — coupled uniforms)."""
+        grid = fleet.grid
+        return PolicyLane(cls.fleet(fleet), grid=grid.restrict_to_endpoints(),
+                          svc_cols=grid.endpoint_columns() if with_svc
+                          else None)
 
 
 # ----------------------------------------------------------------------

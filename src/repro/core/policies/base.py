@@ -35,13 +35,29 @@ needs no awareness of T at all; its only obligations are the existing ones
 index).  Concrete policies expose ``.fleet(...)`` classmethods mirroring
 ``.batch(...)`` that bind stacked params from a ``FleetBatch``.
 
+Policy fan-out (multi-policy) convention
+----------------------------------------
+``core.fleet.run_fleet`` accepts a *sequence* of policies — the fan-out
+axis.  Each entry is a **lane**: a ``PolicyFns`` (scored on the fleet's own
+grid) or a ``PolicyLane`` binding the pair to its *own* accounting grid
+(e.g. the endpoint restriction for RR) plus, for Model-2 scenarios, the
+``svc_cols`` column map that gathers the lane's per-level service costs out
+of the slab generated once on the fleet grid.  Lane states are
+**heterogeneous** — different policies carry different state pytrees over
+different K — so the fan-out carry is a *tuple of per-lane (state, acc)
+pytrees*, never a stacked array: a Python tuple is itself a pytree, which
+is exactly what lets ``freeze_invalid`` (applied inside each lane's own
+``sim_chunk_core`` call) keep masking per policy with zero shared
+structure.  See ``simulator.sim_chunk_lanes`` and the "Policy fan-out"
+section of ``core/fleet.py``.
+
 Sequence of events in a slot (paper §2.5): arrivals happen and are served at
 the current level; the provider announces the next rent; the policy picks
 ``r_{t+1}``; any fetch for the increment is paid now.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +98,51 @@ class PolicyFns(NamedTuple):
     init_fn: Callable[[Any], State]
     step_fn: Callable[[Any, State, SlotObs], State]
     params: Any
+
+
+class PolicyLane(NamedTuple):
+    """ONE entry of the policy fan-out axis (see module docstring).
+
+    ``grid=None`` means the lane runs on the fleet's own grid.  A lane with
+    its own grid (same B, its own K/levels/g — e.g.
+    ``grid.restrict_to_endpoints()`` for RR) must also say how it prices
+    service under a Model-2 scenario: ``svc_cols`` is a [B, K_lane] int map
+    gathering the lane's columns out of the [chunk, K_fleet] svc slab that
+    the scenario generates ONCE on the fleet grid (coupled Model-2 uniforms
+    make the gathered columns bitwise equal to generating on the lane grid
+    directly — ``scenarios.model2_service``).  Model-1 lanes leave
+    ``svc_cols=None`` and price ``g_lane * x`` from their own g row.
+    """
+
+    fns: PolicyFns
+    grid: Optional[Any] = None       # HostingGrid; None -> fleet.grid
+    svc_cols: Optional[Any] = None   # [B, K_lane] int32 columns into fleet svc
+
+    @property
+    def name(self) -> str:
+        return self.fns.name
+
+
+def as_policy_lanes(policy) -> Optional[tuple]:
+    """``None`` for a single ``PolicyFns`` (the classic path); otherwise the
+    normalized tuple of ``PolicyLane`` entries of a fan-out request."""
+    if isinstance(policy, PolicyFns):
+        return None
+    if isinstance(policy, PolicyLane):
+        return (policy,)
+    lanes = []
+    for entry in policy:
+        if isinstance(entry, PolicyLane):
+            lanes.append(entry)
+        elif isinstance(entry, PolicyFns):
+            lanes.append(PolicyLane(entry))
+        else:
+            raise TypeError(
+                f"policy fan-out entries must be PolicyFns or PolicyLane, "
+                f"got {type(entry).__name__}")
+    if not lanes:
+        raise ValueError("policy fan-out needs at least one lane")
+    return tuple(lanes)
 
 
 class OnlinePolicy:

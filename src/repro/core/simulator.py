@@ -189,6 +189,35 @@ def sim_chunk_core(step_fn, include_final_fetch: bool,
     return jax.lax.scan(step, carry, (tids, x, c, svc, side))
 
 
+def sim_chunk_lanes(step_fns, include_final_fetch: bool,
+                    lane_params, lane_lv, lane_M, T_len, t0, carries,
+                    x, c, lane_svc, side):
+    """Step P heterogeneous policy *lanes* over ONE shared ``[chunk]`` obs
+    slab — the stacked-policy carry path of the fan-out axis.
+
+    ``carries`` is a tuple of per-lane ``(state, acc)`` pytrees (states are
+    heterogeneous — different policies, different K — so a tuple, never a
+    stacked array).  Each lane's slabs differ only in the per-level service
+    channel (``lane_svc[p]`` is [chunk, K_p]: Model-1 prices from the lane's
+    own g, Model-2 gathers the lane's columns out of the shared slab); x, c
+    and side are the single generated stream.  Every lane is literally one
+    ``sim_chunk_core`` call — the same op chain, the same in-carry reduction
+    order, the same ``freeze_invalid`` masking as its standalone run — so
+    fan-out == standalone holds *by construction*, not by accident of
+    compilation.
+
+    Returns ``(carries', r_hists)`` — tuples of per-lane chunk results.
+    """
+    new_carries, r_hists = [], []
+    for step_fn, params, lv, M, carry, svc in zip(
+            step_fns, lane_params, lane_lv, lane_M, carries, lane_svc):
+        carry, r = sim_chunk_core(step_fn, include_final_fetch, params, lv, M,
+                                  T_len, t0, carry, x, c, svc, side)
+        new_carries.append(carry)
+        r_hists.append(r)
+    return tuple(new_carries), tuple(r_hists)
+
+
 def _sim_core(init_fn, step_fn, include_final_fetch: bool,
               params, lv, M, x, c, svc, side):
     """One instance, whole horizon: the one-chunk case of ``sim_chunk_core``.

@@ -25,6 +25,7 @@ from repro.core.costs import HostingCosts, HostingGrid
 from repro.core.fleet import FleetBatch, FleetResult, fleet_stepper
 from repro.core.hosting_controller import HostingController
 from repro.core.policies.alpha_rr import AlphaRR
+from repro.core.policies.base import PolicyFns, PolicyLane
 from repro.serve.engine import ServingEngine
 from repro.serve.partial import HostingPlan, make_plans
 
@@ -136,6 +137,19 @@ class LiveFleetScheduler:
     the Model-2 realized-coupling loop stays on the single-instance
     ``EdgeServingScheduler``.
 
+    **Shadow scoring**: ``shadow_policies=[...]`` rides candidate policy
+    families on the stepper's policy fan-out axis — every ``admit`` steps
+    the live policy AND each shadow against the *same* telemetry slab in
+    the one compiled device step, so counterfactual cost curves accrue at
+    zero extra ingestion cost.  Each entry is a policy class with a
+    ``.fleet`` classmethod, a ready ``PolicyFns``, or a ``PolicyLane``
+    (own accounting grid).  ``with_opt_forward=True`` additionally
+    co-executes the offline DP forward frontier per instance, so
+    ``opt_cost()`` reads the running offline-optimum lower bound.
+    ``report()`` stays policy-major (``FleetResult.policy_view``); lane 0
+    is always the live policy and is what ``admit`` returns and what plan
+    assignment serves from.
+
     **Multi-host**: on a process-spanning mesh (``repro.sharding
     .distributed.initialize()`` + a global ``fleet_mesh()``), construct
     the scheduler on each process with that process's OWN ``costs_list``
@@ -150,11 +164,25 @@ class LiveFleetScheduler:
                  spec: Optional[ArchSpec] = None,
                  engine: Optional[ServingEngine] = None,
                  alpha: Optional[float] = None, mesh=None, seed: int = 0,
-                 grid_K: Optional[int] = None):
+                 grid_K: Optional[int] = None, shadow_policies: Sequence = (),
+                 with_opt_forward: bool = False):
         grid = HostingGrid.from_costs(list(costs_list), K=grid_K)
         self.fleet = FleetBatch.for_scenario(grid, horizon)
-        self.stepper = fleet_stepper(policy_cls.fleet(self.fleet), self.fleet,
-                                     mesh=mesh, chunk_size=1)
+        lanes = [policy_cls.fleet(self.fleet)]
+        for entry in shadow_policies:
+            if isinstance(entry, (PolicyFns, PolicyLane)):
+                lanes.append(entry)
+            elif hasattr(entry, "fleet_lane"):
+                lanes.append(entry.fleet_lane(self.fleet))
+            else:
+                lanes.append(entry.fleet(self.fleet))
+        self.n_policies = len(lanes)
+        policy = lanes if (len(lanes) > 1 or with_opt_forward) else lanes[0]
+        self.stepper = fleet_stepper(policy, self.fleet, mesh=mesh,
+                                     chunk_size=1,
+                                     with_opt_forward=with_opt_forward)
+        self._fanout = self.stepper.n_policies > 1 or with_opt_forward
+        self._with_opt = with_opt_forward
         self.B = grid.B
         self.rng = np.random.default_rng(seed)
         self.engine = engine or (ServingEngine(spec) if spec is not None
@@ -169,26 +197,40 @@ class LiveFleetScheduler:
     # ---- telemetry admission -------------------------------------------
     def admit(self, x, c) -> np.ndarray:
         """Admit one slot of per-instance telemetry: ``x`` [B] arrival
-        counts, ``c`` [B] spot rents.  One device step; returns the [B]
-        hosting-level indices the controllers chose for this slot."""
+        counts, ``c`` [B] spot rents.  One device step advancing the live
+        policy and every shadow lane; returns the [B] hosting-level
+        indices the LIVE controllers chose for this slot."""
         r = self.stepper.step(x=np.asarray(x), c=np.asarray(c))
         self.n_slots += 1
+        if self._fanout:
+            r = r[0]
         return r[:, 0]
 
     # ---- device-carry readbacks ----------------------------------------
     # Process-local [B] views by default; gather=True allgathers the full
     # global fleet onto every process (multi-host meshes only — a no-op
     # single-process).
-    def hosting_levels(self, gather: bool = False) -> np.ndarray:
-        return self.stepper.hosting_levels(gather=gather)
+    def hosting_levels(self, gather: bool = False,
+                       policy: int = 0) -> np.ndarray:
+        return self.stepper.hosting_levels(gather=gather, policy=policy)
 
-    def hosting_fractions(self, gather: bool = False) -> np.ndarray:
-        return self.stepper.hosting_fractions(gather=gather)
+    def hosting_fractions(self, gather: bool = False,
+                          policy: int = 0) -> np.ndarray:
+        return self.stepper.hosting_fractions(gather=gather, policy=policy)
 
     def report(self, gather: bool = False) -> FleetResult:
         """Accumulated per-instance cost breakdown (rent/service/fetch and
-        slots-at-level counts) up to the last admitted slot."""
+        slots-at-level counts) up to the last admitted slot.  With shadow
+        lanes the result is policy-major — ``report().policy_view(...)``
+        splits it back out; lane 0 is the live policy."""
         return self.stepper.result(None, gather=gather)
+
+    def opt_cost(self, gather: bool = False) -> np.ndarray:
+        """[n_policies, B] running offline-DP lower bound per lane (needs
+        ``with_opt_forward=True``)."""
+        if not self._with_opt:
+            raise ValueError("opt_cost requires with_opt_forward=True")
+        return self.stepper.opt_cost(gather=gather)
 
     # ---- plan assignment + grouped serving -----------------------------
     def plan_assignment(self) -> List[HostingPlan]:

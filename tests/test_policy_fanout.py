@@ -1,0 +1,419 @@
+"""Shared-stream policy fan-out, per the PR-9 acceptance bar:
+
+* **Single-lane law** — ``run_fleet([p], ...)`` is bit-identical to
+  ``run_fleet(p, ...)`` (exact equality, never allclose).
+* **Lane independence** — every lane of a heterogeneous fan-out (fleet
+  grid, own-grid + ``svc_cols`` gather, static) equals its standalone
+  dispatch bit for bit, under chunked / streamed drivers, ``n_seeds``
+  replication, obs-backed and scenario-fused generation (hypothesis
+  property walk over the config space).
+* **Co-executed DP** — ``with_opt_forward=True`` frontiers equal
+  ``offline_opt_fleet(checkpointed=True, collect_schedule=False)`` per
+  lane grid.
+* **Stepper + live serving** — ``fleet_stepper`` fan-out readbacks match
+  the one-shot driver; ``LiveFleetScheduler`` shadow lanes never perturb
+  the admitted (lane-0) decisions.
+* **Forced 4 devices / 2 processes** — the same lane equalities on a
+  forced-4-device mesh (subprocess) and on a 2-process local cluster
+  (each worker's shard rows == the single-process global run).
+
+Under a forced multi-device platform the obs-backed and scenario-fused
+generation paths differ bitwise from EACH OTHER (pre-existing, documented
+in CHANGES.md) — every assertion here therefore compares like mode
+against like mode; the one cross-mode check runs on 1 device only.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (FleetBatch, fleet_stepper, offline_opt_fleet,
+                              run_fleet)
+from repro.core.policies import (AlphaRR, PolicyLane, RetroRenting,
+                                 StaticPolicy)
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+T = 48
+B = 3
+KEY = jax.random.PRNGKey(42)
+CHUNKS = [16, 20]          # 20 does not divide 48: exercises the padded tail
+HORIZONS = [48, 40, 48]
+FIELDS = ["total", "rent", "service", "fetch"]
+
+
+def _scenario(grid):
+    return S.combine(
+        S.ge_arrivals(S.split_keys(KEY, B), 0.3, 0.2, 2.0, 0.2, B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.5, B),
+        svc=S.model2_service(jax.random.PRNGKey(2), grid.g, B,
+                             max_per_slot=6))
+
+
+_ENV = {}
+
+
+def _env():
+    """Shared workload + lane set (module-level memo, NOT a fixture: the
+    hypothesis shim's ``@given`` erases the signature, so property tests
+    cannot take fixtures)."""
+    if _ENV:
+        return _ENV
+    costs_list = [HostingCosts.two_level(4.0),
+                  HostingCosts.three_level(6.0, 0.3, 0.2),
+                  HostingCosts(M=10.0, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                               g=(1.0, 0.4, 0.3, 0.15, 0.0))]
+    grid = HostingGrid.from_costs(costs_list)
+    fleet = FleetBatch.for_scenario(grid, HORIZONS)
+    egrid = grid.restrict_to_endpoints()
+    efleet = FleetBatch.for_scenario(egrid, HORIZONS)
+    # the endpoint-grid reference scenario: same keys, endpoint g columns
+    # (the coupled Model-2 uniforms make the fan-out lane's svc gather
+    # bitwise identical to direct generation on the lane grid)
+    _ENV.update(
+        grid=grid, fleet=fleet, egrid=egrid, efleet=efleet,
+        sc=_scenario(grid), sc_e=_scenario(egrid),
+        lanes=[AlphaRR.fleet_lane(fleet),
+               RetroRenting.fleet_lane(fleet, with_svc=True),
+               StaticPolicy.fleet(fleet, grid.top_index())],
+        refs={}, opt_refs={})
+    return _ENV
+
+
+def _ref(lane_id, n_seeds):
+    """Standalone (classic-path) run of one lane's policy — the bitwise
+    reference.  Cached per (lane, n_seeds); the drivers' own bitwise
+    chunk/stream invariance (PR 3/6 suites) makes one reference serve
+    every driver configuration."""
+    e = _env()
+    key = (lane_id, n_seeds)
+    if key not in e["refs"]:
+        if lane_id == 1:
+            fns = RetroRenting.fleet(e["efleet"])
+            e["refs"][key] = run_fleet(fns, e["efleet"], scenario=e["sc_e"],
+                                       n_seeds=n_seeds)
+        else:
+            fns = (AlphaRR.fleet(e["fleet"]) if lane_id == 0
+                   else StaticPolicy.fleet(e["fleet"],
+                                           e["grid"].top_index()))
+            e["refs"][key] = run_fleet(fns, e["fleet"], scenario=e["sc"],
+                                       n_seeds=n_seeds)
+    return e["refs"][key]
+
+
+def _opt_ref(lane_id, n_seeds):
+    """Offline DP reference for one lane's grid (lanes 0 and 2 share the
+    fleet grid and therefore the frontier)."""
+    e = _env()
+    key = (lane_id == 1, n_seeds)
+    if key not in e["opt_refs"]:
+        fleet, sc = ((e["efleet"], e["sc_e"]) if lane_id == 1
+                     else (e["fleet"], e["sc"]))
+        e["opt_refs"][key] = offline_opt_fleet(
+            fleet, scenario=sc, checkpointed=True, collect_schedule=False,
+            n_seeds=n_seeds)
+    return e["opt_refs"][key]
+
+
+def assert_lane_equals(res, p, ref, label=""):
+    pv_ls = res.policy_view(res.level_slots)
+    for f in FIELDS:
+        got = res.policy_view(getattr(res, f))[p]
+        want = np.asarray(getattr(ref, f))
+        assert np.array_equal(got, want), (label, p, f)
+    assert np.array_equal(res.policy_view(res.r_hist)[p],
+                          np.asarray(ref.r_hist)), (label, p, "r_hist")
+    k = ref.level_slots.shape[-1]
+    assert np.array_equal(pv_ls[p][..., :k],
+                          np.asarray(ref.level_slots)), (label, p, "slots")
+
+
+# ----------------------------------------------------------------------
+# Single-lane law + heterogeneous lanes, fixed configs.
+# ----------------------------------------------------------------------
+
+def test_single_lane_matches_standalone():
+    e = _env()
+    fns = AlphaRR.fleet(e["fleet"])
+    base = run_fleet(fns, e["fleet"], scenario=e["sc"])
+    one = run_fleet([fns], e["fleet"], scenario=e["sc"])
+    for f in FIELDS:
+        assert np.array_equal(getattr(one, f), getattr(base, f)), f
+    assert np.array_equal(one.r_hist, base.r_hist)
+    assert np.array_equal(one.level_slots[..., :base.level_slots.shape[-1]],
+                          base.level_slots)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_heterogeneous_lanes_match_standalone(chunk):
+    e = _env()
+    res = run_fleet(e["lanes"], e["fleet"], scenario=e["sc"],
+                    chunk_size=chunk)
+    for p in range(3):
+        assert_lane_equals(res, p, _ref(p, None), f"chunk={chunk}")
+
+
+def test_opt_forward_matches_offline_dp():
+    e = _env()
+    res = run_fleet(e["lanes"], e["fleet"], scenario=e["sc"], chunk_size=16,
+                    with_opt_forward=True)
+    opt = res.policy_view(res.opt_cost)
+    for p in range(3):
+        assert np.array_equal(opt[p], np.asarray(_opt_ref(p, None).cost)), p
+
+
+def test_obs_mode_fanout_matches_standalone():
+    """Materialized-telemetry fan-out vs materialized standalone runs —
+    like mode against like mode, so it holds on any device count."""
+    e = _env()
+    fleet_m = FleetBatch.from_scenario(e["grid"], e["sc"], HORIZONS)
+    efleet_m = FleetBatch.from_scenario(e["egrid"], e["sc_e"], HORIZONS)
+    lanes_m = [AlphaRR.fleet_lane(fleet_m),
+               PolicyLane(RetroRenting.fleet(fleet_m),
+                          grid=e["egrid"],
+                          svc_cols=e["grid"].endpoint_columns()),
+               StaticPolicy.fleet(fleet_m, e["grid"].top_index())]
+    res = run_fleet(lanes_m, fleet_m, chunk_size=16)
+    refs = [run_fleet(AlphaRR.fleet(fleet_m), fleet_m, chunk_size=16),
+            run_fleet(RetroRenting.fleet(efleet_m), efleet_m,
+                      chunk_size=16),
+            run_fleet(StaticPolicy.fleet(fleet_m, e["grid"].top_index()),
+                      fleet_m, chunk_size=16)]
+    for p, ref in enumerate(refs):
+        assert_lane_equals(res, p, ref, "obs")
+    if jax.device_count() == 1:
+        # cross-mode identity holds on a single device only (the forced
+        # multi-device generation path predates this PR, see module doc)
+        scen = run_fleet(e["lanes"], e["fleet"], scenario=e["sc"],
+                         chunk_size=16)
+        for f in FIELDS:
+            assert np.array_equal(getattr(res, f), getattr(scen, f)), f
+
+
+# ----------------------------------------------------------------------
+# Hypothesis walk over the driver config space.
+# ----------------------------------------------------------------------
+
+@st.composite
+def fanout_configs(draw):
+    ids = draw(st.permutations([0, 1, 2]))
+    ids = ids[:draw(st.integers(1, 3))]
+    chunk = draw(st.sampled_from([None, 16, 20]))
+    stream = draw(st.sampled_from([False, True]))
+    if stream and chunk is None:
+        chunk = 16
+    n_seeds = draw(st.sampled_from([None, 2]))
+    with_opt = draw(st.sampled_from([False, True]))
+    return ids, chunk, stream, n_seeds, with_opt
+
+
+@settings(max_examples=15, deadline=None)
+@given(fanout_configs())
+def test_fanout_property_walk(cfg):
+    ids, chunk, stream, n_seeds, with_opt = cfg
+    e = _env()
+    res = run_fleet([e["lanes"][i] for i in ids], e["fleet"],
+                    scenario=e["sc"], chunk_size=chunk, stream=stream,
+                    n_seeds=n_seeds, with_opt_forward=with_opt)
+    for p, lane_id in enumerate(ids):
+        assert_lane_equals(res, p, _ref(lane_id, n_seeds), str(cfg))
+        if with_opt:
+            got = res.policy_view(res.opt_cost)[p]
+            want = np.asarray(_opt_ref(lane_id, n_seeds).cost)
+            assert np.array_equal(got, want), (cfg, lane_id, "opt")
+
+
+# ----------------------------------------------------------------------
+# Stepper readbacks + live scheduler shadow lanes.
+# ----------------------------------------------------------------------
+
+def test_stepper_fanout_matches_run_fleet():
+    e = _env()
+    ref = run_fleet(e["lanes"], e["fleet"], scenario=e["sc"], chunk_size=16,
+                    with_opt_forward=True)
+    st_ = fleet_stepper(e["lanes"], e["fleet"], scenario=e["sc"],
+                        chunk_size=16, with_opt_forward=True)
+    parts = []
+    while st_.t < T:
+        parts.append(st_.step())
+    assert all(p.shape[0] == 3 for p in parts)    # [P, B, chunk]
+    res = st_.result(tuple(np.concatenate([p[i] for p in parts], axis=1)
+                           for i in range(3)))
+    for f in FIELDS:
+        assert np.array_equal(getattr(res, f), getattr(ref, f)), f
+    assert np.array_equal(res.r_hist, ref.r_hist)
+    assert np.array_equal(res.opt_cost, ref.opt_cost)
+    assert np.array_equal(st_.opt_cost().reshape(-1), ref.opt_cost)
+    for p in range(3):
+        assert st_.hosting_levels(policy=p).shape == (B,)
+
+
+def test_scheduler_shadow_lanes_do_not_perturb_admission():
+    from repro.serve.scheduler import LiveFleetScheduler
+    costs = [HostingCosts.two_level(4.0),
+             HostingCosts.three_level(6.0, 0.3, 0.2)]
+    plain = LiveFleetScheduler(costs, horizon=64)
+    shadow = LiveFleetScheduler(costs, horizon=64,
+                                shadow_policies=[RetroRenting],
+                                with_opt_forward=True)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        x, c = rng.integers(0, 5, size=2), rng.random(2)
+        assert np.array_equal(shadow.admit(x, c), plain.admit(x, c))
+    rep = shadow.report()
+    tot = rep.policy_view(rep.total)
+    assert tot.shape == (2, 2)
+    oc = shadow.opt_cost()
+    assert oc.shape == (2, 2)
+    assert np.all(oc <= tot + 1e-9)
+    assert shadow.hosting_levels(policy=1).shape == (2,)
+    with pytest.raises(ValueError):
+        plain.opt_cost()
+
+
+# ----------------------------------------------------------------------
+# Forced multi-device mesh (subprocess — this process may be pinned to
+# one device by conftest).
+# ----------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import scenarios as S
+    from repro.core.costs import HostingCosts, HostingGrid
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR, RetroRenting, StaticPolicy
+    from repro.sharding.specs import fleet_mesh
+
+    # B=6 is not a multiple of 4: exercises dummy-instance padding
+    costs_list = [HostingCosts.three_level(4.0 + i, 0.3, 0.4)
+                  for i in range(5)]
+    costs_list.append(HostingCosts.two_level(4.0))
+    grid = HostingGrid.from_costs(costs_list)
+    B, T = 6, 48
+
+    def scenario(g):
+        kx = S.split_keys(jax.random.PRNGKey(13), B)
+        return S.combine(
+            S.ge_arrivals(kx, 0.3, 0.2, 2.0, 0.2, B),
+            S.spot_rents(jax.random.PRNGKey(1), 0.5, B),
+            svc=S.model2_service(jax.random.PRNGKey(2), g.g, B,
+                                 max_per_slot=6))
+
+    sc = scenario(grid)
+    fleet = FleetBatch.for_scenario(grid, T)
+    egrid = grid.restrict_to_endpoints()
+    sc_e = scenario(egrid)
+    efleet = FleetBatch.for_scenario(egrid, T)
+    mesh = fleet_mesh()
+    lanes = [AlphaRR.fleet_lane(fleet),
+             RetroRenting.fleet_lane(fleet, with_svc=True),
+             StaticPolicy.fleet(fleet, grid.top_index())]
+    res = run_fleet(lanes, fleet, scenario=sc, mesh=mesh, chunk_size=16,
+                    n_seeds=2, with_opt_forward=True)
+    refs = [run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc, mesh=mesh,
+                      chunk_size=16, n_seeds=2),
+            run_fleet(RetroRenting.fleet(efleet), efleet, scenario=sc_e,
+                      mesh=mesh, chunk_size=16, n_seeds=2),
+            run_fleet(StaticPolicy.fleet(fleet, grid.top_index()), fleet,
+                      scenario=sc, mesh=mesh, chunk_size=16, n_seeds=2)]
+    for f in ("total", "rent", "service", "fetch", "r_hist"):
+        pv = res.policy_view(getattr(res, f))
+        for p, ref in enumerate(refs):
+            assert np.array_equal(pv[p], np.asarray(getattr(ref, f))), (f, p)
+    opt = res.policy_view(res.opt_cost)
+    off = offline_opt_fleet(fleet, scenario=sc, mesh=mesh, n_seeds=2,
+                            checkpointed=True, collect_schedule=False)
+    off_e = offline_opt_fleet(efleet, scenario=sc_e, mesh=mesh, n_seeds=2,
+                              checkpointed=True, collect_schedule=False)
+    assert np.array_equal(opt[0], np.asarray(off.cost))
+    assert np.array_equal(opt[1], np.asarray(off_e.cost))
+    assert np.array_equal(opt[2], np.asarray(off.cost))
+    print("FANOUT-MULTI-DEVICE-OK")
+""")
+
+
+def test_fanout_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(TESTS_DIR, "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "FANOUT-MULTI-DEVICE-OK" in out.stdout
+
+
+# ----------------------------------------------------------------------
+# 2-process local cluster: each worker's shard rows == the single-process
+# global run (same convention as tests/test_multihost.py).
+# ----------------------------------------------------------------------
+
+_CLUSTER_SCRIPT = textwrap.dedent("""
+    import os, sys
+    sys.path.insert(0, {tests_dir!r})
+    import numpy as np
+    from repro.sharding import distributed
+    distributed.initialize()
+    import jax
+    import multihost_worker as W
+    from repro.core.fleet import run_fleet
+    from repro.core.policies import AlphaRR, RetroRenting
+    from repro.sharding.specs import fleet_mesh
+
+    pid, nprocs = jax.process_index(), jax.process_count()
+    lo = pid * (W.B_GLOBAL // nprocs)
+    hi = lo + W.B_GLOBAL // nprocs
+    fleet, sc = W.build_scenario_fleet(lo, hi)
+    lanes = [AlphaRR.fleet_lane(fleet), RetroRenting.fleet_lane(fleet)]
+    mesh = fleet_mesh()
+    kw = dict(scenario=sc, mesh=mesh, chunk_size=8, n_seeds=2,
+              with_opt_forward=True)
+    res = run_fleet(lanes, fleet, **kw)
+    gres = run_fleet(lanes, fleet, gather=True, **kw)
+    np.savez(os.path.join({outdir!r}, f"fanout_{{pid}}.npz"),
+             total=np.asarray(res.policy_view(res.total)),
+             rhist=np.asarray(res.policy_view(res.r_hist)),
+             opt=np.asarray(res.policy_view(res.opt_cost)),
+             g_total=np.asarray(gres.policy_view(gres.total)),
+             meta=np.asarray([pid, nprocs, lo, hi]))
+    distributed.shutdown()
+""")
+
+
+def test_fanout_two_process_bit_identity(tmp_path):
+    from repro.sharding import distributed
+    import multihost_worker as W
+
+    n_procs = distributed.default_num_processes(2)
+    devices = int(os.environ.get("REPRO_MULTIHOST_DEVICES", "1"))
+    distributed.run_local_cluster(
+        ["-c", _CLUSTER_SCRIPT.format(tests_dir=TESTS_DIR,
+                                      outdir=str(tmp_path))],
+        n_processes=n_procs, devices_per_process=devices, timeout=900.0)
+
+    fleet, sc = W.build_scenario_fleet(0, W.B_GLOBAL)
+    lanes = [AlphaRR.fleet_lane(fleet), RetroRenting.fleet_lane(fleet)]
+    ref = run_fleet(lanes, fleet, scenario=sc, chunk_size=8, n_seeds=2,
+                    with_opt_forward=True)
+    r_tot = np.asarray(ref.policy_view(ref.total))
+    r_rh = np.asarray(ref.policy_view(ref.r_hist))
+    r_opt = np.asarray(ref.policy_view(ref.opt_cost))
+    for pid in range(n_procs):
+        with np.load(tmp_path / f"fanout_{pid}.npz") as z:
+            lo, hi = int(z["meta"][2]), int(z["meta"][3])
+            sl = slice(lo * 2, hi * 2)       # n_seeds=2: seed-major blocks
+            assert np.array_equal(z["total"], r_tot[:, sl]), pid
+            assert np.array_equal(z["rhist"], r_rh[:, sl]), pid
+            assert np.array_equal(z["opt"], r_opt[:, sl]), pid
+            # gather=True: every process sees the full global fan-out
+            assert np.array_equal(z["g_total"], r_tot), pid

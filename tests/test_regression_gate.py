@@ -1,16 +1,22 @@
 """Unit tests for the CI perf-regression gate
 (``benchmarks/check_regression.py``): drop detection on ratio and rate
 keys, machine-speed normalization of rates, additive-key tolerance, and
-the disappeared-entry failure.  Pure python — no jax involved.
+the disappeared-entry failure.  Also pins ``benchmarks.kernel_bench
+.check``'s cores-aware gating through its ``cores`` injection point
+(synthetic rows — no benchmark runs).
 """
 
+import copy
 import json
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.check_regression import compare, main
+from benchmarks.kernel_bench import check as kernel_check
 
 
 def entry(rate, ratio, **extra):
@@ -162,3 +168,132 @@ def test_main_end_to_end(tmp_path):
     wrong = tmp_path / "wrong.json"
     wrong.write_text(json.dumps({"schema_version": 2}))
     assert main([str(wrong), str(basef)]) == 1
+
+
+# ----------------------------------------------------------------------
+# kernel_bench.check: cores-aware gating, pinned through the `cores`
+# injection point (so the logic is tested, not the CI machine's cores).
+# ----------------------------------------------------------------------
+
+
+def healthy_rows():
+    """A minimal synthetic row set that clears every acceptance bar in
+    ``kernel_bench.check`` at any core count."""
+    return [
+        {"name": "hosting_batch_throughput", "speedup_vs_loop": 20.0},
+        {
+            "name": "fleet_throughput",
+            "fleet_vs_batched_1dev": 1.0,
+            "scaling_vs_1dev": 2.0,
+            "scale_devices": 4,
+        },
+        {
+            "name": "mc_driver_throughput",
+            "fused_vs_per_seed": 1.2,
+            "antithetic_ci_ratio": 0.1,
+        },
+        {
+            "name": "offline_dp_streaming",
+            "identical_bits": True,
+            "peak_mem_ratio": 4.0,
+            "ckpt_vs_materialized": 1.0,
+        },
+        {
+            "name": "scenario_fused_throughput",
+            "fused_slots_instances_per_sec": 1.0,
+            "fused_vs_host_e2e": 1.0,
+        },
+        {
+            "name": "live_fleet_step",
+            "zero_retraces": True,
+            "per_width": [
+                {"slots_admitted_per_sec": 1.0, "p99_step_latency_us": 1.0},
+            ],
+        },
+        {
+            "name": "multihost_scaling",
+            "identical_bits": True,
+            "multihost_scaling_vs_1proc": 1.8,
+        },
+        {
+            "name": "stream_overlap",
+            "identical_bits": True,
+            "async_vs_sync": 1.0,
+        },
+        {
+            "name": "policy_fanout",
+            "identical_bits": True,
+            "fanout_vs_separate": 1.5,
+        },
+        {
+            "name": "dp_minplus_kernel",
+            "identical_bits": True,
+            "xla_dp_slots_instances_per_sec": 1.0,
+            "pallas_dp_slots_instances_per_sec": 1.0,
+            "backend": "pallas-interpret",
+        },
+        {
+            "name": "counter_prng_kernel",
+            "identical_bits": True,
+            "xla_prng_draws_per_sec": 1.0,
+            "pallas_prng_draws_per_sec": 1.0,
+            "backend": "pallas-interpret",
+        },
+    ]
+
+
+def _with(name, key, value):
+    rows = copy.deepcopy(healthy_rows())
+    next(r for r in rows if r["name"] == name)[key] = value
+    return rows
+
+
+def test_kernel_check_healthy_rows_pass_any_cores():
+    assert kernel_check(healthy_rows(), cores=1) is True
+    assert kernel_check(healthy_rows(), cores=8) is True
+
+
+@pytest.mark.parametrize(
+    "name,key,bad",
+    [
+        ("mc_driver_throughput", "fused_vs_per_seed", 0.2),
+        ("stream_overlap", "async_vs_sync", 0.2),
+        ("fleet_throughput", "scaling_vs_1dev", 1.0),
+        ("multihost_scaling", "multihost_scaling_vs_1proc", 0.5),
+    ],
+)
+def test_cores_aware_bars_gate_only_with_spare_cores(name, key, bad):
+    """The throughput bars that need a spare core are scheduling noise on
+    a 1-core container: they must pass at cores=1 and fail at cores=2."""
+    rows = _with(name, key, bad)
+    assert kernel_check(rows, cores=1) is True
+    assert kernel_check(rows, cores=2) is False
+
+
+@pytest.mark.parametrize(
+    "name,key,bad",
+    [
+        ("stream_overlap", "identical_bits", False),
+        ("multihost_scaling", "identical_bits", False),
+        ("policy_fanout", "identical_bits", False),
+        ("policy_fanout", "fanout_vs_separate", 0.9),
+        ("offline_dp_streaming", "identical_bits", False),
+    ],
+)
+def test_bit_flags_and_fanout_gate_unconditionally(name, key, bad):
+    """Bit-equality flags — and the engine-vs-engine fan-out ratio, which
+    needs no spare core — gate even on a 1-core container."""
+    assert kernel_check(_with(name, key, bad), cores=1) is False
+
+
+def test_multihost_skip_marker_row_passes():
+    """The fast-mode skip-marker entry (explicit nulls, FULL-mode-only
+    cluster legs) must not trip the gate at any core count."""
+    rows = _with("multihost_scaling", "multihost_scaling_vs_1proc", None)
+    for r in rows:
+        if r["name"] == "multihost_scaling":
+            r["single_process_slots_instances_per_sec"] = None
+            r["multi_process_slots_instances_per_sec"] = None
+            del r["identical_bits"]
+    assert kernel_check(rows, cores=1) is True
+    assert kernel_check(rows, cores=8) is True
