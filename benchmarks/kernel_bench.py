@@ -61,6 +61,15 @@ engine's throughput axes:
   standalone run is asserted in-row (the tentpole invariant); the row
   reports ``fanout_vs_separate`` (P=4 headline, same-machine
   engine-vs-engine) and the generation passes saved per sweep.
+* ``multi_service`` — the service axis (``core/services.py``): B instances
+  x N services as per-service fleet lanes (rows b*N+n) plus the
+  capacity-respecting joint DP on the matrix-M joint grid.  The row first
+  *asserts* the axis's two correctness claims — N=1 collapses to the
+  single-service engine bit-for-bit (``run_fleet_services`` vs
+  ``run_fleet``, ``offline_opt_services`` vs ``offline_opt_fleet``), and
+  the joint DP equals the brute-force J**T oracle with exact float
+  equality — then reports the lane-engine rate (slots x lanes/sec, the
+  guarded key) and the joint DP's wall time (informational).
 * ``multihost_scaling`` — the process axis of the fleet engine, FULL mode
   only (``--fast`` emits a skip-marker row with null ratios: the cluster
   spawn + two-leg compile dominates a fast run, and the cross-process
@@ -820,6 +829,107 @@ def counter_prng_kernel(B=8, chunk=65536, reps=5, seed=0):
     }
 
 
+def multi_service(B=2, N=2, T=2048, chunk=1024, reps=3, seed=0):
+    """Multi-service axis row (``core.services``): per-service lane-engine
+    throughput at B instances x N services, with the service-axis
+    correctness claims asserted in-row before any timing is reported:
+
+    * **N=1 identity** — ``run_fleet_services`` / ``offline_opt_services``
+      on a one-service fleet are bit-identical to the single-service
+      ``run_fleet`` / ``offline_opt_fleet`` (exact bits, never allclose);
+    * **joint DP == oracle** — the capacity-respecting joint DP through
+      the fleet engine's matrix-M grid equals the brute-force ``J**T``
+      enumeration with EXACT float equality on a tiny N x K grid.
+
+    The guarded rate is lane slots x lanes per second; ``joint_states``
+    records the per-instance joint grid width the DP leg solved, and
+    ``joint_dp_seconds`` the checkpointed joint DP's wall time (recorded,
+    not gated — it scales with J**2 and is tiny at bench sizes).
+    """
+    from repro.core import scenarios as S_
+    from repro.core import services as SV
+    from repro.core.costs import HostingCosts, HostingGrid, ServiceSet
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR
+    from repro.core.policies.offline_opt import brute_force_joint_opt
+    from repro.core.scenarios.base import materialize
+
+    def scn(grid, rows, s):
+        return S_.combine(
+            S_.ge_arrivals(S_.split_keys(jax.random.PRNGKey(s), rows),
+                           0.3, 0.2, 2.0, 0.2, rows),
+            S_.spot_rents(jax.random.PRNGKey(s + 1), 0.5, rows),
+            svc=S_.model2_service(jax.random.PRNGKey(s + 2), grid.g, rows,
+                                  max_per_slot=6))
+
+    # ---- in-row assert 1: N=1 bitwise identity (small, fast) ----------
+    costs1 = [HostingCosts.three_level(4.0, 0.3, 0.4),
+              HostingCosts.two_level(5.0)]
+    grid1 = HostingGrid.from_costs(costs1)
+    fleet1 = FleetBatch.for_scenario(grid1, 256)
+    sf1 = SV.service_fleet([ServiceSet(services=(cc,)) for cc in costs1],
+                           256)
+    sc1 = scn(grid1, 2, seed)
+    ref = run_fleet(AlphaRR.fleet(fleet1), fleet1, scenario=sc1,
+                    chunk_size=128)
+    got = SV.run_fleet_services(SV.alpha_rr_per_service(sf1), sf1,
+                                scenario=sc1, chunk_size=128)
+    identical = all(
+        np.array_equal(np.asarray(getattr(got.fleet, f)),
+                       np.asarray(getattr(ref, f)))
+        for f in ("total", "rent", "service", "fetch", "r_hist"))
+    oref = offline_opt_fleet(fleet1, scenario=sc1, chunk_size=128)
+    ogot = SV.offline_opt_services(sf1, scenario=sc1, chunk_size=128)
+    identical = identical and np.array_equal(np.asarray(ogot.cost),
+                                             np.asarray(oref.cost))
+    assert identical
+
+    # ---- in-row assert 2: joint DP == brute-force oracle --------------
+    T_o = 5
+    ss = ServiceSet((HostingCosts.three_level(3.0, 0.5, 0.4),
+                     HostingCosts.two_level(2.5)), capacity=1.0)
+    sfo = SV.service_fleet([ss], T_o)
+    sco = scn(sfo.lane_grid(), 2, seed + 7)
+    jres = SV.offline_opt_services(sfo, scenario=sco)
+    x, c, svc, _ = materialize(sco, T_o, chunk_size=T_o)
+    svcs = [svc[n][:, :ss.services[n].K] for n in range(2)]
+    oracle = brute_force_joint_opt(ss, x[:2], c[0], svcs=svcs)
+    oracle_ok = (float(np.asarray(jres.cost)[0]) == float(oracle.cost)
+                 and np.array_equal(jres.service_schedules()[0],
+                                    oracle.r_hist))
+    assert oracle_ok
+    identical = bool(identical and oracle_ok)
+
+    # ---- lane-engine throughput at B x N ------------------------------
+    sets = [ServiceSet(tuple(HostingCosts.three_level(4.0 + i + n, 0.3, 0.4)
+                             for n in range(N)), capacity=1.0)
+            for i in range(B)]
+    sf = SV.service_fleet(sets, T)
+    sc = scn(sf.lane_grid(), B * N, seed + 13)
+    pol = SV.alpha_rr_per_service(sf)
+    kw = dict(scenario=sc, chunk_size=chunk, collect_trace=False)
+
+    SV.run_fleet_services(pol, sf, **kw)         # warm the jit caches
+    t0 = time.time()
+    for _ in range(reps):
+        SV.run_fleet_services(pol, sf, **kw)
+    lane_s = (time.time() - t0) / reps
+
+    t0 = time.time()
+    SV.offline_opt_services(sf, scenario=sc, chunk_size=chunk,
+                            checkpointed=True, collect_schedule=False)
+    joint_dp_s = time.time() - t0
+
+    return {
+        "name": "multi_service",
+        "B": B, "T": T, "n_services": N, "chunk": chunk,
+        "joint_states": int(sf.joint_grid().M.shape[-1]),
+        "identical_bits": bool(identical),
+        "slots_instances_per_sec": B * N * T / lane_s,
+        "joint_dp_seconds": joint_dp_s,
+    }
+
+
 def run(T=4096):
     # run.py --fast passes a small T, shrinking the in-process throughput
     # rows; the scaling subprocess keeps its fixed wide-B workload (device
@@ -843,6 +953,10 @@ def run(T=4096):
     # shrinks the horizon with T (the in-row bit-equality asserts run in
     # both modes)
     rows.append(policy_fanout(T=T // 2, chunk=min(1024, T // 4)))
+    # service axis: B x N per-service lanes plus the joint capacity DP;
+    # the N=1 bitwise identity and joint-DP-vs-oracle asserts run in both
+    # modes (they are small fixed-size legs, not scaled by T)
+    rows.append(multi_service(T=T // 2, chunk=min(1024, T // 4)))
     # process axis: 2-process local cluster vs 1 process — FULL mode only:
     # the cluster spawn + two-leg compile is most of a --fast run's wall
     # time, and the cross-process bit-equality claim stays covered by
@@ -992,6 +1106,15 @@ def check(rows, cores=None):
     ok = ok and len(pf) == 1
     ok = ok and all(r["identical_bits"] and r["fanout_vs_separate"] > 1.0
                     for r in pf)
+    ms = [r for r in rows if r["name"] == "multi_service"]
+    # acceptance: the service axis collapses to the single-service engine
+    # bit-for-bit at N=1 AND the joint capacity DP matches the brute-force
+    # oracle exactly (both asserted in-row, folded into identical_bits);
+    # the lane-engine rate must be positive — its level is pinned by the
+    # committed baseline through the _per_sec regression guard.
+    ok = ok and len(ms) == 1
+    ok = ok and all(r["identical_bits"] and r["slots_instances_per_sec"] > 0
+                    and r["joint_dp_seconds"] > 0 for r in ms)
     # hosting-kernel backend rows: bit-identity is unconditional (it IS
     # the backend-dispatch invariant); the speedup bar applies only to a
     # compiled (non-interpret) backend — interpret mode re-traces the

@@ -38,7 +38,11 @@ in-row).  ``policy_fanout`` adds ``fanout_vs_separate`` /
 families fused on one generated stream vs P separate ``run_fleet``
 dispatches, every lane bit-equality-asserted in-row; in fast mode the
 ``multihost_scaling`` entry instead carries explicit nulls — the cluster
-leg runs in full mode only).  The hosting-kernel
+leg runs in full mode only).  ``multi_service`` adds ``n_services`` /
+``joint_states`` / ``joint_dp_seconds`` (B x N per-service fleet lanes
+plus the capacity-respecting joint DP; the N=1 bitwise identity and
+joint-DP-vs-oracle claims are asserted in-row and folded into its
+``identical_bits``).  The hosting-kernel
 backend rows (``dp_minplus_kernel`` / ``counter_prng_kernel``) add their
 ``*_pallas_vs_xla`` ratios, and the report itself gains top-level
 ``backend`` / ``device_kind`` keys (additive, still schema 1) recording
@@ -195,6 +199,17 @@ def main() -> None:
                         r.get("generation_passes_saved"),
                     "identical_bits": r.get("identical_bits"),
                     "B": r.get("B"), "T": r.get("T"),
+                }
+            if isinstance(r, dict) and "n_services" in r:
+                report["throughput"][r.get("name", name)] = {
+                    "slots_instances_per_sec":
+                        r.get("slots_instances_per_sec"),
+                    "joint_dp_seconds": r.get("joint_dp_seconds"),
+                    "identical_bits": r.get("identical_bits"),
+                    "n_services": r.get("n_services"),
+                    "joint_states": r.get("joint_states"),
+                    "B": r.get("B"), "T": r.get("T"),
+                    "chunk": r.get("chunk"),
                 }
             if isinstance(r, dict) and "multihost_scaling_vs_1proc" in r:
                 report["throughput"][r.get("name", name)] = {

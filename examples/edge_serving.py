@@ -48,14 +48,24 @@ def main():
     rep_rr = sched_rr.run(arrivals_seq, rents)
     print("RR         :", rep_rr.summary())
 
-    # static plans for reference (cost model only, no model run needed)
+    # static plans for reference (cost model only, no model run needed):
+    # all three are fan-out lanes of ONE fleet run over the recorded trace
+    from repro.core.costs import HostingGrid
+    from repro.core.fleet import FleetBatch, run_fleet
     from repro.core.policies import StaticPolicy
-    from repro.core.simulator import run_policy, model2_service_matrix
-    svc = model2_service_matrix(jax.random.PRNGKey(2), sched.costs, arrivals_seq)
+    from repro.core.scenarios import trace_scenario
+    from repro.core.simulator import model2_service_matrix
+    svc = model2_service_matrix(jax.random.PRNGKey(2), sched.costs,
+                                arrivals_seq)
+    fleet = FleetBatch.for_scenario(HostingGrid.from_costs([sched.costs]),
+                                    args.slots)
+    sc = trace_scenario(np.asarray(arrivals_seq)[None], rents[None],
+                        svc=np.asarray(svc)[None])
+    res = run_fleet([StaticPolicy.fleet(fleet, i) for i in range(3)],
+                    fleet, scenario=sc)
+    totals = res.policy_view(res.total)
     for i, nm in [(0, "never-host"), (1, "always-alpha"), (2, "always-full")]:
-        res = run_policy(StaticPolicy(sched.costs, i), sched.costs,
-                         arrivals_seq, rents, svc=svc)
-        print(f"{nm:<11}: cost={res.total:.2f}")
+        print(f"{nm:<11}: cost={float(totals[i][0]):.2f}")
 
     assert rep.total_cost <= rep_rr.total_cost * 1.25 + args.M, \
         "alpha-RR should be competitive with RR"

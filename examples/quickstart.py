@@ -1,46 +1,73 @@
-"""Quickstart: alpha-RetroRenting on a synthetic edge-hosting instance.
+"""Quickstart: the fleet engine end to end on one synthetic workload.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Simulates 10k slots of Bernoulli requests + ARMA spot rents, runs alpha-RR,
-RR, the offline optima and the lower bounds, and prints the Fig-1-style
-comparison at one operating point.
+Builds a 3-instance fleet (one hosting operating point per row), generates
+Gilbert-Elliot arrivals + ARMA spot rents + Model-2 service costs ON
+DEVICE, scores the paper's policy families as fan-out lanes of ONE fused
+scan (each [B, chunk] observation slab is generated once and stepped by
+every lane), solves the exact offline optimum with the checkpointed
+streaming DP, and reports Monte-Carlo 95% CIs over seed replicas via
+``mc_summary``.
+
+docs/ARCHITECTURE.md explains the engine layers; docs/CONVENTIONS.md the
+bit-identity rules every one of these calls is proven under.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import arrivals, rentcosts, bounds
-from repro.core.costs import HostingCosts
-from repro.core.policies import AlphaRR, RetroRenting, offline_opt, offline_opt_no_partial
-from repro.core.simulator import run_policy
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import (FleetBatch, mc_summary, offline_opt_fleet,
+                              run_fleet)
+from repro.core.policies import AlphaRR, RetroRenting, StaticPolicy
 
 
 def main():
-    T = 10000
-    M, alpha, g_alpha, p, c_mean = 10.0, 0.4, 0.35, 0.35, 0.35
-    kx, kc = jax.random.split(jax.random.PRNGKey(0))
-    x = arrivals.bernoulli(kx, p, T)
-    c = rentcosts.aws_spot_like(kc, c_mean, T)
-    costs = HostingCosts.three_level(M, alpha, g_alpha,
-                                     c_min=float(np.min(np.asarray(c))),
-                                     c_max=float(np.max(np.asarray(c))))
+    T, B, SEEDS = 4096, 3, 8
+    ms = (5.0, 10.0, 20.0)
+    costs = [HostingCosts.three_level(M, 0.4, 0.35) for M in ms]
+    grid = HostingGrid.from_costs(costs)
+    fleet = FleetBatch.for_scenario(grid, T)
+    sc = S.combine(
+        S.ge_arrivals(S.split_keys(jax.random.PRNGKey(0), B),
+                      0.3, 0.2, 2.0, 0.2, B),
+        S.spot_rents(jax.random.PRNGKey(1), 0.35, B),
+        svc=S.model2_service(jax.random.PRNGKey(2), grid.g, B,
+                             max_per_slot=6))
 
-    ar = run_policy(AlphaRR(costs), costs, x, c)
-    rr_pol = RetroRenting(costs)
-    rr = run_policy(rr_pol, rr_pol.costs, x, c)
-    aopt = offline_opt(costs, x, c)
-    opt = offline_opt_no_partial(costs, x, c)
+    # one fused scan steps every policy family on the same generated stream
+    lanes = [AlphaRR.fleet_lane(fleet),
+             RetroRenting.fleet_lane(fleet, with_svc=True),
+             StaticPolicy.fleet(fleet, fleet.grid.top_index()),
+             StaticPolicy.fleet(fleet, jnp.zeros(B, jnp.int32))]
+    res = run_fleet(lanes, fleet, scenario=sc, chunk_size=1024)
+    opt = offline_opt_fleet(fleet, scenario=sc, chunk_size=1024,
+                            checkpointed=True, collect_schedule=False)
 
-    print(f"instance: T={T} M={M} alpha={alpha} g(alpha)={g_alpha} "
-          f"p={p} E[c]={c_mean}  (alpha+g={alpha+g_alpha} < 1: partial useful)")
-    print(f"{'policy':<12} {'cost/slot':>10}  {'vs alpha-OPT':>12}")
-    for name, tot in [("alpha-RR", ar.total), ("RR", rr.total),
-                      ("alpha-OPT", aopt.cost), ("OPT", opt.cost)]:
-        print(f"{name:<12} {tot / T:>10.4f}  {tot / aopt.cost:>12.3f}x")
-    print(f"alpha-RR hosting slots [none, alpha, full] = {ar.level_slots.tolist()}")
-    print(f"Thm-2 ratio bound: {bounds.thm2_ratio_upper(costs):.3f} "
-          f"(observed {ar.total / aopt.cost:.3f})")
-    assert ar.total / aopt.cost <= bounds.thm2_ratio_upper(costs) + 1e-6
+    names = ["alpha-RR", "RR", "host-full", "host-none"]
+    total = res.policy_view(res.total)               # [P, B]
+    opt_cost = np.asarray(opt.cost)
+    print(f"fleet: B={B} instances (fetch cost M in {list(ms)}), T={T}")
+    print(f"{'policy':<10}" + "".join(f"  M={M:<6g}" for M in ms))
+    for p, nm in enumerate(names):
+        print(f"{nm:<10}" + "".join(f"  {total[p][b] / T:>7.4f}"
+                                    for b in range(B)))
+    print(f"{'alpha-OPT':<10}" + "".join(f"  {opt_cost[b] / T:>7.4f}"
+                                         for b in range(B)))
+
+    # Monte-Carlo axis: SEEDS seed replicas of the same scenario run inside
+    # one compiled program; mc_summary collapses them to Student-t CIs
+    mc = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc,
+                   chunk_size=1024, n_seeds=SEEDS)
+    summ = mc_summary(mc)
+    mean, ci = summ["total_mean"] / T, summ["total_ci95"] / T
+    print(f"\nalpha-RR across {SEEDS} MC seeds (per-slot cost, 95% CI):")
+    for b in range(B):
+        print(f"  M={ms[b]:<5g} {mean[b]:.4f} +/- {ci[b]:.4f}")
+
+    assert np.all(total[0] >= opt_cost - 1e-6)       # OPT is a lower bound
 
 
 if __name__ == "__main__":

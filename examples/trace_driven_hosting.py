@@ -1,16 +1,26 @@
 """Trace-driven hosting comparison (Figs 10/11 style): bursty cluster-like
-arrivals + AWS-spot-like rents; Model 1 and Model 2; alpha-RR vs RR vs
-offline optima, in both the alpha+g<1 and >=1 regimes.
+arrivals + AWS-spot-like rents played back through the fleet engine; Model 1
+and Model 2; alpha-RR vs RR vs the exact offline optimum, in both the
+alpha+g<1 and >=1 regimes.
 
     PYTHONPATH=src python examples/trace_driven_hosting.py
+
+Each regime x model is ONE ``run_fleet`` call: the recorded trace rides a
+playback scenario (``trace_arrivals`` / ``trace_rents``), both M operating
+points are fleet rows, and both policy families are fan-out lanes stepping
+the same observation slabs.  See docs/ARCHITECTURE.md for the engine
+layout.
 """
 import jax
 import numpy as np
 
 from repro.core import arrivals, rentcosts
-from repro.core.costs import HostingCosts
-from repro.core.policies import AlphaRR, RetroRenting, offline_opt, offline_opt_no_partial
-from repro.core.simulator import run_policy, model2_service_matrix
+from repro.core import scenarios as S
+from repro.core.costs import HostingCosts, HostingGrid
+from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+from repro.core.policies import AlphaRR, RetroRenting
+
+MS = (5.0, 20.0)
 
 
 def run_regime(name, alpha, g_alpha, x, c, key):
@@ -18,30 +28,40 @@ def run_regime(name, alpha, g_alpha, x, c, key):
     T = len(x)
     print(f"\n--- regime {name}: alpha={alpha} g={g_alpha} "
           f"(alpha+g={'<1' if alpha + g_alpha < 1 else '>=1'}) ---")
-    for model, svc in [("Model1", None),
-                       ("Model2", None)]:
-        for M in (5.0, 20.0):
-            costs = HostingCosts.three_level(M, alpha, g_alpha, cmin, cmax)
-            s = model2_service_matrix(key, costs, x) if model == "Model2" else None
-            ar = run_policy(AlphaRR(costs), costs, x, c, svc=s)
-            rr_pol = RetroRenting(costs)
-            s2 = None if s is None else np.asarray(s)[:, [0, 2]]
-            rr = run_policy(rr_pol, rr_pol.costs, x, c, svc=s2)
-            aopt = offline_opt(costs, x, c, s)
-            print(f"{model} M={M:>5}: alpha-RR={ar.total / T:.4f} "
-                  f"RR={rr.total / T:.4f} alpha-OPT={aopt.cost / T:.4f} "
-                  f"ratio={ar.total / max(aopt.cost, 1e-9):.2f} "
-                  f"hist={ar.level_slots.tolist()}")
+    grid = HostingGrid.from_costs(
+        [HostingCosts.three_level(M, alpha, g_alpha, cmin, cmax) for M in MS])
+    B = grid.B
+    fleet = FleetBatch.for_scenario(grid, T)
+    for model in ("Model1", "Model2"):
+        if model == "Model1":
+            sc = S.trace_scenario(x, c, B=B)
+        else:
+            sc = S.combine(S.trace_arrivals(x, B=B), S.trace_rents(c, B=B),
+                           svc=S.model2_service(key, grid.g, B,
+                                                max_per_slot=8))
+        lanes = [AlphaRR.fleet_lane(fleet),
+                 RetroRenting.fleet_lane(fleet, with_svc=model == "Model2")]
+        res = run_fleet(lanes, fleet, scenario=sc, chunk_size=2048)
+        opt = offline_opt_fleet(fleet, scenario=sc, chunk_size=2048,
+                                checkpointed=True, collect_schedule=False)
+        tot = res.policy_view(res.total)                     # [P, B]
+        hist = res.policy_view(res.level_slots)[0]           # [B, K]
+        for b, M in enumerate(MS):
+            aopt = float(np.asarray(opt.cost)[b])
+            print(f"{model} M={M:>5}: alpha-RR={tot[0][b] / T:.4f} "
+                  f"RR={tot[1][b] / T:.4f} alpha-OPT={aopt / T:.4f} "
+                  f"ratio={tot[0][b] / max(aopt, 1e-9):.2f} "
+                  f"hist={np.asarray(hist[b]).tolist()}")
 
 
 def main():
     T = 8000
     kx, kc, ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    x = arrivals.cluster_trace_like(kx, T, base_rate=0.15, burst_rate=1.5,
-                                    burst_p=0.08)
-    c = rentcosts.aws_spot_like(kc, 0.135, T)
-    print(f"trace: T={T} mean arrivals={float(np.mean(np.asarray(x))):.3f} "
-          f"mean rent={float(np.mean(np.asarray(c))):.3f}")
+    x = np.asarray(arrivals.cluster_trace_like(kx, T, base_rate=0.15,
+                                               burst_rate=1.5, burst_p=0.08))
+    c = np.asarray(rentcosts.aws_spot_like(kc, 0.135, T))
+    print(f"trace: T={T} mean arrivals={float(np.mean(x)):.3f} "
+          f"mean rent={float(np.mean(c)):.3f}")
     run_regime("lt1", 0.239, 0.380, x, c, ks)
     run_regime("ge1", 0.5, 0.7, x, c, ks)
 

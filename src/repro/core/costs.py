@@ -199,13 +199,29 @@ class HostingGrid:
     the same thing as in the unpadded per-instance run.
 
     Attributes:
-      M:      [B]    fetch costs.
+      M:      [B]    fetch costs — or [B, K, K] *explicit fetch matrices*
+              (joint multi-service grids, see below).
       levels: [B, K] hosting levels (padded).
       g:      [B, K] service costs per level (padded).
       mask:   [B, K] True on real levels.
 
     A ``HostingGrid`` is a pytree, so it can be passed through ``jax.jit`` /
     ``jax.vmap`` directly (vmap over the leading instance axis).
+
+    Matrix-valued M (joint multi-service grids)
+    -------------------------------------------
+    When ``M`` has a per-instance matrix shape (``M.ndim >= 2``), entry
+    ``M[j, j']`` is the *explicit* fetch cost of the transition j -> j'
+    instead of the scalar rank-one form ``M * (lv[j'] - lv[j])^+``.  This
+    is how ``ServiceSet.joint_grid`` encodes N services sharing one edge:
+    states are feasible per-service level combinations, ``levels`` holds
+    the TOTAL hosted fraction (so rent ``c_t * levels[j]`` stays correct)
+    and the fetch matrix sums the per-service increments.  The simulator's
+    chunk kernels, ``evaluate_schedule*`` and every offline-DP driver
+    (``dp_fetch_matrix`` passes an explicit matrix through untouched)
+    consume such grids transparently; *online* policies do not — they need
+    the scalar rank-one structure and raise on matrix grids (host each
+    service as its own fleet lane instead, ``core.services``).
     """
 
     M: jnp.ndarray
@@ -296,6 +312,154 @@ class HostingGrid:
         top = self.top_index()[:, None, None]                     # [B,1,1]
         hi = jnp.take_along_axis(svc, jnp.broadcast_to(top, svc.shape[:2] + (1,)), axis=2)
         return jnp.concatenate([svc[:, :, :1], hi], axis=2)
+
+
+# ----------------------------------------------------------------------
+# Multi-service sets: N services sharing one edge under a storage-capacity
+# constraint (Online Service Caching and Routing at the Edge, 2107.10446).
+# ----------------------------------------------------------------------
+
+#: Feasibility slack for the capacity constraint: a state whose hosted
+#: fractions sum *exactly* to the capacity is feasible even when the float64
+#: sum lands an ulp above it (0.3 + 0.7 style); "just over" by any real
+#: margin is excluded.
+CAPACITY_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSet:
+    """N hosting services sharing ONE edge node's storage.
+
+    Each service keeps its own ``HostingCosts`` (levels, g-curve, fetch
+    cost); the edge constrains the *sum* of hosted fractions to
+    ``capacity`` (default ``None`` = N, i.e. unconstrained — every service
+    can be fully hosted at once).  The joint problem's state space is the
+    set of feasible per-service level-index tuples; ``joint_grid`` lowers
+    it to an ordinary ``HostingGrid`` with a matrix-valued ``M`` so the
+    existing offline-DP / schedule-eval engines solve it unchanged.
+
+    The joint state enumeration is row-major over the per-service level
+    indices (``np.ndindex`` order), filtered by feasibility — state 0 is
+    always the all-off tuple, matching the engine's "start off-edge"
+    convention (``dp_frontier0``).
+    """
+
+    services: Tuple[HostingCosts, ...]
+    capacity: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "services", tuple(self.services))
+        if not self.services:
+            raise ValueError("need at least one service")
+        if self.capacity is not None and self.capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {self.capacity}")
+        if not self.joint_states().size:
+            raise ValueError(
+                f"capacity {self.capacity} excludes even the all-off state")
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def N(self) -> int:
+        return len(self.services)
+
+    @property
+    def cap(self) -> float:
+        """Effective capacity (``None`` means N: unconstrained)."""
+        return float(self.N) if self.capacity is None else float(self.capacity)
+
+    def joint_states(self) -> np.ndarray:
+        """[J, N] int32 per-service level indices of every FEASIBLE joint
+        state, row-major (all-off first).  Feasible iff the float64 sum of
+        hosted fractions is ``<= capacity + CAPACITY_EPS``."""
+        Ks = tuple(cc.K for cc in self.services)
+        idx = np.array(list(np.ndindex(*Ks)), np.int32).reshape(-1, len(Ks))
+        frac = np.zeros((idx.shape[0],), np.float64)
+        for n, cc in enumerate(self.services):
+            frac += np.asarray(cc.levels, np.float64)[idx[:, n]]
+        return idx[frac <= self.cap + CAPACITY_EPS]
+
+    @property
+    def J(self) -> int:
+        """Number of feasible joint states."""
+        return self.joint_states().shape[0]
+
+    def joint_levels(self) -> np.ndarray:
+        """[J] float32 TOTAL hosted fraction per joint state (n-ascending
+        float32 accumulation; at N=1 this is exactly the service's own
+        level vector) — the ``levels`` column of the joint grid, so rent
+        ``c_t * levels[j]`` prices the whole edge."""
+        idx = self.joint_states()
+        tot = np.zeros((idx.shape[0],), np.float32)
+        for n, cc in enumerate(self.services):
+            tot = tot + np.asarray(cc.levels, np.float32)[idx[:, n]]
+        return tot
+
+    def joint_g(self) -> np.ndarray:
+        """[J] float32 summed service-cost curve ``sum_n g_n(lv_n[j])`` —
+        the Model-1 price of a joint state under a COMMON arrival stream
+        (per-service arrivals need per-service slabs; see
+        ``services.joint_scenario``)."""
+        idx = self.joint_states()
+        g = np.zeros((idx.shape[0],), np.float32)
+        for n, cc in enumerate(self.services):
+            g = g + np.asarray(cc.g, np.float32)[idx[:, n]]
+        return g
+
+    def joint_fetch_matrix(self) -> np.ndarray:
+        """[J, J] float32 explicit fetch matrix: ``sum_n M_n *
+        (lv_n[j'] - lv_n[j])^+`` — per-service terms in ascending n, each
+        computed in float32 with exactly ``dp_fetch_matrix``'s op order, so
+        at N=1 the matrix is bitwise the rank-one matrix every
+        single-service DP driver builds on the fly."""
+        idx = self.joint_states()
+        fm = None
+        for n, cc in enumerate(self.services):
+            lvn = np.asarray(cc.levels, np.float32)[idx[:, n]]       # [J]
+            term = np.float32(cc.M) * np.maximum(
+                lvn[None, :] - lvn[:, None], np.float32(0.0))
+            fm = term if fm is None else fm + term
+        return fm
+
+    def joint_grid(self) -> "HostingGrid":
+        """This set's joint problem as a B=1 matrix-M ``HostingGrid`` (see
+        ``joint_hosting_grid`` for stacking several sets)."""
+        return joint_hosting_grid([self])
+
+
+def joint_hosting_grid(sets: Sequence[ServiceSet],
+                       J: Optional[int] = None) -> "HostingGrid":
+    """Stack B ``ServiceSet`` joint problems into one matrix-M
+    ``HostingGrid``, padding mixed state counts to a common J.
+
+    Padding repeats each set's LAST feasible state (levels/g) with
+    ``mask=False`` — the DP prices padded states ``+inf`` exactly as it
+    prices padded K levels, and their fetch rows/columns are zero (never
+    reached: a padded predecessor carries ``+inf`` value).  ``J=``
+    overrides the padded width for multi-host assembly, as in
+    ``HostingGrid.from_costs``.
+    """
+    if not sets:
+        raise ValueError("need at least one service set")
+    dt = default_float_dtype()
+    J_min = max(ss.J for ss in sets)
+    J = J_min if J is None else int(J)
+    if J < J_min:
+        raise ValueError(f"J={J} < max set J {J_min}")
+    B = len(sets)
+    M = np.zeros((B, J, J), np.float32)
+    lv = np.ones((B, J), np.float32)
+    g = np.zeros((B, J), np.float32)
+    mask = np.zeros((B, J), bool)
+    for i, ss in enumerate(sets):
+        Ji = ss.J
+        M[i, :Ji, :Ji] = ss.joint_fetch_matrix()
+        lv[i, :Ji] = ss.joint_levels()
+        lv[i, Ji:] = lv[i, Ji - 1]
+        g[i, :Ji] = ss.joint_g()
+        g[i, Ji:] = g[i, Ji - 1]
+        mask[i, :Ji] = True
+    return HostingGrid(M=jnp.asarray(M, dt), levels=jnp.asarray(lv, dt),
+                       g=jnp.asarray(g, dt), mask=jnp.asarray(mask))
 
 
 def per_slot_cost_matrix(costs: HostingCosts, x: jnp.ndarray, c: jnp.ndarray,

@@ -3,7 +3,9 @@
 This is the layer above ``simulator.run_policy_batch``: it runs a *fleet* —
 B independent hosting instances with possibly different horizons T_i — as
 one compiled program sharded over a 1-D device mesh, optionally streaming
-the time axis in fixed-size chunks.  Three orthogonal mechanisms, each a
+the time axis in fixed-size chunks.  (Engine-wide layer map:
+``docs/ARCHITECTURE.md``; the invariants new code must preserve:
+``docs/CONVENTIONS.md``.)  Three orthogonal mechanisms, each a
 bitwise no-op when unused:
 
 **[B] sharding** — the instance axis is embarrassingly parallel, so the

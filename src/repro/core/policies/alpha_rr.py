@@ -63,6 +63,12 @@ def alpha_rr_params(costs: HostingCosts) -> dict:
 
 def alpha_rr_grid_params(grid: HostingGrid) -> dict:
     """Stacked [B]-leading params for ``run_policy_batch``."""
+    if jnp.ndim(grid.M) > 1:
+        raise ValueError(
+            "online policies need a scalar per-instance fetch cost; joint "
+            "multi-service grids (matrix-valued M) are for the offline DP "
+            "and schedule evaluation only — run each service as its own "
+            "fleet lane instead (core.services.run_fleet_services)")
     return {
         "M": grid.M.astype(jnp.float32),
         "levels": grid.levels.astype(jnp.float32),

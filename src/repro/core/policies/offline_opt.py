@@ -54,8 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costs import (HostingCosts, HostingGrid, default_float_dtype,
-                              per_slot_cost_matrix)
+from repro.core.costs import (HostingCosts, HostingGrid, ServiceSet,
+                              default_float_dtype, per_slot_cost_matrix)
 
 
 def _eval(costs, r_hist, x, c, svc=None):
@@ -90,7 +90,19 @@ def dp_frontier0(K: int, dtype=jnp.float32):
 
 
 def dp_fetch_matrix(M32, lv32):
-    """``fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+``."""
+    """``fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+``.
+
+    A matrix-valued ``M32`` (per-instance ``[K, K]``, ``ndim >= 2``) is an
+    *explicit* fetch matrix and passes through untouched — the joint
+    multi-service grids of ``costs.ServiceSet`` (whose host-side
+    construction uses exactly this function's float32 op order per
+    service, so an N=1 joint matrix is bitwise the rank-one product
+    below).  Every DP driver builds its fetch matrix here, inside its
+    per-instance vmap, which is what threads matrix-M grids through the
+    materialized, checkpointed, streamed, scenario-fused and Pallas paths
+    with no driver changes."""
+    if jnp.ndim(M32) >= 2:
+        return M32
     return M32 * jnp.maximum(lv32[None, :] - lv32[:, None], 0.0)
 
 
@@ -170,12 +182,12 @@ def dp_backtrack(J_T, args):
 def _dp_core(M, lv, w):
     """Forward DP + reverse-scan backtrack for one instance.
 
-    Args: M scalar, lv [K], w [T, K] per-slot holding costs (+inf on padded
-    levels).  Returns (cost scalar, r_hist [T]).
+    Args: M scalar (or an explicit [K, K] fetch matrix — joint
+    multi-service states), lv [K], w [T, K] per-slot holding costs (+inf on
+    padded levels).  Returns (cost scalar, r_hist [T]).
     """
     K = lv.shape[-1]
-    # fetch_mat[k_prev, k_next] = M * (lv_next - lv_prev)^+
-    fetch_mat = M * jnp.maximum(lv[None, :] - lv[:, None], 0.0)
+    fetch_mat = dp_fetch_matrix(M, lv)
 
     def fwd(J_prev, w_t):
         # trans[k_prev, k_next] = J_prev[k_prev] + fetch
@@ -240,6 +252,106 @@ def offline_opt_no_partial(costs: HostingCosts, x, c, svc=None) -> OfflineResult
         svc = np.asarray(svc)
         svc2 = svc[:, [0, costs.K - 1]]
     return offline_opt(c2, x, c, svc2)
+
+
+# ----------------------------------------------------------------------
+# Joint multi-service OPT: the same DP on a ServiceSet's feasible joint
+# states (explicit fetch matrix, shared-capacity constraint baked into the
+# state enumeration — see costs.ServiceSet).
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JointOfflineResult:
+    """Joint capacity-respecting optimum of one ``ServiceSet``.
+
+    ``states`` are joint-state indices into ``sset.joint_states()``;
+    ``r_hist[n]`` is service n's per-slot level-index schedule (every slot
+    feasible by construction — infeasible combinations are never states).
+    """
+
+    cost: float
+    states: np.ndarray        # [T] joint-state indices
+    r_hist: np.ndarray        # [N, T] per-service level indices
+
+
+def _joint_slot_costs(sset: ServiceSet, xs, c, svcs):
+    """([T, J] float32 holding costs, [N, T] arrivals) for the joint DP.
+
+    Op order matches the single-service w assembly exactly (rent product
+    first, then one svc addition per service, n-ascending): at N=1 the
+    matrix is bitwise ``per_slot_cost_matrix``'s.
+    """
+    idx = sset.joint_states()
+    xs = np.asarray(xs)
+    if xs.ndim == 1:
+        xs = np.broadcast_to(xs[None], (sset.N,) + xs.shape)
+    if xs.shape[0] != sset.N:
+        raise ValueError(f"xs has {xs.shape[0]} arrival rows for "
+                         f"{sset.N} services")
+    c32 = np.asarray(c, np.float32)
+    w = c32[:, None] * sset.joint_levels()[None, :]            # [T, J]
+    for n, cc in enumerate(sset.services):
+        if svcs is not None and svcs[n] is not None:
+            svc_n = np.asarray(svcs[n], np.float32)
+        else:
+            svc_n = (xs[n][:, None].astype(np.float32)
+                     * np.asarray(cc.g, np.float32)[None, :])
+        w = w + svc_n[:, idx[:, n]]
+    return w, xs
+
+
+def offline_opt_joint(sset: ServiceSet, xs, c,
+                      svcs=None) -> JointOfflineResult:
+    """Exact joint OPT for N services sharing one edge: the standard DP
+    (``_dp_core`` — the same jitted core as ``offline_opt``) over the
+    feasible joint states, with the capacity constraint enforced by the
+    state enumeration and fetches priced by the explicit joint matrix.
+
+    Args:
+      xs: [T] (common arrivals) or [N, T] per-service arrival counts.
+      c: [T] rent costs (one edge, one rent stream).
+      svcs: optional list of per-service realized [T, K_n] service costs
+        (Model 2); ``None`` entries fall back to Model-1 ``g_n * x_n``.
+
+    At N=1 (unconstrained) this is bitwise ``offline_opt`` — same w, same
+    fetch matrix, same DP ops (tests/test_multi_service.py).
+    """
+    w, _ = _joint_slot_costs(sset, xs, c, svcs)
+    fm = jnp.asarray(sset.joint_fetch_matrix())
+    lv = jnp.asarray(sset.joint_levels())
+    cost, states = _dp_one(fm, lv, jnp.asarray(w))
+    states = np.asarray(states).astype(np.int64)
+    return JointOfflineResult(cost=float(cost), states=states,
+                              r_hist=sset.joint_states()[states].T
+                                         .astype(np.int64))
+
+
+def brute_force_joint_opt(sset: ServiceSet, xs, c,
+                          svcs=None) -> JointOfflineResult:
+    """Exhaustive joint oracle (tests only; tiny J**T): enumerates every
+    joint-state sequence, accumulating in float32 with the DP's exact
+    association ``(cost + fetch) + w`` per slot — so the minimum equals
+    ``offline_opt_joint``'s cost EXACTLY (float equality, no tolerance),
+    which is what the oracle suites assert."""
+    w, xs = _joint_slot_costs(sset, xs, c, svcs)
+    fm = sset.joint_fetch_matrix()
+    T = w.shape[0]
+    J = fm.shape[0]
+    best, best_seq = np.inf, None
+    for code in range(J ** T):
+        cost = np.float32(0.0)
+        prev = 0
+        seq = np.empty((T,), np.int64)
+        for t in range(T):
+            k = (code // (J ** t)) % J
+            cost = (cost + fm[prev, k]) + w[t, k]
+            prev = k
+            seq[t] = k
+        if cost < best:
+            best, best_seq = cost, seq
+    return JointOfflineResult(cost=float(best), states=best_seq,
+                              r_hist=sset.joint_states()[best_seq].T
+                                         .astype(np.int64))
 
 
 def brute_force_opt(costs: HostingCosts, x, c, svc=None) -> OfflineResult:

@@ -19,7 +19,7 @@ from repro.core.scenarios.base import (ObsSlab, PRNG_BACKENDS, Scenario,
 from repro.core.scenarios.combinators import (antithetic_pairing, combine,
                                               mixture, mixture_from_weights,
                                               regime_switch, replicate_seeds,
-                                              trace_scenario,
+                                              tile_services, trace_scenario,
                                               with_prng_backend, with_seed)
 from repro.core.scenarios.streams import (adversarial_evict_bait,
                                           adversarial_fetch_bait, arma_rents,
@@ -35,7 +35,7 @@ __all__ = [
     "materialize", "materialize_stream", "shared_keys", "slot_keys",
     "slot_uniform", "split_keys",
     "antithetic_pairing", "combine", "mixture", "mixture_from_weights",
-    "regime_switch", "replicate_seeds", "trace_scenario",
+    "regime_switch", "replicate_seeds", "tile_services", "trace_scenario",
     "with_prng_backend", "with_seed",
     "adversarial_evict_bait", "adversarial_fetch_bait", "arma_rents",
     "bernoulli_arrivals", "bursty_arrivals", "constant_rents", "ge_arrivals",

@@ -28,7 +28,9 @@ state, and is **invariant to the chunk decomposition**: materializing the
 whole horizon in one chunk, in 64-slot chunks, or generating slabs inside
 the fleet scan all produce bit-identical observations.  That is what makes
 ``run_fleet(scenario=...)`` == materialize-then-run exact rather than
-merely statistical (tests/test_scenarios.py).
+merely statistical (tests/test_scenarios.py).  The full set of key-folding
+and bit-identity rules lives in ``docs/CONVENTIONS.md``; the engine layer
+map in ``docs/ARCHITECTURE.md``.
 
 Channel conventions
 -------------------

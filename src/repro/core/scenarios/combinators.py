@@ -19,6 +19,11 @@ observation arrays.
                             scenario as one [B*S] scenario
                             (``antithetic=True`` pairs replicas (2m, 2m+1)
                             on flip-capable streams).
+* ``tile_services``       — the per-service axis: N service-replicas of a
+                            B-instance scenario as one [B*N] scenario,
+                            keys salted per service except in ``shared``
+                            channel groups (default: one rent stream per
+                            instance across its services).
 
 Composition happens at the *stream* level, so combinator outputs are
 ordinary streams: mixtures of regime-switched antithetic pairs are
@@ -285,6 +290,25 @@ def _map_key_leaves(params, leaf_fn, key_fn, pair_fn=None):
     return leaf_fn(params)
 
 
+def _fold_stacked(k, seeds):
+    """``fold_in`` over a stacked key leaf ``[R, ..., 2]`` with per-row
+    seeds ``[R]``.  Rows may carry extra stacked axes between the row axis
+    and the key words — e.g. the joint multi-service scenario's
+    ``[B, N, 2]`` sub-stream keys — and the row's seed broadcasts over
+    them.  For the ordinary ``[R, 2]`` leaf the reshape is a no-op and
+    this IS the plain ``vmap(fold_in)`` (bitwise)."""
+    k = jnp.asarray(k)
+    flat = k.reshape((-1,) + k.shape[-1:])
+    s = jnp.repeat(seeds, flat.shape[0] // seeds.shape[0])
+    return jax.vmap(jax.random.fold_in)(flat, s).reshape(k.shape)
+
+
+def _bcast_rows(flag, like):
+    """Right-pad a per-row ``[R]`` flag with singleton axes to broadcast
+    against a stacked ``[R, ...]`` leaf."""
+    return flag.reshape((-1,) + (1,) * (jnp.ndim(like) - 1))
+
+
 def with_seed(obj, seed: int):
     """Fold one Monte-Carlo seed into every stream key of a ``Scenario`` or
     ``Stream``: ``key -> fold_in(key, seed)``.
@@ -295,9 +319,10 @@ def with_seed(obj, seed: int):
     ``(b, seed)``.  Keyless streams (traces, constants, adversarial baits)
     are untouched: deterministic channels do not vary with the seed.
     """
-    fold = jax.vmap(lambda k: jax.random.fold_in(k, seed))
-    params = _map_key_leaves(obj.params, lambda a: a,
-                             lambda k: fold(jnp.asarray(k)))
+    def fold(k):
+        k = jnp.asarray(k)
+        return _fold_stacked(k, jnp.full((k.shape[0],), seed, jnp.int32))
+    params = _map_key_leaves(obj.params, lambda a: a, fold)
     return obj._replace(params=params, name=f"seed{seed}({obj.name})")
 
 
@@ -332,20 +357,61 @@ def replicate_seeds(obj, n_seeds: int, antithetic: bool = False):
     B = jax.tree_util.tree_leaves(obj.params)[0].shape[0]
     seeds = jnp.tile(jnp.arange(S, dtype=jnp.int32), B)       # [B*S]
     rep = lambda a: jnp.repeat(jnp.asarray(a), S, axis=0)
-    fold = jax.vmap(jax.random.fold_in)
     if not antithetic:
         params = _map_key_leaves(obj.params, rep,
-                                 lambda k: fold(rep(k), seeds))
+                                 lambda k: _fold_stacked(rep(k), seeds))
         return obj._replace(params=params, name=f"mc{S}({obj.name})")
     if S % 2:
         raise ValueError(f"antithetic replication needs an even n_seeds, "
                          f"got {n_seeds}")
     odd = (seeds % 2).astype(bool)
     params = _map_key_leaves(
-        obj.params, rep, lambda k: fold(rep(k), seeds),
-        pair_fn=lambda k, f: (fold(rep(k), seeds // 2),
-                              jnp.logical_xor(rep(f), odd)))
+        obj.params, rep, lambda k: _fold_stacked(rep(k), seeds),
+        pair_fn=lambda k, f: (_fold_stacked(rep(k), seeds // 2),
+                              jnp.logical_xor(rep(f),
+                                              _bcast_rows(odd, rep(f)))))
     return obj._replace(params=params, name=f"mc{S}a({obj.name})")
+
+
+def tile_services(obj, n_services: int, shared: Sequence[str] = ("rent",)):
+    """N service-replicas of a B-instance ``Scenario`` (or ``Stream``) as
+    one [B*N] object — the per-service arrival axis of a multi-service
+    fleet (``core.services``).
+
+    Row ``b * N + n`` (instance-major, service-minor) carries instance
+    ``b``'s params with ``fold_in(key, n)`` applied to every stream key —
+    the same counter-key salting discipline as ``replicate_seeds``, so
+    each service's stream is an independent draw yet fully deterministic
+    and chunk-invariant.  Non-key leaves are replicated row-wise.
+
+    ``shared`` names top-level param groups (the ``combine`` channel names
+    ``"arr"`` / ``"rent"`` / ``"svc"``) whose keys are replicated WITHOUT
+    the service fold: the default ``("rent",)`` gives all N services of an
+    instance the identical rent stream — one edge, one spot price — while
+    arrivals (and Model-2 service draws) vary per service.  Service n's
+    rows are bitwise the rows of a standalone scenario built with the same
+    folds, and ``n_services=1`` returns ``obj`` unchanged (the N=1
+    bit-identity anchor).  The service fold composes *before* the engine's
+    seed fold (``replicate_seeds`` runs inside ``run_fleet``), so MC rows
+    are ``fold_in(fold_in(key, n), s)`` — service-major, seed-minor.
+    """
+    N = int(n_services)
+    if N < 1:
+        raise ValueError(f"n_services must be >= 1, got {n_services}")
+    if N == 1:
+        return obj
+    B = jax.tree_util.tree_leaves(obj.params)[0].shape[0]
+    svc_ids = jnp.tile(jnp.arange(N, dtype=jnp.int32), B)      # [B*N]
+    rep = lambda a: jnp.repeat(jnp.asarray(a), N, axis=0)
+    folded = lambda p: _map_key_leaves(
+        p, rep, lambda k: _fold_stacked(rep(k), svc_ids))
+    plain = lambda p: _map_key_leaves(p, rep, rep)
+    if isinstance(obj.params, dict):
+        params = {k: (plain(v) if k in shared else folded(v))
+                  for k, v in obj.params.items()}
+    else:
+        params = folded(obj.params)
+    return obj._replace(params=params, name=f"svc{N}({obj.name})")
 
 
 def _trace_svc_chunk(params, state, tids, x):

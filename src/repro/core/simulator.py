@@ -50,7 +50,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +68,7 @@ class SimResult:
     service: float
     r_hist: np.ndarray        # [T] int level indices
     level_slots: np.ndarray   # [K] #slots spent at each level (the histograms)
+    route: float = 0.0        # routing-cost term (``route=`` runs only)
 
     @property
     def per_slot(self) -> float:
@@ -120,14 +120,33 @@ def _obs_arrays(costs: HostingCosts, x, c, svc, side):
 # entry points).
 # ----------------------------------------------------------------------
 
-def sim_acc0(K: int, dt) -> dict:
+def sim_acc0(K: int, dt, n_sums: int = 3) -> dict:
     """Zero accumulator for the in-carry reductions: [3] rent/service/fetch
-    sums plus the [K] level-occupancy histogram."""
-    return {"sums": jnp.zeros((3,), dt), "counts": jnp.zeros((K,), jnp.int32)}
+    sums (plus a 4th routing slot when the chunk runs with ``route=``) and
+    the [K] level-occupancy histogram."""
+    return {"sums": jnp.zeros((n_sums,), dt),
+            "counts": jnp.zeros((K,), jnp.int32)}
+
+
+def _fetch_between(M, K, r_from, r_to, lv_from, lv_to):
+    """Fetch cost of the transition ``r_from -> r_to``.
+
+    Scalar ``M`` is the paper's rank-one form ``M * (lv_to - lv_from)^+``;
+    a matrix ``M`` ([K, K] per instance, see ``HostingGrid``'s
+    "Matrix-valued M") prices the transition explicitly — the joint
+    multi-service grids of ``costs.ServiceSet``.  The branch is static
+    (ndim at trace time), so scalar-M programs are op-for-op what they
+    were before the matrix form existed."""
+    if jnp.ndim(M) >= 2:
+        sel = (jnp.arange(K) == r_from)[:, None] & \
+              (jnp.arange(K) == r_to)[None, :]
+        return jnp.sum(jnp.where(sel, M, 0.0))
+    return M * jnp.maximum(lv_to - lv_from, 0.0)
 
 
 def sim_chunk_core(step_fn, include_final_fetch: bool,
-                   params, lv, M, T_len, t0, carry, x, c, svc, side):
+                   params, lv, M, T_len, t0, carry, x, c, svc, side,
+                   route=None):
     """Scan slots ``[t0, t0 + chunk)`` of ONE instance, carrying
     ``(policy state, accumulator)`` across chunk boundaries.
 
@@ -146,6 +165,14 @@ def sim_chunk_core(step_fn, include_final_fetch: bool,
         zeroed here when ``include_final_fetch=False`` (per-instance, so
         mixed-T batches charge each instance at its own horizon).
 
+    ``route`` (optional) is a ``[chunk, K]`` per-level routing-cost slab
+    (2107.10446's request-routing term: what the slot's requests cost to
+    route given each hosting level); it accumulates as a 4th ``sums`` slot
+    selected by the SAME one-hot as the service channel.  ``route=None``
+    (the default everywhere in the fleet engine) leaves the scan inputs
+    and the [3] cost vector literally as they were — bitwise no-op.
+    Matrix-valued ``M`` prices fetches explicitly (``_fetch_between``).
+
     The running totals ride along in the scan carry — strictly sequential
     accumulation, so the vmapped batch reduces in exactly the same order as a
     single run, and a chunked run in exactly the same order as an unchunked
@@ -160,7 +187,10 @@ def sim_chunk_core(step_fn, include_final_fetch: bool,
 
     def step(carry, inp):
         state, acc = carry
-        t, x_t, c_t, svc_t, side_t = inp
+        if route is None:
+            t, x_t, c_t, svc_t, side_t = inp
+        else:
+            t, x_t, c_t, svc_t, side_t, route_t = inp
         valid_t = t < T_len
         last_t = t == T_len - 1
         r_t = state["r"]
@@ -175,10 +205,14 @@ def sim_chunk_core(step_fn, include_final_fetch: bool,
         new_state = freeze_invalid(valid_t, new_state, state)
         r_next = new_state["r"]
         lv_next = jnp.sum(jnp.where(jnp.arange(K) == r_next, lv, 0.0))
-        fetch_t = M * jnp.maximum(lv_next - lv_t, 0.0)
+        fetch_t = _fetch_between(M, K, r_t, r_next, lv_t, lv_next)
         if not include_final_fetch:
             fetch_t = jnp.where(last_t, 0.0, fetch_t)
-        vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
+        if route is None:
+            vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
+        else:
+            route_cost_t = jnp.sum(jnp.where(onehot_t, route_t, 0.0))
+            vec = jnp.stack([rent_t, svc_cost_t, fetch_t, route_cost_t])
         acc = {
             "sums": acc["sums"] + jnp.where(valid_t, vec, 0.0),
             "counts": acc["counts"]
@@ -186,7 +220,10 @@ def sim_chunk_core(step_fn, include_final_fetch: bool,
         }
         return (new_state, acc), r_t
 
-    return jax.lax.scan(step, carry, (tids, x, c, svc, side))
+    xs = (tids, x, c, svc, side)
+    if route is not None:
+        xs = xs + (route,)
+    return jax.lax.scan(step, carry, xs)
 
 
 def sim_chunk_lanes(step_fns, include_final_fetch: bool,
@@ -219,23 +256,29 @@ def sim_chunk_lanes(step_fns, include_final_fetch: bool,
 
 
 def _sim_core(init_fn, step_fn, include_final_fetch: bool,
-              params, lv, M, x, c, svc, side):
+              params, lv, M, x, c, svc, side, route=None):
     """One instance, whole horizon: the one-chunk case of ``sim_chunk_core``.
 
-    Returns (r_hist [T], sums [3] = rent/service/fetch, counts [K]).
+    Returns (r_hist [T], sums [3] = rent/service/fetch ([4] with a routing
+    slab), counts [K]).
     """
     K = lv.shape[-1]
     T = x.shape[-1]
-    carry0 = (init_fn(params), sim_acc0(K, lv.dtype))
+    carry0 = (init_fn(params),
+              sim_acc0(K, lv.dtype, 3 if route is None else 4))
     (_, acc), r_hist = sim_chunk_core(
         step_fn, include_final_fetch, params, lv, M,
         jnp.asarray(T, jnp.int32), jnp.asarray(0, jnp.int32), carry0,
-        x, c, svc, side)
+        x, c, svc, side, route)
     return r_hist, acc["sums"], acc["counts"]
 
 
 @functools.lru_cache(maxsize=64)
-def _compiled_core(init_fn, step_fn, include_final_fetch: bool, batched: bool):
+def _compiled_core(init_fn, step_fn, include_final_fetch: bool, batched: bool,
+                   has_route: bool = False):
+    # has_route only keys the cache: a route-carrying call re-traces with
+    # the extra operand, so it must not share a wrapper with routing-free
+    # callers (whose traced program stays exactly the pre-routing one)
     core = functools.partial(_sim_core, init_fn, step_fn, include_final_fetch)
     if batched:
         core = jax.vmap(core)
@@ -243,29 +286,38 @@ def _compiled_core(init_fn, step_fn, include_final_fetch: bool, batched: bool):
 
 
 def run_policy(policy: OnlinePolicy, costs: HostingCosts, x, c,
-               svc=None, side=None, include_final_fetch: bool = True) -> SimResult:
-    """Simulate an online policy over the whole horizon (one instance)."""
+               svc=None, side=None, include_final_fetch: bool = True,
+               route=None) -> SimResult:
+    """Simulate an online policy over the whole horizon (one instance).
+
+    ``route`` (optional [T, K]) adds the per-level routing-cost term to the
+    accounting (``SimResult.route``); omitted, the program is bitwise the
+    routing-free one."""
     x, c, svc, side = _obs_arrays(costs, x, c, svc, side)
     dt = default_float_dtype()
     lv = jnp.asarray(costs.levels, dt)
     M = jnp.asarray(costs.M, dt)
     fns = policy.fns()
+    args = () if route is None else (jnp.asarray(route, dt),)
     if fns.params is not None:
         core = _compiled_core(fns.init_fn, fns.step_fn, include_final_fetch,
-                              False)
+                              False, route is not None)
     else:
         # legacy policy subclass (bound init/step, no pure pair): fresh
         # closures can't key a compile cache — run the same core uncompiled.
         core = functools.partial(_sim_core, fns.init_fn, fns.step_fn,
                                  include_final_fetch)
-    r_hist, sums, counts = core(fns.params, lv, M, x, c, svc, side)
+    r_hist, sums, counts = core(fns.params, lv, M, x, c, svc, side, *args)
     r_np = np.asarray(r_hist)
-    rent_s, svc_s, fetch_s = (float(v) for v in np.asarray(sums))
+    sums = np.asarray(sums)
+    rent_s, svc_s, fetch_s = (float(v) for v in sums[:3])
+    route_s = float(sums[3]) if route is not None else 0.0
     return SimResult(
-        total=rent_s + svc_s + fetch_s,
+        total=rent_s + svc_s + fetch_s + route_s,
         fetch=fetch_s, rent=rent_s, service=svc_s,
         r_hist=r_np,
         level_slots=np.asarray(counts).astype(np.int64),
+        route=route_s,
     )
 
 
@@ -335,7 +387,7 @@ def run_policy_batch(policy: PolicyFns, grid: HostingGrid, x, c,
 # Schedule evaluation (offline schedules are arrays, not policies).
 # ----------------------------------------------------------------------
 
-def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc):
+def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc, route=None):
     """Chunk of schedule evaluation for ONE instance; ``carry`` is
     ``(prev level entering the chunk, accumulator)``.
 
@@ -343,7 +395,8 @@ def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc):
     ``sim_chunk_core``, for the same reasons: batched / single / chunked /
     unchunked evaluations must all reduce in the same order, and slots past
     an instance's own ``T_len`` must be bitwise no-ops (the held level is
-    frozen too, so a padded tail never charges a fetch).
+    frozen too, so a padded tail never charges a fetch).  ``route`` and
+    matrix-valued ``M`` behave exactly as in ``sim_chunk_core``.
     """
     K = lv.shape[-1]
     chunk = r.shape[-1]
@@ -351,15 +404,22 @@ def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc):
 
     def step(carry, inp):
         prev_t, acc = carry
-        t, r_t, c_t, svc_t = inp
+        if route is None:
+            t, r_t, c_t, svc_t = inp
+        else:
+            t, r_t, c_t, svc_t, route_t = inp
         valid_t = t < T_len
         onehot_t = jnp.arange(K) == r_t
         lv_t = jnp.sum(jnp.where(onehot_t, lv, 0.0))
         lv_prev = jnp.sum(jnp.where(jnp.arange(K) == prev_t, lv, 0.0))
-        fetch_t = M * jnp.maximum(lv_t - lv_prev, 0.0)
+        fetch_t = _fetch_between(M, K, prev_t, r_t, lv_prev, lv_t)
         rent_t = c_t * lv_t
         svc_cost_t = jnp.sum(jnp.where(onehot_t, svc_t, 0.0))
-        vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
+        if route is None:
+            vec = jnp.stack([rent_t, svc_cost_t, fetch_t])
+        else:
+            route_cost_t = jnp.sum(jnp.where(onehot_t, route_t, 0.0))
+            vec = jnp.stack([rent_t, svc_cost_t, fetch_t, route_cost_t])
         acc = {
             "sums": acc["sums"] + jnp.where(valid_t, vec, 0.0),
             "counts": acc["counts"]
@@ -368,16 +428,20 @@ def schedule_chunk_core(lv, M, T_len, t0, carry, r, c, svc):
         prev_next = jnp.where(valid_t, r_t, prev_t).astype(jnp.int32)
         return (prev_next, acc), None
 
-    return jax.lax.scan(step, carry, (tids, r, c, svc))
+    xs = (tids, r, c, svc)
+    if route is not None:
+        xs = xs + (route,)
+    return jax.lax.scan(step, carry, xs)
 
 
-def _schedule_core(lv, M, r, x, c, svc):
+def _schedule_core(lv, M, r, x, c, svc, route=None):
     K = lv.shape[-1]
     T = r.shape[-1]
-    carry0 = (jnp.asarray(0, jnp.int32), sim_acc0(K, lv.dtype))
+    carry0 = (jnp.asarray(0, jnp.int32),
+              sim_acc0(K, lv.dtype, 3 if route is None else 4))
     (_, acc), _ = schedule_chunk_core(
         lv, M, jnp.asarray(T, jnp.int32), jnp.asarray(0, jnp.int32), carry0,
-        r, c, svc)
+        r, c, svc, route)
     return acc["sums"], acc["counts"]
 
 
@@ -385,20 +449,27 @@ _schedule_one = jax.jit(_schedule_core)
 _schedule_vmapped = jax.jit(jax.vmap(_schedule_core))
 
 
-def evaluate_schedule(costs: HostingCosts, r_hist, x, c, svc=None) -> SimResult:
+def evaluate_schedule(costs: HostingCosts, r_hist, x, c, svc=None,
+                      route=None) -> SimResult:
     """Cost of an arbitrary hosting schedule ``r_hist`` ([T] level indices,
-    entered from r=0 before slot 1; fetches charged on entry to each slot)."""
+    entered from r=0 before slot 1; fetches charged on entry to each slot).
+    ``route`` (optional [T, K]) adds the routing-cost term."""
     x, c, svc, _ = _obs_arrays(costs, x, c, svc, None)
     dt = default_float_dtype()
     lv = jnp.asarray(costs.levels, dt)
     r = jnp.asarray(r_hist, jnp.int32)
-    sums, counts = _schedule_one(lv, jnp.asarray(costs.M, dt), r, x, c, svc)
-    rent_s, svc_s, fetch_s = (float(v) for v in np.asarray(sums))
+    args = () if route is None else (jnp.asarray(route, dt),)
+    sums, counts = _schedule_one(lv, jnp.asarray(costs.M, dt), r, x, c, svc,
+                                 *args)
+    sums = np.asarray(sums)
+    rent_s, svc_s, fetch_s = (float(v) for v in sums[:3])
+    route_s = float(sums[3]) if route is not None else 0.0
     return SimResult(
-        total=rent_s + svc_s + fetch_s,
+        total=rent_s + svc_s + fetch_s + route_s,
         fetch=fetch_s, rent=rent_s, service=svc_s,
         r_hist=np.asarray(r),
         level_slots=np.asarray(counts).astype(np.int64),
+        route=route_s,
     )
 
 

@@ -17,4 +17,9 @@ from the engine resolve ``interpret=None`` via ``utils.default_interpret``
 they measured (``backend`` / ``device_kind`` keys in ``benchmarks/run.py
 --json``).  On real TPU pass ``interpret=False`` (or rely on the default
 resolution) to get the compiled kernel.
+
+Backend-dispatch rules (pure XLA stays canonical; any alternative kernel
+must prove exact bit-identity before it can be selected) are documented in
+``docs/CONVENTIONS.md``; how the kernel rows are benchmarked and gated in
+``docs/BENCHMARKS.md``.
 """

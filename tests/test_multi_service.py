@@ -1,0 +1,587 @@
+"""Multi-service engine suite, per the PR-10 acceptance bar:
+
+* **N=1 bitwise identity** — every ``core.services`` entry point
+  (``run_fleet_services``, both ``offline_opt_fleet`` passes via
+  ``offline_opt_services`` / ``offline_opt_per_service``,
+  ``evaluate_schedule_services``, ``fleet_stepper_services``) collapses to
+  its single-service counterpart bit for bit (``np.array_equal``, never
+  allclose) across chunked / streamed / stepper drivers, ``n_seeds``
+  replication, and policy fan-out lanes.
+* **Joint DP == oracle** — the capacity-respecting joint DP (fixed cases +
+  a hypothesis walk over N x K x capacity configs) equals the brute-force
+  ``J**T`` enumeration with EXACT float equality (both accumulate float32
+  with the same association), and the fleet-engine path through the
+  matrix-M grid equals the standalone ``offline_opt_joint`` helper.
+* **Capacity boundaries** — level sums exactly AT capacity are feasible
+  (including float-noise sums like 1/3 + 2/3, absorbed by
+  ``CAPACITY_EPS``), just-over sums are excluded, and
+  ``capacity_overflow`` separates oblivious lanes from the joint OPT.
+* **Trace playback** — recorded per-service traces through the fused
+  engine equal the numpy-side joint helper on the same arrays.
+* **Forced 4 devices / 2 processes** — the same N=1 and joint-DP
+  equalities on a forced-4-device mesh (subprocess) and on a 2-process
+  local cluster (each worker's shard rows == the single-process global
+  run).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import scenarios as S
+from repro.core import services as SV
+from repro.core.costs import (CAPACITY_EPS, HostingCosts, HostingGrid,
+                              ServiceSet)
+from repro.core.fleet import (FleetBatch, evaluate_schedule_fleet,
+                              fleet_stepper, offline_opt_fleet, run_fleet)
+from repro.core.policies import AlphaRR, RetroRenting
+from repro.core.policies.offline_opt import (brute_force_joint_opt,
+                                             offline_opt_joint)
+from repro.core.scenarios.base import materialize
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+T = 48
+B = 3
+HORIZONS = [48, 40, 48]
+FIELDS = ["total", "rent", "service", "fetch"]
+
+COSTS = [HostingCosts.two_level(4.0),
+         HostingCosts.three_level(6.0, 0.3, 0.2),
+         HostingCosts(M=10.0, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                      g=(1.0, 0.4, 0.3, 0.15, 0.0))]
+
+
+def _scenario(grid, B_rows, seed=42):
+    return S.combine(
+        S.ge_arrivals(S.split_keys(jax.random.PRNGKey(seed), B_rows),
+                      0.3, 0.2, 2.0, 0.2, B_rows),
+        S.spot_rents(jax.random.PRNGKey(seed + 1), 0.5, B_rows),
+        svc=S.model2_service(jax.random.PRNGKey(seed + 2), grid.g, B_rows,
+                             max_per_slot=6))
+
+
+_ENV = {}
+
+
+def _env():
+    """Shared single-service reference + its N=1 ServiceFleet wrapping, and
+    an N=2 mixed-K capacity-constrained fleet (module memo, not a fixture —
+    the hypothesis shim erases signatures)."""
+    if _ENV:
+        return _ENV
+    grid = HostingGrid.from_costs(COSTS)
+    fleet = FleetBatch.for_scenario(grid, HORIZONS)
+    sf1 = SV.service_fleet([ServiceSet(services=(cc,)) for cc in COSTS],
+                           HORIZONS)
+    # N=2: per-instance pairs under a shared unit capacity
+    sets2 = [ServiceSet(services=(COSTS[0], COSTS[1]), capacity=1.0),
+             ServiceSet(services=(COSTS[1], COSTS[2]), capacity=1.0)]
+    sf2 = SV.service_fleet(sets2, 32)
+    _ENV.update(grid=grid, fleet=fleet, sc=_scenario(grid, B),
+                sf1=sf1, sf2=sf2,
+                sc2=_scenario(sf2.lane_grid(), sf2.B * sf2.N, seed=11))
+    return _ENV
+
+
+def _assert_fields_equal(got, ref, label=""):
+    for f in FIELDS:
+        assert np.array_equal(np.asarray(getattr(got, f)),
+                              np.asarray(getattr(ref, f))), (label, f)
+    assert np.array_equal(np.asarray(got.r_hist),
+                          np.asarray(ref.r_hist)), (label, "r_hist")
+
+
+# ----------------------------------------------------------------------
+# N=1 bitwise identity, per driver.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk,stream", [(None, False), (16, False),
+                                          (20, False), (16, True)])
+def test_n1_lane_identity(chunk, stream):
+    e = _env()
+    ref = run_fleet(AlphaRR.fleet(e["fleet"]), e["fleet"], scenario=e["sc"],
+                    chunk_size=chunk, stream=stream)
+    got = SV.run_fleet_services(SV.alpha_rr_per_service(e["sf1"]), e["sf1"],
+                                scenario=e["sc"], chunk_size=chunk,
+                                stream=stream)
+    _assert_fields_equal(got.fleet, ref, f"chunk={chunk} stream={stream}")
+    assert got.total.shape == (1, B, 1, 1)
+    assert np.array_equal(got.edge_total[0, :, 0],
+                          np.asarray(ref.total))
+
+
+def test_n1_lane_identity_n_seeds():
+    e = _env()
+    ref = run_fleet(AlphaRR.fleet(e["fleet"]), e["fleet"], scenario=e["sc"],
+                    chunk_size=16, n_seeds=2)
+    got = SV.run_fleet_services(SV.alpha_rr_per_service(e["sf1"]), e["sf1"],
+                                scenario=e["sc"], chunk_size=16, n_seeds=2)
+    _assert_fields_equal(got.fleet, ref, "n_seeds=2")
+    assert got.total.shape == (1, B, 1, 2)
+
+
+def test_n1_fanout_lanes_identity():
+    """Policy fan-out composes with the service axis: each lane of a
+    heterogeneous fan-out on the N=1 lane fleet equals its standalone
+    single-service dispatch."""
+    e = _env()
+    lf = e["sf1"].lane_fleet()
+    lanes = [AlphaRR.fleet_lane(lf), RetroRenting.fleet_lane(lf,
+                                                            with_svc=True)]
+    got = SV.run_fleet_services(lanes, e["sf1"], scenario=e["sc"],
+                                chunk_size=16)
+    egrid = e["grid"].restrict_to_endpoints()
+    efleet = FleetBatch.for_scenario(egrid, HORIZONS)
+    refs = [run_fleet(AlphaRR.fleet(e["fleet"]), e["fleet"],
+                      scenario=e["sc"], chunk_size=16),
+            run_fleet(RetroRenting.fleet(efleet), efleet,
+                      scenario=_scenario(egrid, B), chunk_size=16)]
+    for p, ref in enumerate(refs):
+        for f in FIELDS:
+            assert np.array_equal(
+                got.fleet.policy_view(getattr(got.fleet, f))[p],
+                np.asarray(getattr(ref, f))), (p, f)
+        assert np.array_equal(got.fleet.policy_view(got.fleet.r_hist)[p],
+                              np.asarray(ref.r_hist)), p
+    assert got.total.shape == (2, B, 1, 1)
+
+
+@pytest.mark.parametrize("checkpointed,stream,n_seeds",
+                         [(False, False, None), (True, False, None),
+                          (True, True, 2)])
+def test_n1_offline_opt_identity(checkpointed, stream, n_seeds):
+    e = _env()
+    kw = dict(scenario=e["sc"], chunk_size=16, checkpointed=checkpointed,
+              stream=stream, n_seeds=n_seeds)
+    ref = offline_opt_fleet(e["fleet"], **kw)
+    got = SV.offline_opt_services(e["sf1"], **kw)
+    assert np.array_equal(np.asarray(got.cost), np.asarray(ref.cost))
+    assert np.array_equal(got.service_schedules()[:, 0, :],
+                          np.asarray(ref.r_hist))
+    # per-service (capacity-oblivious) OPT is the same run at N=1
+    lane = SV.offline_opt_per_service(e["sf1"], **kw)
+    assert np.array_equal(np.asarray(lane.cost), np.asarray(ref.cost))
+
+
+def test_n1_schedule_eval_identity():
+    e = _env()
+    opt = offline_opt_fleet(e["fleet"], scenario=e["sc"], chunk_size=16)
+    r = np.asarray(opt.r_hist)
+    ref = evaluate_schedule_fleet(e["fleet"], r, scenario=e["sc"],
+                                  chunk_size=16)
+    # exercise the [B, N, T] entry shape
+    got = SV.evaluate_schedule_services(e["sf1"], r[:, None, :],
+                                        scenario=e["sc"], chunk_size=16)
+    _assert_fields_equal(got.fleet, ref, "schedule-eval")
+
+
+def test_n1_stepper_identity():
+    e = _env()
+    ref = SV.run_fleet_services(SV.alpha_rr_per_service(e["sf1"]), e["sf1"],
+                                scenario=e["sc"], chunk_size=16)
+    stp = SV.fleet_stepper_services(SV.alpha_rr_per_service(e["sf1"]),
+                                    e["sf1"], scenario=e["sc"],
+                                    chunk_size=16)
+    parts = []
+    while stp.t < T:
+        parts.append(stp.step())
+    _assert_fields_equal(stp.result(np.concatenate(parts, axis=1)),
+                         ref.fleet, "stepper")
+
+
+def test_n1_tile_services_is_identity():
+    e = _env()
+    assert SV.service_scenario(e["sf1"], e["sc"]) is e["sc"]
+    assert S.tile_services(e["sc"], 1) is e["sc"]
+
+
+# ----------------------------------------------------------------------
+# Joint DP vs brute-force oracle (exact float equality).
+# ----------------------------------------------------------------------
+
+def _oracle_case(sset, T_len, seed):
+    rng = np.random.default_rng(seed)
+    xs = rng.integers(0, 4, (sset.N, T_len))
+    c = (rng.integers(1, 16, T_len) / 8.0).astype(np.float32)
+    return xs, c
+
+
+@pytest.mark.parametrize("sset,T_len", [
+    # N=2 mixed-K under unit capacity
+    (ServiceSet((COSTS[0], COSTS[1]), capacity=1.0), 4),
+    # N=3 two-level services, capacity admits at most one hosted
+    (ServiceSet((HostingCosts.two_level(2.0),
+                 HostingCosts.two_level(3.0),
+                 HostingCosts.two_level(2.5)), capacity=1.0), 3),
+    # N=2 unconstrained (capacity None -> N): reduces to independent DPs
+    (ServiceSet((COSTS[1], COSTS[1])), 4),
+])
+def test_joint_dp_matches_oracle(sset, T_len):
+    xs, c = _oracle_case(sset, T_len, seed=5)
+    got = offline_opt_joint(sset, xs, c)
+    want = brute_force_joint_opt(sset, xs, c)
+    assert float(got.cost) == float(want.cost)          # EXACT, no tolerance
+    assert np.array_equal(got.r_hist, want.r_hist)
+    # every slot of the optimal schedule is feasible by construction
+    lv = [np.asarray(cc.levels, np.float64) for cc in sset.services]
+    tot = sum(lv[n][got.r_hist[n]] for n in range(sset.N))
+    assert np.all(tot <= sset.cap + CAPACITY_EPS)
+
+
+def test_joint_fleet_path_matches_helper():
+    """The fleet-engine path (matrix-M grid through ``offline_opt_fleet``)
+    equals the standalone joint helper and the oracle on the same
+    materialized observations, across DP driver configs."""
+    T2 = 5
+    ss = ServiceSet((HostingCosts.three_level(3.0, 0.5, 0.4),
+                     HostingCosts.two_level(2.5)), capacity=1.0)
+    sf = SV.service_fleet([ss], T2)
+    sc = _scenario(sf.lane_grid(), 2, seed=3)
+    res = SV.offline_opt_services(sf, scenario=sc)
+    ck = SV.offline_opt_services(sf, scenario=sc, checkpointed=True,
+                                 stream=True, chunk_size=2)
+    x, c, svc, _ = materialize(sc, T2, chunk_size=T2)
+    svcs = [svc[n][:, :ss.services[n].K] for n in range(2)]
+    ref = offline_opt_joint(ss, x[:2], c[0], svcs=svcs)
+    oracle = brute_force_joint_opt(ss, x[:2], c[0], svcs=svcs)
+    assert float(np.asarray(res.cost)[0]) == float(ref.cost) \
+        == float(oracle.cost)
+    assert np.array_equal(res.service_schedules()[0], ref.r_hist)
+    assert np.array_equal(np.asarray(ck.cost), np.asarray(res.cost))
+    assert np.array_equal(ck.joint.r_hist, res.joint.r_hist)
+    assert np.all(SV.capacity_overflow(sf, res.service_schedules()[0][None])
+                  == 0.0)
+
+
+@st.composite
+def joint_configs(draw):
+    N = draw(st.integers(1, 2))
+    Ks = [draw(st.sampled_from([2, 3])) for _ in range(N)]
+    cap = draw(st.sampled_from([None, 1.0, 0.75]))
+    services = []
+    for K in Ks:
+        M = draw(st.integers(2, 8))
+        if K == 2:
+            services.append(HostingCosts.two_level(float(M)))
+        else:
+            alpha = draw(st.sampled_from([0.25, 0.5, 0.75]))
+            g_a = draw(st.sampled_from([0.1, 0.4, 0.6]))
+            services.append(HostingCosts.three_level(float(M), alpha, g_a))
+    seed = draw(st.integers(0, 10 ** 6))
+    return services, cap, seed
+
+
+@settings(max_examples=8, deadline=None)
+@given(joint_configs())
+def test_joint_dp_oracle_walk(cfg):
+    services, cap, seed = cfg
+    try:
+        sset = ServiceSet(tuple(services), capacity=cap)
+    except ValueError:
+        assert cap is not None        # only the all-off-infeasible reject
+        return
+    xs, c = _oracle_case(sset, 3, seed)
+    got = offline_opt_joint(sset, xs, c)
+    want = brute_force_joint_opt(sset, xs, c)
+    assert float(got.cost) == float(want.cost), cfg
+    assert np.array_equal(got.r_hist, want.r_hist), cfg
+
+
+# ----------------------------------------------------------------------
+# Capacity boundaries.
+# ----------------------------------------------------------------------
+
+def test_capacity_boundary_exact_and_just_over():
+    svc3 = HostingCosts.three_level(2.0, 0.5, 0.4)
+    at = ServiceSet((svc3, svc3), capacity=1.0)
+    states = {tuple(s) for s in at.joint_states()}
+    assert (1, 1) in states            # 0.5 + 0.5 == capacity: feasible
+    assert (2, 1) not in states        # 1.0 + 0.5: over
+    just_under = ServiceSet((svc3, svc3), capacity=0.99)
+    assert (1, 1) not in {tuple(s) for s in just_under.joint_states()}
+    assert at.J == len(states) == 6    # (0,0)(0,1)(0,2)(1,0)(1,1)(2,0)
+
+
+def test_capacity_eps_absorbs_float_noise():
+    # 0.1 + 0.2 lands one ulp above 0.3 in float64; CAPACITY_EPS keeps the
+    # exactly-at-capacity combination feasible
+    assert 0.1 + 0.2 > 0.3
+    svcs = (HostingCosts.three_level(2.0, 0.1, 0.3),
+            HostingCosts.three_level(2.0, 0.2, 0.3))
+    states = {tuple(s) for s in
+              ServiceSet(svcs, capacity=0.3).joint_states()}
+    assert (1, 1) in states
+    assert (2, 0) not in states        # 1.0 really is over capacity
+
+
+def test_all_off_must_be_feasible():
+    with pytest.raises(ValueError):
+        ServiceSet((COSTS[0],), capacity=-1.0)
+
+
+def test_capacity_overflow_flags_oblivious_lanes():
+    """Independent lanes under heavy arrivals both host fully; the
+    diagnostic reports the excess while the joint OPT never exceeds."""
+    two = HostingCosts.two_level(2.0, c_min=0.05, c_max=0.1)
+    sf = SV.service_fleet([ServiceSet((two, two), capacity=1.0)], 24)
+    BN = 2
+    sc = S.combine(
+        S.bernoulli_arrivals(S.split_keys(jax.random.PRNGKey(0), BN),
+                             0.95, BN),
+        S.constant_rents(0.05, BN))
+    res = SV.run_fleet_services(SV.alpha_rr_per_service(sf), sf, scenario=sc)
+    r = res.service_view(res.fleet.r_hist)[0, :, :, 0]      # [B, N, T]
+    ov = SV.capacity_overflow(sf, r)
+    assert ov.max() > 0.0              # both lanes host 1.0 simultaneously
+    opt = SV.offline_opt_services(sf, scenario=sc)
+    assert np.all(SV.capacity_overflow(sf, opt.service_schedules()[0][None])
+                  == 0.0)
+    # relaxation bound: oblivious per-service OPT <= joint OPT
+    lane = SV.offline_opt_per_service(sf, scenario=sc)
+    assert np.asarray(lane.cost).sum() <= float(np.asarray(opt.cost)[0]) \
+        + 1e-6
+
+
+# ----------------------------------------------------------------------
+# Shared-rent tiling + trace playback.
+# ----------------------------------------------------------------------
+
+def test_tile_services_shared_rent():
+    e = _env()
+    tiled = S.tile_services(e["sc"], 2)
+    x, c, svc, _ = materialize(tiled, T, chunk_size=16)
+    for b in range(B):
+        # one edge, one spot price: both service rows carry the SAME rents
+        assert np.array_equal(c[2 * b], c[2 * b + 1]), b
+    # arrivals are salted per service: some instance must differ
+    assert any(not np.array_equal(x[2 * b], x[2 * b + 1]) for b in range(B))
+    # service row n is bitwise a standalone fold_in(key, n) scenario row
+    x1, c1, _, _ = materialize(e["sc"], T, chunk_size=16)
+    assert np.array_equal(c[0::2], c1)
+
+
+def test_trace_playback_multi_service():
+    rng = np.random.default_rng(9)
+    T2, N = 8, 2
+    ss = ServiceSet((COSTS[0], COSTS[1]), capacity=1.0)
+    sf = SV.service_fleet([ss], T2)
+    xs = rng.integers(0, 4, (N, T2))
+    c = (rng.integers(1, 16, T2) / 8.0).astype(np.float32)
+    sc = S.trace_scenario(xs.astype(np.int32),
+                          np.broadcast_to(c, (N, T2)).copy())
+    res = SV.offline_opt_services(sf, scenario=sc)
+    ref = offline_opt_joint(ss, xs, c)          # Model-1 g * x pricing
+    oracle = brute_force_joint_opt(ss, xs, c)
+    assert float(np.asarray(res.cost)[0]) == float(ref.cost) \
+        == float(oracle.cost)
+    assert np.array_equal(res.service_schedules()[0], ref.r_hist)
+    # the online lanes also play the traces back deterministically
+    on = SV.run_fleet_services(SV.alpha_rr_per_service(sf), sf, scenario=sc)
+    assert np.asarray(on.fleet.total).sum() \
+        >= float(np.asarray(res.cost)[0])       # OPT is a lower bound
+
+
+def test_alpha_rr_rejects_joint_grid():
+    e = _env()
+    with pytest.raises(ValueError, match="fleet lane"):
+        AlphaRR.fleet(e["sf2"].joint_fleet())
+
+
+def test_n2_lane_driver_invariance():
+    """N=2 lanes: chunked == streamed == stepper, and n_seeds rows are
+    bitwise standalone replicas (engine guarantees surviving the tiling)."""
+    e = _env()
+    pol = SV.alpha_rr_per_service(e["sf2"])
+    a = SV.run_fleet_services(pol, e["sf2"], scenario=e["sc2"],
+                              chunk_size=16)
+    b = SV.run_fleet_services(pol, e["sf2"], scenario=e["sc2"],
+                              chunk_size=12, stream=True)
+    _assert_fields_equal(b.fleet, a.fleet, "n2 chunk/stream")
+    stp = SV.fleet_stepper_services(pol, e["sf2"], scenario=e["sc2"],
+                                    chunk_size=16)
+    parts = []
+    while stp.t < 32:
+        parts.append(stp.step())
+    _assert_fields_equal(stp.result(np.concatenate(parts, axis=1)),
+                         a.fleet, "n2 stepper")
+
+
+# ----------------------------------------------------------------------
+# Forced 4 devices (subprocess) + 2-process local cluster.
+# ----------------------------------------------------------------------
+
+_MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import scenarios as S
+    from repro.core import services as SV
+    from repro.core.costs import HostingCosts, HostingGrid, ServiceSet
+    from repro.core.fleet import FleetBatch, offline_opt_fleet, run_fleet
+    from repro.core.policies import AlphaRR
+    from repro.sharding.specs import fleet_mesh
+
+    COSTS = [HostingCosts.two_level(4.0),
+             HostingCosts.three_level(6.0, 0.3, 0.2),
+             HostingCosts(M=10.0, levels=(0.0, 0.3, 0.4, 0.5, 1.0),
+                          g=(1.0, 0.4, 0.3, 0.15, 0.0))]
+
+    def scn(grid, Bn, seed=42):
+        return S.combine(
+            S.ge_arrivals(S.split_keys(jax.random.PRNGKey(seed), Bn),
+                          0.3, 0.2, 2.0, 0.2, Bn),
+            S.spot_rents(jax.random.PRNGKey(seed + 1), 0.5, Bn),
+            svc=S.model2_service(jax.random.PRNGKey(seed + 2), grid.g, Bn,
+                                 max_per_slot=6))
+
+    mesh = fleet_mesh()
+    # N=1 lane identity on the mesh (B=3 lanes: exercises padding to 4)
+    grid = HostingGrid.from_costs(COSTS)
+    fleet = FleetBatch.for_scenario(grid, [48, 40, 48])
+    sf1 = SV.service_fleet([ServiceSet((cc,)) for cc in COSTS],
+                           [48, 40, 48])
+    sc = scn(grid, 3)
+    ref = run_fleet(AlphaRR.fleet(fleet), fleet, scenario=sc, mesh=mesh,
+                    chunk_size=16, n_seeds=2)
+    got = SV.run_fleet_services(SV.alpha_rr_per_service(sf1), sf1,
+                                scenario=sc, mesh=mesh, chunk_size=16,
+                                n_seeds=2)
+    for f in ("total", "rent", "service", "fetch", "r_hist"):
+        assert np.array_equal(np.asarray(getattr(got.fleet, f)),
+                              np.asarray(getattr(ref, f))), f
+    oref = offline_opt_fleet(fleet, scenario=sc, mesh=mesh, chunk_size=16)
+    ogot = SV.offline_opt_services(sf1, scenario=sc, mesh=mesh,
+                                   chunk_size=16)
+    assert np.array_equal(np.asarray(ogot.cost), np.asarray(oref.cost))
+    assert np.array_equal(ogot.service_schedules()[:, 0, :],
+                          np.asarray(oref.r_hist))
+
+    # N=2 joint DP on the mesh == unsharded (B=2 joint instances pad to 4;
+    # the 4 lanes divide the mesh exactly)
+    sets2 = [ServiceSet((COSTS[0], COSTS[1]), capacity=1.0),
+             ServiceSet((COSTS[1], COSTS[2]), capacity=1.0)]
+    sf2 = SV.service_fleet(sets2, 32)
+    sc2 = scn(sf2.lane_grid(), 4, seed=11)
+    j_mesh = SV.offline_opt_services(sf2, scenario=sc2, mesh=mesh,
+                                     chunk_size=16)
+    j_ref = SV.offline_opt_services(sf2, scenario=sc2, chunk_size=16)
+    assert np.array_equal(np.asarray(j_mesh.cost), np.asarray(j_ref.cost))
+    assert np.array_equal(j_mesh.joint.r_hist, j_ref.joint.r_hist)
+    lanes_mesh = SV.run_fleet_services(SV.alpha_rr_per_service(sf2), sf2,
+                                       scenario=sc2, mesh=mesh,
+                                       chunk_size=16)
+    lanes_ref = SV.run_fleet_services(SV.alpha_rr_per_service(sf2), sf2,
+                                      scenario=sc2, chunk_size=16)
+    assert np.array_equal(np.asarray(lanes_mesh.fleet.total),
+                          np.asarray(lanes_ref.fleet.total))
+    assert np.array_equal(np.asarray(lanes_mesh.fleet.r_hist),
+                          np.asarray(lanes_ref.fleet.r_hist))
+    print("MULTI-SERVICE-MULTI-DEVICE-OK")
+""")
+
+
+def test_multi_service_multi_device_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(TESTS_DIR, "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MULTI-SERVICE-MULTI-DEVICE-OK" in out.stdout
+
+
+# One global-row-keyed builder, exec'd by BOTH the parent (reference) and
+# the cluster workers — the multihost convention: explicit per-lane keys
+# sliced from one global key set make any shard bitwise the same rows of
+# the global build.
+_MS_BUILDER = textwrap.dedent("""
+    import jax, numpy as np
+    from repro.core import scenarios as S
+    from repro.core import services as SV
+    from repro.core.costs import HostingCosts, ServiceSet
+
+    B_GLOBAL, N_SVC, T_MS = 4, 2, 32
+
+    def _svc_costs(i, n):
+        M = [2.0, 4.0, 6.0][(2 * i + n) % 3]
+        if (i + n) % 2:
+            return HostingCosts.two_level(M)
+        return HostingCosts.three_level(M, 0.25 + 0.125 * (i % 3), 0.3)
+
+    def build(lo, hi):
+        sets = [ServiceSet(tuple(_svc_costs(i, n) for n in range(N_SVC)),
+                           capacity=1.0) for i in range(lo, hi)]
+        sf = SV.service_fleet(sets, T_MS)
+        Bn = (hi - lo) * N_SVC
+        kx = S.split_keys(jax.random.PRNGKey(5),
+                          B_GLOBAL * N_SVC)[lo * N_SVC:hi * N_SVC]
+        kc = S.split_keys(jax.random.PRNGKey(6),
+                          B_GLOBAL * N_SVC)[lo * N_SVC:hi * N_SVC]
+        sc = S.combine(S.bernoulli_arrivals(kx, 0.35, Bn),
+                       S.spot_rents(kc, 0.5, Bn))
+        return sf, sc
+""")
+
+_CLUSTER_SCRIPT = textwrap.dedent("""
+    import os
+    from repro.sharding import distributed
+    distributed.initialize()
+""") + _MS_BUILDER + textwrap.dedent("""
+    import jax
+    from repro.sharding.specs import fleet_mesh
+
+    pid, nprocs = jax.process_index(), jax.process_count()
+    lo = pid * (B_GLOBAL // nprocs)
+    hi = lo + B_GLOBAL // nprocs
+    sf, sc = build(lo, hi)
+    mesh = fleet_mesh()
+    res = SV.run_fleet_services(SV.alpha_rr_per_service(sf), sf,
+                                scenario=sc, mesh=mesh, chunk_size=8)
+    opt = SV.offline_opt_services(sf, scenario=sc, mesh=mesh, chunk_size=8)
+    np.savez(os.path.join({outdir!r}, f"ms_{{pid}}.npz"),
+             total=np.asarray(res.fleet.total),
+             rhist=np.asarray(res.fleet.r_hist),
+             opt_cost=np.asarray(opt.cost),
+             opt_sched=opt.service_schedules(),
+             meta=np.asarray([pid, nprocs, lo, hi]))
+    distributed.shutdown()
+""")
+
+
+def test_multi_service_two_process_bit_identity(tmp_path):
+    from repro.sharding import distributed
+
+    n_procs = distributed.default_num_processes(2)
+    devices = int(os.environ.get("REPRO_MULTIHOST_DEVICES", "1"))
+    distributed.run_local_cluster(
+        ["-c", _CLUSTER_SCRIPT.format(outdir=str(tmp_path))],
+        n_processes=n_procs, devices_per_process=devices, timeout=900.0)
+
+    ns = {}
+    exec(_MS_BUILDER, ns)                       # the same builder, verbatim
+    sf, sc = ns["build"](0, ns["B_GLOBAL"])
+    ref = SV.run_fleet_services(SV.alpha_rr_per_service(sf), sf,
+                                scenario=sc, chunk_size=8)
+    opt = SV.offline_opt_services(sf, scenario=sc, chunk_size=8)
+    r_tot = np.asarray(ref.fleet.total)
+    r_rh = np.asarray(ref.fleet.r_hist)
+    r_oc = np.asarray(opt.cost)
+    r_os = opt.service_schedules()
+    N = ns["N_SVC"]
+    for pid in range(n_procs):
+        with np.load(tmp_path / f"ms_{pid}.npz") as z:
+            lo, hi = int(z["meta"][2]), int(z["meta"][3])
+            lane_sl = slice(lo * N, hi * N)
+            assert np.array_equal(z["total"], r_tot[lane_sl]), pid
+            assert np.array_equal(z["rhist"], r_rh[lane_sl]), pid
+            assert np.array_equal(z["opt_cost"], r_oc[lo:hi]), pid
+            assert np.array_equal(z["opt_sched"], r_os[lo:hi]), pid

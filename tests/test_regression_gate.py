@@ -226,6 +226,12 @@ def healthy_rows():
             "fanout_vs_separate": 1.5,
         },
         {
+            "name": "multi_service",
+            "identical_bits": True,
+            "slots_instances_per_sec": 1.0,
+            "joint_dp_seconds": 1.0,
+        },
+        {
             "name": "dp_minplus_kernel",
             "identical_bits": True,
             "xla_dp_slots_instances_per_sec": 1.0,
@@ -277,6 +283,7 @@ def test_cores_aware_bars_gate_only_with_spare_cores(name, key, bad):
         ("multihost_scaling", "identical_bits", False),
         ("policy_fanout", "identical_bits", False),
         ("policy_fanout", "fanout_vs_separate", 0.9),
+        ("multi_service", "identical_bits", False),
         ("offline_dp_streaming", "identical_bits", False),
     ],
 )
